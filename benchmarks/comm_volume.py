@@ -1,0 +1,75 @@
+"""Paper Fig. 6 analogue: per-iteration communication cost per algorithm.
+
+Fig. 6 measures wall-clock with 10/25 Gbps Ethernet between 8-GPU servers;
+here the hardware is a TPU pod, so we report the *analytic* per-node egress
+bytes + latency hops of each algorithm's communication pattern (volumes from
+``core.gossip.gossip_bytes_per_step``) and, where a dry-run artifact exists,
+the *measured* collective bytes parsed from the compiled HLO.
+
+Model sizes: ResNet-50 (25.5M, the paper's) + the assigned qwen3-0.6b /
+qwen3-8b.  Emits CSV rows: name, payload_mb, egress_mb, hops, est_ms_at_25gbps.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core import build_topology, gossip_bytes_per_step
+
+MODELS = {
+    "resnet50": 25.5e6,
+    "qwen3-0.6b": 0.6e9,
+    "qwen3-8b": 8.0e9,
+}
+N = 16
+BW = 25e9 / 8  # 25 Gbps in bytes/s (the paper's fabric)
+
+
+def run(csv: bool = True):
+    rows = []
+    for mname, params in MODELS.items():
+        payload = params * 4.0  # fp32 payload
+        # PmSGD: ring all-reduce of gradients
+        ar_bytes = 2 * (N - 1) / N * payload
+        rows.append((f"{mname}/pmsgd-allreduce", payload, ar_bytes, 2 * (N - 1)))
+        for topo_name in ("ring", "exp", "one-peer-exp"):
+            topo = build_topology(topo_name, N)
+            g = gossip_bytes_per_step(topo, payload)
+            rows.append(
+                (f"{mname}/decentlam-{topo_name}", payload, g["egress_bytes"], g["hops"])
+            )
+        g = gossip_bytes_per_step(
+            build_topology("one-peer-exp", N), payload, compression="int8"
+        )
+        rows.append((f"{mname}/decentlam-one-peer+int8", payload, g["egress_bytes"], g["hops"]))
+
+    if csv:
+        print("name,payload_mb,egress_mb,hops,est_ms_at_25gbps")
+        for name, payload, egress, hops in rows:
+            print(
+                f"comm/{name},{payload/2**20:.1f},{egress/2**20:.1f},{hops},"
+                f"{egress/BW*1e3:.1f}"
+            )
+
+    # measured collective bytes from dry-run artifacts, if present
+    pat = os.path.join("experiments", "dryrun", "*", "pod1", "*__train_4k.json")
+    arts = sorted(glob.glob(pat))
+    if arts and csv:
+        print("name,measured_collective_egress_mb,dominant")
+        for a in arts[:20]:
+            r = json.load(open(a))
+            if r.get("status") != "ok":
+                continue
+            tag = a.split(os.sep)[-3]
+            print(
+                f"comm-measured/{tag}/{r['arch']},"
+                f"{r['collectives']['egress_bytes']/2**20:.1f},"
+                f"{r['roofline']['dominant']}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Microbenchmarks for the Pallas-kernel hot spots (CPU timings of the jnp
+reference paths; the Pallas kernels themselves are TPU-target and validated
+in interpret mode).  Reported as name,us_per_call,derived-GB/s|GF/s.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decentlam_update.ops import decentlam_update
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.mlstm_chunk.ops import mlstm
+from repro.models.attention import attention_core
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(csv: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # fused decentlam update: memory-bound; derived metric = GB/s touched
+    n = 4_000_000
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    tree = ({"w": x}, {"w": x * 0.99}, {"w": jnp.zeros_like(x)})
+    f = jax.jit(
+        lambda a, b, c: decentlam_update(a, b, c, jnp.float32(0.01), beta=0.9,
+                                         impl="ref")
+    )
+    us = _time(f, *tree)
+    rows.append(("decentlam_update_ref_4M", us, f"{5*4*n/us/1e3:.1f}GB/s"))
+
+    # chunked attention (jnp flash-style): derived = GFLOP/s
+    B, S, H, hd = 1, 1024, 4, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    g = jax.jit(lambda q: attention_core(q, q, q, causal=True, q_block=256))
+    us = _time(g, q)
+    fl = 4 * B * H * S * S * hd / 2
+    rows.append(("attention_core_1k", us, f"{fl/us/1e3:.1f}GF/s"))
+
+    # chunked mlstm
+    q2 = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    v2 = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    gates = jnp.asarray(rng.standard_normal((1, 2, 512)), jnp.float32)
+    h = jax.jit(lambda a, b, c: mlstm(a, a, b, c, c + 2, chunk=128, impl="ref"))
+    us = _time(h, q2, v2, gates)
+    rows.append(("mlstm_chunk_512", us, ""))
+
+    if csv:
+        print("name,us_per_call,derived")
+        for name, us, d in rows:
+            print(f"kernel/{name},{us:.0f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

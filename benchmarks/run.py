@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Prints ``name,...`` CSV blocks per benchmark:
+
+==========================  ====================================
+bias_linear_regression      Figs. 2-3 (App. G.2)
+table2_bias_scaling         Table 2 (bias vs beta)
+batchsize_accuracy          Tables 1/3/4 proxy (batch-size sweep)
+topology_sweep              Table 5 (topology robustness)
+comm_volume                 Fig. 6 (communication cost model)
+kernel_microbench           kernel hot-spot timings
+==========================  ====================================
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (
+    batchsize_accuracy,
+    bias_linear_regression,
+    comm_volume,
+    kernel_microbench,
+    serving_microbench,
+    table2_bias_scaling,
+    topology_sweep,
+)
+
+BENCHES = {
+    "bias_linear_regression": bias_linear_regression.run,
+    "table2_bias_scaling": table2_bias_scaling.run,
+    "batchsize_accuracy": batchsize_accuracy.run,
+    "topology_sweep": topology_sweep.run,
+    "comm_volume": comm_volume.run,
+    "kernel_microbench": kernel_microbench.run,
+    "serving_microbench": serving_microbench.run,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None, help="run a single benchmark")
+    args = p.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        print(f"\n# ===== {name} =====")
+        t0 = time.time()
+        BENCHES[name]()
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

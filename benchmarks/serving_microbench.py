@@ -1,0 +1,72 @@
+"""Serving-path microbenchmark: prefill latency + decode tokens/s on a tiny
+LM (CPU wall-clock; shapes scaled so the *path* — cache build, rolling
+buffers, split-K merge — is exercised, not the hardware).
+
+Emits CSV rows: name, us_per_call, derived.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import tiny_lm
+from repro.models import transformer as T
+from repro.models.layers import TPContext
+
+TP1 = TPContext(size=1)
+
+
+def run(csv: bool = True):
+    cfg = tiny_lm(n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, d_ff=1024,
+                  vocab_size=8192)
+    rt = T.RuntimeConfig(dtype="float32", remat=False, decode_grouped_gqa=True)
+    params = T.init_params(jax.random.key(0), cfg, tp=1)
+    rng = np.random.default_rng(0)
+    B, PROMPT, GEN = 4, 256, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, PROMPT)), jnp.int32)
+
+    prefill = jax.jit(
+        lambda p, b: T.prefill(p, b, cfg, TP1, rt, target_len=PROMPT + GEN)
+    )
+    decode = jax.jit(
+        lambda p, t, c, tt: T.decode_step(
+            p, t, c, tt, cfg, TP1, rt, target_len=PROMPT + GEN
+        )
+    )
+
+    logits, cache = prefill(params, {"tokens": toks})
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": toks})
+    jax.block_until_ready(logits)
+    t_prefill = (time.perf_counter() - t0) * 1e6
+
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    # warm
+    _, cache2 = decode(params, tok, cache, jnp.int32(PROMPT))
+    jax.block_until_ready(_)
+    t0 = time.perf_counter()
+    c = cache
+    for t in range(PROMPT, PROMPT + GEN):
+        logits, c = decode(params, tok, c, jnp.int32(t))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(logits)
+    t_decode = (time.perf_counter() - t0) / GEN * 1e6
+
+    rows = [
+        ("serve/prefill_256x4", t_prefill, f"{B*PROMPT/t_prefill*1e6:.0f}tok/s"),
+        ("serve/decode_step", t_decode, f"{B/t_decode*1e6:.0f}tok/s"),
+    ]
+    if csv:
+        print("name,us_per_call,derived")
+        for name, us, d in rows:
+            print(f"{name},{us:.0f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""Reproduce the paper's Figs. 2-3 in seconds (App. G.2 linear regression).
+
+Run:  PYTHONPATH=src python examples/bias_demo.py
+"""
+
+import numpy as np
+
+from repro.core import build_topology, make_linear_regression, run_bias_experiment
+
+prob = make_linear_regression(n=8, m=50, d=30, noise=0.01, seed=0)
+topo = build_topology("torus", 8)
+print(f"8-node mesh topology, rho = {topo.rho():.3f}, b^2 = {prob.b_sq:.1f}\n")
+
+print(f"{'step':>6s}  {'DSGD':>10s}  {'DmSGD':>10s}  {'DecentLaM':>10s}")
+traces = {
+    a: run_bias_experiment(a, prob, topo, lr=1e-3, momentum=0.8,
+                           n_steps=3000, record_every=300)
+    for a in ("dsgd", "dmsgd", "decentlam")
+}
+for i in range(len(traces["dsgd"])):
+    print(f"{i*300:6d}  {traces['dsgd'][i]:10.3e}  {traces['dmsgd'][i]:10.3e}"
+          f"  {traces['decentlam'][i]:10.3e}")
+
+amp = traces["dmsgd"][-1] / traces["dsgd"][-1]
+print(f"\nDmSGD bias amplification: {amp:.1f}x "
+      f"(Prop. 2 predicts up to 1/(1-0.8)^2 = 25x)")
+print(f"DecentLaM / DSGD bias ratio: "
+      f"{traces['decentlam'][-1]/traces['dsgd'][-1]:.2f} (Prop. 3 predicts ~1)")

@@ -1,0 +1,31 @@
+"""End-to-end decentralized LM training driver (examples entry point).
+
+Thin wrapper over ``repro.launch.train``: 8 simulated decentralized nodes,
+DecentLaM on a one-peer exponential graph, periodic checkpoints, and a
+fail-stop drill (checkpoint -> shrink to 4 nodes -> elastic resume) half way
+through — the full fault-tolerance story in one run.
+
+Run:    PYTHONPATH=src python examples/train_lm.py
+Scale:  PYTHONPATH=src python -m repro.launch.train --preset 100m \
+            --simulate-nodes 8 --steps 300    # ~100M params (slow on CPU)
+"""
+
+import sys
+
+from repro.launch import train
+
+sys.argv = [
+    "train_lm",
+    "--simulate-nodes", "8",
+    "--preset", "tiny",
+    "--steps", "120",
+    "--algorithm", "decentlam",
+    "--topology", "exp",
+    "--seq-len", "128",
+    "--per-node-batch", "4",
+    "--ckpt-dir", "/tmp/decentlam_ckpt",
+    "--ckpt-every", "50",
+    "--failure-drill",
+    "--log-every", "20",
+]
+train.main()

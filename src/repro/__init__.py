@@ -1,0 +1,8 @@
+"""DecentLaM on TPU: a decentralized large-batch training framework in JAX.
+
+See README.md / DESIGN.md.  Subpackages: ``core`` (the paper's algorithms),
+``models`` (manual-TP model zoo), ``kernels`` (Pallas TPU kernels),
+``train`` (distributed runtime), ``data``, ``launch``, ``configs``.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,71 @@
+"""DecentLaM core: topologies, gossip executors, decentralized optimizers.
+
+The paper's contribution lives here.  See DESIGN.md §1-§5.
+"""
+
+from .compression import Compressor, get_compressor, wire_bytes
+from .gossip import (
+    gossip_bytes_per_step,
+    init_compression_state,
+    make_allgather_gossip,
+    make_ppermute_gossip,
+    make_psum_mean,
+    make_stacked_gossip,
+    make_stacked_mean,
+)
+from .optimizers import ALGORITHMS, Optimizer, OptimizerConfig, make_optimizer
+from .reference import (
+    LinearRegressionProblem,
+    bias_to_optimum,
+    consensus_distance,
+    make_linear_regression,
+    run_bias_experiment,
+    run_stacked,
+)
+from .schedules import (
+    ScheduleConfig,
+    build_schedule,
+    linear_scaled_lr,
+    warmup_cosine,
+    warmup_step_decay,
+)
+from .topology import (
+    TOPOLOGIES,
+    EdgeClass,
+    Topology,
+    build_topology,
+    metropolis_weights,
+    rho,
+)
+
+__all__ = [
+    "ALGORITHMS",
+    "Compressor",
+    "EdgeClass",
+    "LinearRegressionProblem",
+    "Optimizer",
+    "OptimizerConfig",
+    "ScheduleConfig",
+    "TOPOLOGIES",
+    "Topology",
+    "bias_to_optimum",
+    "build_schedule",
+    "build_topology",
+    "consensus_distance",
+    "get_compressor",
+    "gossip_bytes_per_step",
+    "init_compression_state",
+    "linear_scaled_lr",
+    "make_allgather_gossip",
+    "make_linear_regression",
+    "make_optimizer",
+    "make_ppermute_gossip",
+    "make_psum_mean",
+    "make_stacked_gossip",
+    "make_stacked_mean",
+    "metropolis_weights",
+    "rho",
+    "run_bias_experiment",
+    "run_stacked",
+    "wire_bytes",
+]

@@ -1,0 +1,325 @@
+"""Decentralized momentum optimizers (the paper's subject).
+
+Every algorithm is a pure ``(init, step)`` pair operating on parameter
+pytrees.  Communication is injected through two closures so the *same*
+optimizer code runs in both harnesses:
+
+* the stacked reference harness (leaves ``(n, ...)``; gossip = dense ``W @``,
+  mean = axis-0 mean) — used by tests / bias experiments, and
+* the distributed harness (leaves are per-node slices inside a fully-manual
+  ``shard_map``; gossip = ppermute edge classes, mean = psum).
+
+Closure signatures::
+
+    gossip(tree, step, comp_state) -> (tree, comp_state)   # partial averaging
+    mean(tree) -> tree                                     # exact global mean
+
+Implemented algorithms (paper Sec. 7 baselines + the contribution):
+
+===========  ================================================================
+pmsgd        parallel momentum SGD:  m <- b m + mean(g); x <- x - lr m
+pmsgd-lars   + layer-wise adaptive rate scaling [You et al. 2017]
+dsgd         ATC decentralized SGD (eq. 4-5):  x <- G(x - lr g)
+dmsgd        Alg. 1:  m <- b m + g; x <- G(x - lr m)
+da-dmsgd     [Yu et al. 2019]: m <- G(b m + g); x <- G(x - lr m)
+awc-dmsgd    [Balu et al. 2020]: m <- b m + g; x <- G(x) - lr m
+slowmo       [Wang et al. 2019]: inner DmSGD + periodic exact-average slow
+             momentum outer update
+qg-dmsgd     [Lin et al. 2021] heavy-ball quasi-global momentum
+d2-dmsgd     D^2 [Tang et al. 2018] in the [Yuan et al. 2020] form with
+             momentum on the local update
+decentlam    **Alg. 2 / eq. (17)**:
+             g~ = (x - G(x - lr g)) / lr;  m <- b m + g~;  x <- x - lr m
+===========  ================================================================
+
+The DecentLaM step sends exactly one gossip payload per iteration —
+``x - lr g`` — which every node can emit as soon as its local backward pass
+finishes (the paper's wait-free-backprop observation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+__all__ = ["OptimizerConfig", "Optimizer", "make_optimizer", "state_keys", "ALGORITHMS"]
+
+ALGORITHMS = (
+    "pmsgd",
+    "pmsgd-lars",
+    "dsgd",
+    "dmsgd",
+    "da-dmsgd",
+    "awc-dmsgd",
+    "slowmo",
+    "qg-dmsgd",
+    "d2-dmsgd",
+    "decentlam",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    algorithm: str = "decentlam"
+    momentum: float = 0.9
+    nesterov: bool = False  # applies to pmsgd / dmsgd / decentlam updates
+    weight_decay: float = 0.0
+    decoupled_wd: bool = False
+    grad_clip: float = 0.0  # 0 = off; global-norm clip of local grads
+    # LARS (pmsgd-lars, or lars=True to compose with any algorithm)
+    lars: bool = False
+    lars_trust: float = 0.001
+    lars_eps: float = 1e-9
+    # SlowMo
+    slowmo_period: int = 12
+    slowmo_momentum: float = 0.5
+    slowmo_lr: float = 1.0
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; one of {ALGORITHMS}"
+            )
+        assert 0.0 <= self.momentum < 1.0
+
+
+def state_keys(cfg: "OptimizerConfig") -> tuple[str, ...]:
+    """Names of the optimizer-state buckets (each mirrors the param tree)."""
+    keys: list[str] = []
+    if cfg.algorithm != "dsgd":
+        keys.append("m")
+    if cfg.algorithm == "slowmo":
+        keys += ["u", "anchor"]
+    if cfg.algorithm == "d2-dmsgd":
+        keys += ["x_prev", "m_prev"]
+    return tuple(keys)
+
+
+class Optimizer(NamedTuple):
+    config: OptimizerConfig
+    init: Callable[[Tree], Tree]
+    step: Callable[..., tuple[Tree, Tree]]
+    # step(params, grads, state, *, lr, step_idx, gossip, mean)
+    #   -> (params, state)
+    gossips_per_step: int  # payload sends per iteration (comm accounting)
+
+
+def _f32(tree: Tree) -> Tree:
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+def _zeros_like_f32(tree: Tree) -> Tree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _axpy(a, x: Tree, y: Tree) -> Tree:  # a*x + y
+    return jax.tree.map(lambda u, v: a * u + v, x, y)
+
+
+def _sub(x: Tree, y: Tree) -> Tree:
+    return jax.tree.map(jnp.subtract, x, y)
+
+
+def _scale(a, x: Tree) -> Tree:
+    return jax.tree.map(lambda u: a * u, x)
+
+
+def _global_norm(tree: Tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(tree: Tree, max_norm: float) -> Tree:
+    norm = _global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return _scale(scale, tree)
+
+
+def _leaf_norms(tree: Tree) -> Tree:
+    return jax.tree.map(
+        lambda x: jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)))), tree
+    )
+
+
+def _lars_scaled(cfg: OptimizerConfig, params: Tree, grads: Tree) -> Tree:
+    """Per-leaf trust ratio (layer-wise adaptive rate scaling)."""
+    pn = _leaf_norms(params)
+    gn = _leaf_norms(grads)
+
+    def ratio(p_norm, g_norm, g):
+        denom = g_norm + cfg.weight_decay * p_norm + cfg.lars_eps
+        r = jnp.where(
+            (p_norm > 0.0) & (g_norm > 0.0),
+            cfg.lars_trust * p_norm / denom,
+            1.0,
+        )
+        return r * g
+
+    return jax.tree.map(ratio, pn, gn, grads)
+
+
+def _preprocess_grads(cfg: OptimizerConfig, params: Tree, grads: Tree) -> Tree:
+    g = _f32(grads)
+    if cfg.grad_clip > 0.0:
+        g = _clip_by_global_norm(g, cfg.grad_clip)
+    if cfg.weight_decay > 0.0 and not cfg.decoupled_wd:
+        g = _axpy(cfg.weight_decay, _f32(params), g)
+    if cfg.lars or cfg.algorithm == "pmsgd-lars":
+        g = _lars_scaled(cfg, params, g)
+    return g
+
+
+def _apply_decoupled_wd(cfg: OptimizerConfig, lr, params: Tree) -> Tree:
+    if cfg.weight_decay > 0.0 and cfg.decoupled_wd:
+        return jax.tree.map(lambda p: p - lr * cfg.weight_decay * p, params)
+    return params
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    b = cfg.momentum
+    algo = cfg.algorithm
+    no_comp = ()
+
+    # ---------------- state ----------------
+    def init(params: Tree) -> Tree:
+        st: dict[str, Tree] = {}
+        if algo not in ("dsgd",):
+            st["m"] = _zeros_like_f32(params)
+        if algo == "slowmo":
+            st["u"] = _zeros_like_f32(params)
+            st["anchor"] = _f32(params)
+        if algo == "d2-dmsgd":
+            st["x_prev"] = _f32(params)
+            st["m_prev"] = _zeros_like_f32(params)
+        return st
+
+    # ---------------- step ----------------
+    def step(params, grads, state, *, lr, step_idx, gossip, mean, comp_state=no_comp):
+        x = _f32(params)
+        g = _preprocess_grads(cfg, x, grads)
+        lr = jnp.asarray(lr, jnp.float32)
+        safe_lr = jnp.maximum(lr, 1e-12)
+        new_state = dict(state)
+
+        def _momentum_step(x, direction, m_prev):
+            """m <- b m + d;  x <- x - lr*(b m + d) [nesterov] or x - lr*m."""
+            m = _axpy(b, m_prev, direction)
+            upd = _axpy(b, m, direction) if cfg.nesterov else m
+            return _sub(x, _scale(lr, upd)), m
+
+        if algo in ("pmsgd", "pmsgd-lars"):
+            gbar = mean(g)
+            x, m = _momentum_step(x, gbar, state["m"])
+            new_state["m"] = m
+
+        elif algo == "dsgd":
+            x, comp_state = gossip(_sub(x, _scale(lr, g)), step_idx, comp_state)
+
+        elif algo == "dmsgd":
+            m = _axpy(b, state["m"], g)
+            upd = _axpy(b, m, g) if cfg.nesterov else m
+            x, comp_state = gossip(_sub(x, _scale(lr, upd)), step_idx, comp_state)
+            new_state["m"] = m
+
+        elif algo == "da-dmsgd":
+            m, comp_state = gossip(
+                _axpy(b, state["m"], g), step_idx, comp_state
+            )
+            x, comp_state = gossip(_sub(x, _scale(lr, m)), step_idx, comp_state)
+            new_state["m"] = m
+
+        elif algo == "awc-dmsgd":
+            m = _axpy(b, state["m"], g)
+            gx, comp_state = gossip(x, step_idx, comp_state)
+            x = _sub(gx, _scale(lr, m))
+            new_state["m"] = m
+
+        elif algo == "qg-dmsgd":
+            # heavy-ball quasi-global momentum [Lin et al. 2021]
+            d = _axpy(b, state["m"], g)
+            x_new, comp_state = gossip(_sub(x, _scale(lr, d)), step_idx, comp_state)
+            m = jax.tree.map(
+                lambda mm, xo, xn: b * mm + (1.0 - b) * (xo - xn) / safe_lr,
+                state["m"],
+                x,
+                x_new,
+            )
+            x = x_new
+            new_state["m"] = m
+
+        elif algo == "d2-dmsgd":
+            m = _axpy(b, state["m"], g)
+            z = jax.tree.map(
+                lambda xx, xp, mm, mp: 2.0 * xx - xp - lr * (mm - mp),
+                x,
+                state["x_prev"],
+                m,
+                state["m_prev"],
+            )
+            x_new, comp_state = gossip(z, step_idx, comp_state)
+            new_state.update(m=m, x_prev=x, m_prev=m)
+            x = x_new
+
+        elif algo == "slowmo":
+            # inner DmSGD
+            m = _axpy(b, state["m"], g)
+            x, comp_state = gossip(_sub(x, _scale(lr, m)), step_idx, comp_state)
+            new_state["m"] = m
+
+            def sync(args):
+                x, u, anchor = args
+                xbar = mean(x)
+                u = jax.tree.map(
+                    lambda uu, a, xb: cfg.slowmo_momentum * uu + (a - xb) / safe_lr,
+                    u,
+                    anchor,
+                    xbar,
+                )
+                x = jax.tree.map(
+                    lambda a, uu: a - cfg.slowmo_lr * lr * uu, anchor, u
+                )
+                return x, u, x
+
+            def no_sync(args):
+                return args
+
+            do_sync = (step_idx + 1) % cfg.slowmo_period == 0
+            x, u, anchor = jax.lax.cond(
+                do_sync, sync, no_sync, (x, state["u"], state["anchor"])
+            )
+            new_state["u"] = u
+            new_state["anchor"] = anchor
+
+        elif algo == "decentlam":
+            # Alg. 2 / eq. (17): one payload, sendable right after backward.
+            payload = _sub(x, _scale(lr, g))
+            mixed, comp_state = gossip(payload, step_idx, comp_state)
+            g_tilde = jax.tree.map(lambda xx, mx: (xx - mx) / safe_lr, x, mixed)
+            x, m = _momentum_step(x, g_tilde, state["m"])
+            new_state["m"] = m
+
+        else:  # pragma: no cover
+            raise AssertionError(algo)
+
+        x = _apply_decoupled_wd(cfg, lr, x)
+        out = jax.tree.map(lambda p, nx: nx.astype(p.dtype), params, x)
+        return out, new_state, comp_state
+
+    gossips = {
+        "pmsgd": 0,
+        "pmsgd-lars": 0,
+        "dsgd": 1,
+        "dmsgd": 1,
+        "da-dmsgd": 2,
+        "awc-dmsgd": 1,
+        "slowmo": 1,
+        "qg-dmsgd": 1,
+        "d2-dmsgd": 1,
+        "decentlam": 1,
+    }[algo]
+    return Optimizer(config=cfg, init=init, step=step, gossips_per_step=gossips)

@@ -1,0 +1,100 @@
+"""Learning-rate schedules used by the paper's training protocols.
+
+Paper Sec. 7: small-batch (<=8k) uses 5-epoch linear warmup + step decay
+(/10 at 30/60/80 of 90 epochs); large-batch (>8k) uses 20-epoch warmup +
+cosine annealing; the base lr follows the linear scaling rule
+[Goyal et al. 2017].  All schedules are pure ``step -> lr`` functions of a
+traced int32 so they jit cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "linear_scaled_lr",
+    "warmup_cosine",
+    "warmup_step_decay",
+    "constant",
+    "build_schedule",
+]
+
+
+def linear_scaled_lr(base_lr: float, batch_size: int, base_batch: int = 256) -> float:
+    """Linear scaling rule: lr = base_lr * batch / base_batch."""
+    return base_lr * batch_size / base_batch
+
+
+def constant(lr: float) -> Schedule:
+    def f(step):
+        return jnp.full((), lr, jnp.float32)
+
+    return f
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.0) -> Schedule:
+    assert total_steps > warmup_steps >= 0
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+        t = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(math.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos).astype(jnp.float32)
+
+    return f
+
+
+def warmup_step_decay(
+    peak_lr: float,
+    warmup_steps: int,
+    boundaries: Sequence[int],
+    factor: float = 0.1,
+) -> Schedule:
+    bounds = jnp.asarray(sorted(boundaries), jnp.int32)
+
+    def f(step):
+        step_f = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step_f + 1.0) / max(warmup_steps, 1)
+        n_decays = jnp.sum(jnp.asarray(step, jnp.int32) >= bounds)
+        decayed = peak_lr * (factor ** n_decays.astype(jnp.float32))
+        return jnp.where(step_f < warmup_steps, warm, decayed).astype(jnp.float32)
+
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "warmup_cosine"  # constant | warmup_cosine | warmup_step
+    peak_lr: float = 1e-3
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    boundaries: tuple[int, ...] = ()
+    decay_factor: float = 0.1
+    final_frac: float = 0.0
+
+
+def build_schedule(cfg: ScheduleConfig) -> Schedule:
+    if cfg.kind == "constant":
+        return constant(cfg.peak_lr)
+    if cfg.kind == "warmup_cosine":
+        return warmup_cosine(
+            cfg.peak_lr, cfg.warmup_steps, cfg.total_steps, cfg.final_frac
+        )
+    if cfg.kind == "warmup_step":
+        bounds = cfg.boundaries or (
+            int(0.33 * cfg.total_steps),
+            int(0.66 * cfg.total_steps),
+            int(0.89 * cfg.total_steps),
+        )
+        return warmup_step_decay(cfg.peak_lr, cfg.warmup_steps, bounds, cfg.decay_factor)
+    raise ValueError(f"unknown schedule {cfg.kind!r}")

@@ -1,0 +1,374 @@
+"""Network topologies and gossip weight matrices for decentralized training.
+
+Implements the graphs used in the paper (Sec. 7 / App. G.3): ring, 2-D torus
+("mesh"), symmetric exponential, one-peer exponential, bipartite random match,
+plus fully-connected (reduces decentralized methods to their parallel
+counterparts).  Weight matrices follow the Metropolis–Hastings rule
+[Sayed 2014, Table 14.1] so that W is symmetric, doubly stochastic and
+satisfies Assumption A.3 of the paper.
+
+Two representations are kept in sync:
+
+* ``W(step)`` — the dense ``(n, n)`` matrix, used by the stacked reference
+  implementations, by the spectral-gap analysis (``rho``) and by tests.
+* ``edge_classes(step)`` — a decomposition of the off-diagonal support of W
+  into *permutations* of the node set.  Each edge class is executed on TPU as
+  one ``jax.lax.ppermute`` (collective-permute) for the whole parameter
+  pytree; the per-receiving-node weights are an ``(n,)`` vector so irregular
+  (e.g. fault-degraded) graphs are expressible too.
+
+Fault tolerance: ``Topology.exclude(dead)`` returns a topology on the
+surviving nodes' *original indices* where dead nodes receive/contribute zero
+weight and survivors are re-weighted (Metropolis on the induced subgraph), so
+training can route around fail-stopped nodes without renumbering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "EdgeClass",
+    "Topology",
+    "build_topology",
+    "metropolis_weights",
+    "rho",
+    "TOPOLOGIES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeClass:
+    """One permutation's worth of gossip communication.
+
+    ``perm[src] = dst`` describes where each node's payload is sent;
+    ``recv_weight[i]`` is the weight w_{i, perm^{-1}(i)} the *receiving* node i
+    applies to the payload it gets.  Nodes that receive nothing (perm misses
+    them) must have ``recv_weight == 0`` there.
+    """
+
+    perm: tuple[int, ...]
+    recv_weight: np.ndarray  # (n,) float64
+
+    @property
+    def pairs(self) -> list[tuple[int, int]]:
+        return [(s, d) for s, d in enumerate(self.perm) if d >= 0]
+
+    def validate(self, n: int) -> None:
+        dsts = [d for d in self.perm if d >= 0]
+        assert len(set(dsts)) == len(dsts), "edge class is not a partial permutation"
+        assert len(self.perm) == n
+        assert self.recv_weight.shape == (n,)
+        receivers = set(dsts)
+        for i in range(n):
+            if i not in receivers:
+                assert self.recv_weight[i] == 0.0, (
+                    f"node {i} receives nothing but has weight {self.recv_weight[i]}"
+                )
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights for a symmetric 0/1 adjacency (no self loops).
+
+    w_ij = 1 / (1 + max(deg_i, deg_j)) for edges, w_ii = 1 - sum_j w_ij.
+    The result is symmetric and doubly stochastic (Assumption A.3).
+    """
+    adj = np.asarray(adj)
+    assert adj.shape[0] == adj.shape[1]
+    assert (adj == adj.T).all(), "adjacency must be symmetric"
+    assert (np.diag(adj) == 0).all(), "no self loops in adjacency"
+    n = adj.shape[0]
+    deg = adj.sum(axis=1)
+    W = np.zeros((n, n), dtype=np.float64)
+    rows, cols = np.nonzero(adj)
+    for i, j in zip(rows, cols):
+        W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    W[np.diag_indices(n)] = 1.0 - W.sum(axis=1)
+    return W
+
+
+def rho(W: np.ndarray) -> float:
+    """Spectral gap parameter: max(|lambda_2|, |lambda_n|) of W.
+
+    Characterizes connectivity; rho in (0, 1) for connected graphs
+    (paper eq. (28)).  rho -> 0 means well connected.
+    """
+    n = W.shape[0]
+    M = W - np.ones((n, n)) / n
+    return float(np.max(np.abs(np.linalg.eigvalsh((M + M.T) / 2.0))))
+
+
+def _offsets_to_adj(n: int, offsets: Sequence[int]) -> np.ndarray:
+    adj = np.zeros((n, n), dtype=np.int64)
+    for off in offsets:
+        for i in range(n):
+            j = (i + off) % n
+            if i != j:
+                adj[i, j] = 1
+                adj[j, i] = 1
+    return adj
+
+
+def _classes_from_W(W: np.ndarray) -> list[EdgeClass]:
+    """Greedy decomposition of W's off-diagonal support into partial permutations.
+
+    Exact for every topology here (all are unions of matchings / circulant
+    shifts) and correct in general: repeatedly peel a partial permutation off
+    the remaining support.
+    """
+    n = W.shape[0]
+    remaining = [
+        (i, j) for i in range(n) for j in range(n) if i != j and W[i, j] != 0.0
+    ]
+    classes: list[EdgeClass] = []
+    while remaining:
+        used_src: set[int] = set()
+        used_dst: set[int] = set()
+        perm = [-1] * n
+        weight = np.zeros(n, dtype=np.float64)
+        rest: list[tuple[int, int]] = []
+        for (i, j) in remaining:
+            # payload flows j -> i (receiver i applies W[i, j])
+            if j not in used_src and i not in used_dst:
+                used_src.add(j)
+                used_dst.add(i)
+                perm[j] = i
+                weight[i] = W[i, j]
+            else:
+                rest.append((i, j))
+        classes.append(EdgeClass(perm=tuple(perm), recv_weight=weight))
+        remaining = rest
+    return classes
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A (possibly time-varying) gossip topology over ``n`` nodes.
+
+    ``period`` is the number of distinct weight matrices it cycles through;
+    static topologies have ``period == 1``.
+    """
+
+    name: str
+    n: int
+    _W_cycle: tuple[np.ndarray, ...]
+    _classes_cycle: tuple[tuple[EdgeClass, ...], ...]
+
+    @property
+    def period(self) -> int:
+        return len(self._W_cycle)
+
+    def W(self, step: int = 0) -> np.ndarray:
+        return self._W_cycle[step % self.period]
+
+    def self_weight(self, step: int = 0) -> np.ndarray:
+        return np.diag(self.W(step)).copy()
+
+    def edge_classes(self, step: int = 0) -> tuple[EdgeClass, ...]:
+        return self._classes_cycle[step % self.period]
+
+    def max_degree(self) -> int:
+        return max(
+            int((np.abs(W) > 0).sum(axis=1).max()) - 1 for W in self._W_cycle
+        )
+
+    def rho(self) -> float:
+        """Spectral gap of the *average* mixing matrix over one period."""
+        Wbar = sum(self._W_cycle) / self.period
+        return rho(Wbar)
+
+    def validate(self) -> None:
+        for W, classes in zip(self._W_cycle, self._classes_cycle):
+            n = self.n
+            assert W.shape == (n, n)
+            np.testing.assert_allclose(W, W.T, atol=1e-12, err_msg="W not symmetric")
+            np.testing.assert_allclose(
+                W.sum(axis=1), np.ones(n), atol=1e-12, err_msg="W not stochastic"
+            )
+            # edge classes reconstruct W exactly
+            R = np.diag(np.diag(W)).astype(np.float64)
+            for c in classes:
+                c.validate(n)
+                for src, dst in c.pairs:
+                    if c.recv_weight[dst] != 0.0:
+                        R[dst, src] += c.recv_weight[dst]
+            np.testing.assert_allclose(R, W, atol=1e-12, err_msg="classes != W")
+
+    def exclude(self, dead: Sequence[int]) -> "Topology":
+        """Route around fail-stopped nodes.
+
+        Dead nodes keep weight 1 on themselves (their state is frozen and
+        ignored); survivors get Metropolis weights on the induced subgraph, so
+        W restricted to survivors remains symmetric doubly stochastic.
+        """
+        dead_set = set(int(d) for d in dead)
+        assert all(0 <= d < self.n for d in dead_set)
+        new_W = []
+        for W in self._W_cycle:
+            adj = (np.abs(W - np.diag(np.diag(W))) > 0).astype(np.int64)
+            for d in dead_set:
+                adj[d, :] = 0
+                adj[:, d] = 0
+            Wn = metropolis_weights(adj)
+            new_W.append(Wn)
+        classes = tuple(tuple(_classes_from_W(W)) for W in new_W)
+        return Topology(
+            name=f"{self.name}-exclude{sorted(dead_set)}",
+            n=self.n,
+            _W_cycle=tuple(new_W),
+            _classes_cycle=classes,
+        )
+
+
+def _static(name: str, W: np.ndarray) -> Topology:
+    t = Topology(
+        name=name,
+        n=W.shape[0],
+        _W_cycle=(W,),
+        _classes_cycle=(tuple(_classes_from_W(W)),),
+    )
+    t.validate()
+    return t
+
+
+def _cycle(name: str, Ws: Sequence[np.ndarray]) -> Topology:
+    t = Topology(
+        name=name,
+        n=Ws[0].shape[0],
+        _W_cycle=tuple(Ws),
+        _classes_cycle=tuple(tuple(_classes_from_W(W)) for W in Ws),
+    )
+    t.validate()
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Concrete topologies
+# ---------------------------------------------------------------------------
+
+
+def ring(n: int) -> Topology:
+    if n == 1:
+        return fully_connected(1)
+    if n == 2:
+        return _static("ring", metropolis_weights(_offsets_to_adj(2, [1])))
+    return _static("ring", metropolis_weights(_offsets_to_adj(n, [1, -1])))
+
+
+def torus(n: int) -> Topology:
+    """2-D torus ("mesh" in the paper); n must factor into rows x cols."""
+    rows = int(math.isqrt(n))
+    while n % rows != 0:
+        rows -= 1
+    cols = n // rows
+    if rows == 1:
+        return ring(n)
+    adj = np.zeros((n, n), dtype=np.int64)
+
+    def idx(r: int, c: int) -> int:
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            for (dr, dc) in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                j = idx(r + dr, c + dc)
+                if i != j:
+                    adj[i, j] = 1
+                    adj[j, i] = 1
+    return _static("torus", metropolis_weights(adj))
+
+
+def symmetric_exponential(n: int) -> Topology:
+    """Neighbors at hop distances +/- 2^k (paper App. G.3, [Assran et al.])."""
+    if n <= 2:
+        return ring(n)
+    offsets: list[int] = []
+    k = 0
+    while (1 << k) <= n // 2:
+        offsets.append(1 << k)
+        k += 1
+    return _static(
+        "symmetric-exponential", metropolis_weights(_offsets_to_adj(n, offsets))
+    )
+
+
+def one_peer_exponential(n: int) -> Topology:
+    """Time-varying degree-1 exponential graph via XOR matchings.
+
+    At step t each node exchanges with ``i XOR 2^(t mod log2 n)``:
+    W_t = (I + P_t) / 2, a perfect matching -> O(1) bandwidth *and* a single
+    partner per step (maximal straggler tolerance).  Requires n power of two.
+    """
+    assert n >= 2 and (n & (n - 1)) == 0, "one-peer exponential needs power-of-two n"
+    Ws = []
+    for k in range(int(math.log2(n))):
+        W = np.zeros((n, n), dtype=np.float64)
+        for i in range(n):
+            j = i ^ (1 << k)
+            W[i, j] = 0.5
+            W[i, i] = 0.5
+        Ws.append(W)
+    return _cycle("one-peer-exponential", Ws)
+
+
+def bipartite_random_match(n: int, *, seed: int = 0, pool: int = 8) -> Topology:
+    """Random perfect matchings per iteration (paper App. G.3), seeded.
+
+    A pool of ``pool`` matchings is pre-generated and cycled; every node uses
+    the same seed so there are no deadlocks (as in the paper).
+    """
+    assert n % 2 == 0, "random matching needs even n"
+    rng = np.random.default_rng(seed)
+    Ws = []
+    for _ in range(pool):
+        order = rng.permutation(n)
+        W = np.zeros((n, n), dtype=np.float64)
+        for a in range(0, n, 2):
+            i, j = int(order[a]), int(order[a + 1])
+            W[i, j] = W[j, i] = 0.5
+            W[i, i] = W[j, j] = 0.5
+        Ws.append(W)
+    return _cycle("bipartite-random-match", Ws)
+
+
+def fully_connected(n: int) -> Topology:
+    """W = (1/n) 11^T — decentralized methods reduce to their parallel forms."""
+    W = np.full((n, n), 1.0 / n, dtype=np.float64)
+    return _static("fully-connected", W)
+
+
+def disconnected(n: int) -> Topology:
+    """W = I — no communication (for ablation: pure local SGD)."""
+    return _static("disconnected", np.eye(n, dtype=np.float64))
+
+
+TOPOLOGIES = {
+    "ring": ring,
+    "torus": torus,
+    "mesh": torus,  # the paper's name for the grid topology
+    "exp": symmetric_exponential,
+    "symmetric-exponential": symmetric_exponential,
+    "one-peer-exp": one_peer_exponential,
+    "one-peer-exponential": one_peer_exponential,
+    "random-match": bipartite_random_match,
+    "bipartite-random-match": bipartite_random_match,
+    "full": fully_connected,
+    "fully-connected": fully_connected,
+    "none": disconnected,
+    "disconnected": disconnected,
+}
+
+
+def build_topology(name: str, n: int, **kwargs) -> Topology:
+    try:
+        factory = TOPOLOGIES[name]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown topology {name!r}; available: {sorted(TOPOLOGIES)}"
+        ) from e
+    return factory(n, **kwargs)

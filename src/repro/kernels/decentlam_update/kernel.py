@@ -1,0 +1,78 @@
+"""Fused DecentLaM optimizer update as a Pallas TPU kernel.
+
+Pure elementwise fusion: one pass over (x, mix, m) producing (x_new, m_new).
+Tensors are flattened and tiled (rows, 1024) with (block_rows, 1024) VMEM
+blocks — lane-dim 1024 = 8 x 128 keeps the VPU fully fed; the scalar lr is
+read from SMEM (it is a traced schedule value, not a compile-time constant).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 1024
+
+
+def _update_kernel(lr_ref, x_ref, mix_ref, m_ref, xo_ref, mo_ref, *, beta: float):
+    lr = lr_ref[0]
+    safe_lr = jnp.maximum(lr, 1e-12)
+    x = x_ref[...].astype(jnp.float32)
+    mix = mix_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    g_tilde = (x - mix) / safe_lr
+    m_new = beta * m + g_tilde
+    xo_ref[...] = (x - lr * m_new).astype(xo_ref.dtype)
+    mo_ref[...] = m_new
+
+
+def decentlam_update_kernel(
+    x: jax.Array,  # (rows, LANES)
+    mix: jax.Array,
+    m: jax.Array,
+    lr: jax.Array,  # (1,) f32
+    *,
+    beta: float,
+    block_rows: int = 64,
+    interpret: bool = False,
+):
+    rows = x.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    kern = functools.partial(_update_kernel, beta=beta)
+    bs = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    # inside a check_vma shard_map the outputs must declare their varying
+    # axes; they inherit the input's (elementwise kernel), and every operand
+    # must be promoted to the same variance (lr is a replicated scalar)
+    try:
+        vma = jax.typeof(x).vma
+    except Exception:  # noqa: BLE001 — outside a trace
+        vma = frozenset()
+    if vma:
+        def _promote(a):
+            have = jax.typeof(a).vma
+            missing = tuple(sorted(vma - have))
+            return jax.lax.pvary(a, missing) if missing else a
+
+        lr, mix, m = _promote(lr), _promote(mix), _promote(m)
+    out_shape = [
+        jax.ShapeDtypeStruct(x.shape, x.dtype, vma=vma),
+        jax.ShapeDtypeStruct(x.shape, jnp.float32, vma=vma),
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            bs,
+            bs,
+            bs,
+        ],
+        out_specs=[bs, bs],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(lr, x, mix, m)

@@ -1,0 +1,65 @@
+"""Jit'd wrapper: fused DecentLaM update over an arbitrary pytree."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import LANES, decentlam_update_kernel
+from .ref import decentlam_update_ref
+
+
+def _fused_leaf(x, mix, m, lr, *, beta: float, interpret: bool):
+    shape, dtype = x.shape, x.dtype
+    n = x.size
+    block = 64 * LANES
+    pad = (-n) % block
+    if pad or x.ndim != 2 or x.shape[-1] != LANES:
+        def flat(a, dt):
+            return jnp.pad(a.reshape(-1).astype(dt), (0, pad)).reshape(-1, LANES)
+        xf, mixf, mf = flat(x, dtype), flat(mix, dtype), flat(m, jnp.float32)
+    else:
+        xf, mixf, mf = x, mix, m.astype(jnp.float32)
+    xo, mo = decentlam_update_kernel(
+        xf, mixf, mf, lr.reshape(1), beta=beta, interpret=interpret
+    )
+    xo = xo.reshape(-1)[:n].reshape(shape)
+    mo = mo.reshape(-1)[:n].reshape(shape)
+    return xo, mo
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "impl", "interpret"))
+def decentlam_update(
+    params,
+    mixed,
+    momentum,
+    lr,
+    *,
+    beta: float,
+    impl: str = "ref",  # ref | pallas | pallas_interpret
+    interpret: bool = False,
+):
+    """Tree-wise fused update: returns (new_params, new_momentum)."""
+    lr = jnp.asarray(lr, jnp.float32)
+    if impl == "ref":
+        out = jax.tree.map(
+            lambda x, mx, m: decentlam_update_ref(x, mx, m, lr=lr, beta=beta),
+            params,
+            mixed,
+            momentum,
+        )
+    else:
+        out = jax.tree.map(
+            lambda x, mx, m: _fused_leaf(
+                x, mx, m, lr, beta=beta,
+                interpret=interpret or impl == "pallas_interpret",
+            ),
+            params,
+            mixed,
+            momentum,
+        )
+    new_p = jax.tree.map(lambda _, o: o[0], params, out)
+    new_m = jax.tree.map(lambda _, o: o[1], params, out)
+    return new_p, new_m

@@ -1,0 +1,153 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Design (TPU-shaped, DESIGN.md §3):
+
+* grid = (B, H, num_q_blocks, num_k_blocks) — the k dimension iterates
+  innermost so the online-softmax accumulators (m, l, acc) live in VMEM
+  scratch across k-blocks and are flushed to the output on the last one.
+* BlockSpecs tile q:(1,1,bq,hd), k/v:(1,1,bk,hd) into VMEM; GQA is handled
+  in the k/v index_map (q-head h reads kv-head h // group) so grouped KV is
+  never materialized at H heads in HBM.
+* causal / sliding-window masking is positional inside the block; fully
+  masked k-blocks short-circuit via ``pl.when`` (they still iterate — block
+  skipping via index remapping is a §Perf follow-up, noted in EXPERIMENTS).
+* accumulation is fp32 regardless of input dtype; the MXU sees
+  (bq, hd) x (hd, bk) and (bq, bk) x (bk, hd) contractions with
+  hardware-aligned 128-multiples by default (bq = bk = 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    causal: bool,
+    window: int,
+    bq: int,
+    bk: int,
+    sq_valid: int,
+    sk_valid: int,
+    scale: float,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level early out: skip score work when every pair is masked
+    block_live = True
+    if causal:
+        block_live = (ik * bk) <= (iq * bq + bq - 1)
+
+    @pl.when(block_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+
+        mask = (q_pos < sq_valid) & (k_pos < sk_valid)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _flush():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,  # (B, Sq_pad, H, hd)
+    k: jax.Array,  # (B, Sk_pad, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int,
+    sq_valid: int,
+    sk_valid: int,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    Sk = k.shape[1]
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    group = H // Hkv
+    nq, nk = Sq // bq, Sk // bk
+    grid = (B, H, nq, nk)
+
+    # layout: operate in (B, H, S, hd) block space
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal,
+        window=window,
+        bq=bq,
+        bk=bk,
+        sq_valid=sq_valid,
+        sk_valid=sk_valid,
+        scale=1.0 / (hd ** 0.5),
+        num_k_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)  # back to (B, Sq, H, hd)

@@ -1,0 +1,61 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Handles padding to block multiples and exposes the same signature the model
+layer uses.  ``interpret=True`` executes the kernel body in Python on CPU —
+that is how the kernel is validated in this (CPU-only) container; on TPU the
+same code lowers through Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    sq, sk = q.shape[1], k.shape[1]
+    bq = min(bq, max(sq, 8))
+    bk = min(bk, max(sk, 8))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    out = flash_attention_kernel(
+        qp,
+        kp,
+        vp,
+        causal=causal,
+        window=window,
+        sq_valid=sq,
+        sk_valid=sk,
+        bq=bq,
+        bk=bk,
+        interpret=interpret,
+    )
+    return out[:, :sq]

@@ -1,0 +1,140 @@
+"""Chunked mLSTM as a Pallas TPU kernel.
+
+Grid = (B*H, num_chunks) with the chunk dimension innermost: the matrix
+memory (C: dk x dv), normalizer (n: dk) and stabilizer (m) live in VMEM
+scratch and carry across chunk iterations (initialized at chunk 0, written
+out at the last chunk).  Each chunk does two MXU contractions
+((C x dk)@(dk x C) scores and (C x C)@(C x dv) values) plus the cross-chunk
+state update — the same arithmetic as ``ref.mlstm_chunked``.
+
+VMEM budget at the xlstm-350m shapes (dk = dv = 512, chunk = 128):
+C-state 512*512*4 = 1 MiB, blocks ~0.8 MiB — comfortably inside a v5e core's
+~128 MiB VMEM even with double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(
+    q_ref, k_ref, v_ref, i_ref, f_ref,
+    h_ref, Cout_ref, nout_ref, mout_ref,
+    C_scr, n_scr, m_scr,
+    *, chunk: int, num_chunks: int, dk: int, dv: int,
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        C_scr[...] = jnp.zeros_like(C_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.zeros_like(m_scr)
+
+    scale = 1.0 / (dk ** 0.5)
+    q = q_ref[0].astype(jnp.float32) * scale  # (C, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (C, dv)
+    it = i_ref[0].astype(jnp.float32)  # (C, 1) column vector layout
+    logf = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))  # (C, 1)
+    b = jnp.cumsum(logf, axis=0)  # (C, 1)
+
+    m_prev = m_scr[0, 0]
+    C_prev = C_scr[...]
+    n_prev = n_scr[...]  # (1, dk)
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = col <= row
+
+    decay = b - b.T + it.T  # (C, C): b_t - b_s + i_s
+    decay = jnp.where(tril, decay, NEG_INF)
+    m_intra = jnp.max(decay, axis=1, keepdims=True)  # (C, 1)
+    m_t = jnp.maximum(m_intra, b + m_prev)
+    D = jnp.exp(decay - m_t)
+
+    att = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (C, C)
+    w = att * D
+    num = jax.lax.dot_general(
+        w, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    inter_scale = jnp.exp(b + m_prev - m_t)  # (C, 1)
+    num = num + inter_scale * jax.lax.dot_general(
+        q, C_prev, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    den = jnp.sum(w, axis=1, keepdims=True) + inter_scale * jax.lax.dot_general(
+        q, n_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    h_ref[0] = h.astype(h_ref.dtype)
+
+    # ---- cross-chunk carry ----
+    bC = b[chunk - 1, 0]
+    M = jnp.maximum(bC + m_prev, jnp.max(bC - b + it))
+    k_scale = jnp.exp(bC - b + it - M)  # (C, 1)
+    old = jnp.exp(bC + m_prev - M)
+    ks = k * k_scale
+    C_scr[...] = old * C_prev + jax.lax.dot_general(
+        ks, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    n_scr[...] = old * n_prev + jnp.sum(ks, axis=0, keepdims=True)
+    m_scr[0, 0] = M
+
+    @pl.when(c == num_chunks - 1)
+    def _flush():
+        Cout_ref[0] = C_scr[...]
+        nout_ref[0] = n_scr[...]
+        mout_ref[0] = m_scr[...]
+
+
+def mlstm_chunk_kernel(
+    q, k, v, i_raw, f_raw, *, chunk: int = 128, interpret: bool = False
+):
+    """q/k: (BH, S, dk); v: (BH, S, dv); gates: (BH, S, 1).  Returns
+    (h, C_final, n_final, m_final)."""
+    BH, S, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    kern = functools.partial(
+        _mlstm_kernel, chunk=chunk, num_chunks=nc, dk=dk, dv=dv
+    )
+    h, C, n, m = pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, 1, dk), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, dv), v.dtype),
+            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1, dk), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((1, dk), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_raw, f_raw)
+    return h, C, n, m

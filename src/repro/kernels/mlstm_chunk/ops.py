@@ -1,0 +1,47 @@
+"""Jit'd wrapper for the chunked mLSTM kernel (model-facing API)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mlstm_chunk_kernel
+from .ref import init_state, mlstm_chunked
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))
+def mlstm(
+    q: jax.Array,  # (B, H, S, dk)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, S, dv)
+    i_raw: jax.Array,  # (B, H, S)
+    f_raw: jax.Array,
+    *,
+    chunk: int = 128,
+    impl: str = "ref",  # ref | pallas | pallas_interpret
+    interpret: bool = False,
+):
+    """Returns (h: (B, H, S, dv), state {C, n, m})."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if impl == "ref":
+        return mlstm_chunked(q, k, v, i_raw, f_raw, chunk=min(chunk, S))
+
+    BH = B * H
+    hs, C, n, m = mlstm_chunk_kernel(
+        q.reshape(BH, S, dk),
+        k.reshape(BH, S, dk),
+        v.reshape(BH, S, dv),
+        i_raw.reshape(BH, S, 1),
+        f_raw.reshape(BH, S, 1),
+        chunk=min(chunk, S),
+        interpret=interpret or impl == "pallas_interpret",
+    )
+    state = {
+        "C": C.reshape(B, H, dk, dv),
+        "n": n.reshape(B, H, dk),
+        "m": m.reshape(B, H),
+    }
+    return hs.reshape(B, H, S, dv), state

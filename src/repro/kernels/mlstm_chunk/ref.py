@@ -1,0 +1,171 @@
+"""mLSTM (xLSTM matrix-memory cell) — pure-jnp oracles.
+
+Two references:
+
+* ``mlstm_sequential`` — the cell exactly as in the xLSTM paper (Beck et al.
+  2405.04517, eqs. 19-27) with exponential input gate, sigmoid forget gate
+  and the max-stabilizer state m_t.  ``lax.scan`` over time; ground truth.
+* ``mlstm_chunked``   — the chunk-parallel reformulation the Pallas kernel
+  implements: within-chunk (C x C) decay-masked attention + cross-chunk
+  carried state (C, n, m), algebraically identical to the sequential cell.
+
+Both return (h, final_state) so decode (chunk length 1) reuses the same
+math.  All stabilizer algebra is fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def init_state(batch: int, heads: int, dk: int, dv: int):
+    return {
+        "C": jnp.zeros((batch, heads, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, heads, dk), jnp.float32),
+        "m": jnp.zeros((batch, heads), jnp.float32),
+    }
+
+
+def _state_like(q, k, v):
+    """Zero state whose leaves inherit shard_map variance from the inputs
+    (C couples k x v so it varies wherever v does; see repro.utils)."""
+    from ...utils import zeros_with_vma
+
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    return {
+        "C": zeros_with_vma((B, H, dk, dv), jnp.float32, v),
+        "n": zeros_with_vma((B, H, dk), jnp.float32, k),
+        "m": zeros_with_vma((B, H), jnp.float32, q),
+    }
+
+
+def mlstm_sequential(q, k, v, i_raw, f_raw, state=None):
+    """q/k: (B, H, S, dk); v: (B, H, S, dv); gates: (B, H, S)."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = _state_like(q, k, v)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs  # (B,H,dk)...
+        qt = qt.astype(jnp.float32) * scale
+        kt = kt.astype(jnp.float32)
+        vt = vt.astype(jnp.float32)
+        logf = jax.nn.log_sigmoid(ft.astype(jnp.float32))
+        m_new = jnp.maximum(logf + m, it.astype(jnp.float32))
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it.astype(jnp.float32) - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(
+        jnp.moveaxis(a, 2, 0) for a in (q, k, v, i_raw[..., None], f_raw[..., None])
+    )
+    xs = (xs[0], xs[1], xs[2], xs[3][..., 0], xs[4][..., 0])
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    h = jnp.moveaxis(hs, 0, 2).astype(v.dtype)  # (B,H,S,dv)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def _chunk_body(q, k, v, i_raw, f_raw, C_prev, n_prev, m_prev):
+    """One chunk, fully vectorized.  q/k: (..., C, dk); v: (..., C, dv);
+    gates (..., C); states (..., dk, dv) / (..., dk) / (...)."""
+    dk = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dk, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    it = i_raw.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    b = jnp.cumsum(logf, axis=-1)  # (..., C) inclusive
+
+    Cl = q.shape[-2]
+    tril = jnp.tril(jnp.ones((Cl, Cl), bool))
+    # decay(t, s) = b_t - b_s + i_s   for s <= t
+    decay = b[..., :, None] - b[..., None, :] + it[..., None, :]
+    decay = jnp.where(tril, decay, NEG_INF)
+
+    m_intra = jnp.max(decay, axis=-1)  # (..., C)
+    m_t = jnp.maximum(m_intra, b + m_prev[..., None])
+    D = jnp.exp(decay - m_t[..., None])  # masked by NEG_INF already
+
+    att = jnp.einsum("...tk,...sk->...ts", qf, kf)
+    w = att * D
+    num = jnp.einsum("...ts,...sv->...tv", w, vf)
+    num = num + jnp.exp(b + m_prev[..., None] - m_t)[..., None] * jnp.einsum(
+        "...tk,...kv->...tv", qf, C_prev
+    )
+    den = jnp.sum(w, axis=-1) + jnp.exp(b + m_prev[..., None] - m_t) * jnp.einsum(
+        "...tk,...k->...t", qf, n_prev
+    )
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # ---- carry ----
+    bC = b[..., -1:]
+    M = jnp.maximum(
+        (bC + m_prev[..., None])[..., 0], jnp.max(bC - b + it, axis=-1)
+    )
+    k_scale = jnp.exp(bC - b + it - M[..., None])  # (..., C)
+    old_scale = jnp.exp(bC[..., 0] + m_prev - M)
+    C_new = old_scale[..., None, None] * C_prev + jnp.einsum(
+        "...sk,...sv->...kv", kf * k_scale[..., None], vf
+    )
+    n_new = old_scale[..., None] * n_prev + jnp.einsum(
+        "...sk->...k", kf * k_scale[..., None]
+    )
+    return h, C_new, n_new, M
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, state=None, *, chunk: int = 64):
+    """Chunk-parallel mLSTM; identical output to ``mlstm_sequential``."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = _state_like(q, k, v)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def body(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = xs
+        h, C, n, m = _chunk_body(qc, kc, vc, ic, fc, C, n, m)
+        return (C, n, m), h
+
+    def split(a):
+        return jnp.moveaxis(
+            a.reshape(B, H, nc, chunk, *a.shape[3:]), 2, 0
+        )  # (nc, B, H, chunk, ...)
+
+    xs = (split(q), split(k), split(v), split(i_raw), split(f_raw))
+    (C, n, m), hs = jax.lax.scan(body, (state["C"], state["n"], state["m"]), xs)
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, dv).astype(v.dtype)
+    return h, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode_step(q, k, v, i_raw, f_raw, state):
+    """Single-token decode (chunk of length 1), constant memory."""
+    h, C, n, m = _chunk_body(
+        q[..., None, :],
+        k[..., None, :],
+        v[..., None, :],
+        i_raw[..., None],
+        f_raw[..., None],
+        state["C"],
+        state["n"],
+        state["m"],
+    )
+    return h[..., 0, :], {"C": C, "n": n, "m": m}

@@ -1,0 +1,229 @@
+"""Trip-count-aware cost accounting from the jaxpr.
+
+XLA's ``compiled.cost_analysis()`` counts loop bodies **once** (verified in
+this container: a scan of 10 matmuls reports 1 matmul of FLOPs), and
+``compiled.as_text()`` likewise shows collectives inside a while body once.
+Since every loop in this framework is a ``lax.scan`` with a static length
+(layer groups, grad-accum microbatches, attention q-blocks, SSM chunks),
+walking the jaxpr and multiplying by scan lengths gives *exact* per-device
+FLOPs and collective egress.  Inside a fully-manual shard_map the traced
+shapes are already per-device, so no post-hoc division is needed.
+
+Outputs per program:
+* ``flops``            — 2*M*N*K dots + conv + elementwise (exact, trip-aware)
+* ``collective_bytes`` — per-device link egress with ring cost models:
+  psum/all-reduce 2(g-1)/g * bytes, all-gather/reduce-scatter (g-1)/g * out,
+  ppermute 1x bytes, all-to-all (g-1)/g * bytes
+* ``naive_bytes``      — sum of operand+result bytes over all eqns (upper
+  bound, no fusion); used to scale XLA's fused bytes by the loop
+  amplification ratio: bytes_corrected = xla_bytes * naive(with trips) /
+  naive(without trips).
+
+Validated against fully-unrolled XLA compiles in tests/test_costmodel.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    naive_bytes: float = 0.0
+    naive_bytes_untripped: float = 0.0
+    # trip-aware bytes of *materializing* ops only (dots, gathers/scatters,
+    # slices, concats, collectives, scan xs/carry I/O); pure elementwise ops
+    # are assumed fused into their producers, matching XLA behavior.  This
+    # is the memory-roofline numerator.
+    materialized_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    # per-(op, shape) egress bytes — the collective "profile" for §Perf
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", trips: float = 1.0) -> None:
+        self.flops += other.flops * trips
+        self.collective_bytes += other.collective_bytes * trips
+        self.naive_bytes += other.naive_bytes * trips
+        self.naive_bytes_untripped += other.naive_bytes_untripped
+        self.materialized_bytes += other.materialized_bytes * trips
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + v
+        for k, v in other.collective_breakdown.items():
+            self.collective_breakdown[k] = (
+                self.collective_breakdown.get(k, 0.0) + v * trips
+            )
+
+
+def _nbytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001 — abstract tokens etc.
+        return 0.0
+
+
+def _eqn_io_bytes(eqn) -> float:
+    tot = 0.0
+    for v in list(eqn.invars) + list(eqn.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape"):
+            tot += _nbytes(aval)
+    return tot
+
+
+def _dot_flops(eqn) -> float:
+    a, b = eqn.invars[0].aval, eqn.invars[1].aval
+    ((lc, rc), (lb, rb)) = eqn.params["dimension_numbers"]
+    batch = float(np.prod([a.shape[i] for i in lb])) if lb else 1.0
+    contract = float(np.prod([a.shape[i] for i in lc])) if lc else 1.0
+    m = float(
+        np.prod([d for i, d in enumerate(a.shape) if i not in set(lc) | set(lb)])
+    )
+    n = float(
+        np.prod([d for i, d in enumerate(b.shape) if i not in set(rc) | set(rb)])
+    )
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # 2 * output elements * (kernel spatial * in-features)
+    k = float(np.prod(rhs.shape[:-1]))
+    return 2.0 * float(np.prod(out.shape)) * k
+
+
+def _axis_group_size(axes, axis_sizes: dict[str, int]) -> int:
+    if isinstance(axes, (tuple, list)):
+        g = 1
+        for a in axes:
+            g *= axis_sizes.get(a, 1)
+        return g
+    return axis_sizes.get(axes, 1)
+
+
+_COLLECTIVES = {
+    "psum", "pmax", "pmin", "all_gather", "all_to_all", "ppermute",
+    "reduce_scatter", "psum_invariant",
+}
+
+# ops whose operands/results actually move through HBM (elementwise chains
+# fuse into these); used for the memory-roofline bytes estimate
+_MATERIALIZING = {
+    "dot_general", "conv_general_dilated", "gather", "scatter",
+    "scatter-add", "scatter_add", "dynamic_slice", "dynamic_update_slice",
+    "concatenate", "sort", "cumsum", "cumlogsumexp", "cummax", "top_k",
+    "argmax", "argmin", "iota_32x2",
+} | _COLLECTIVES
+
+
+def _collective_cost(eqn, axis_sizes) -> tuple[float, str]:
+    name = eqn.primitive.name
+    axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+    g = _axis_group_size(axes, axis_sizes)
+    if g <= 1:
+        return 0.0, name
+    frac = (g - 1) / g
+    in_bytes = sum(_nbytes(v.aval) for v in eqn.invars if hasattr(v.aval, "shape"))
+    out_bytes = sum(_nbytes(v.aval) for v in eqn.outvars if hasattr(v.aval, "shape"))
+    if name in ("psum", "psum_invariant"):
+        return 2.0 * frac * in_bytes, "all-reduce"
+    if name in ("pmax", "pmin"):
+        return 2.0 * frac * in_bytes, "all-reduce"
+    if name == "all_gather":
+        return frac * out_bytes, "all-gather"
+    if name == "reduce_scatter":
+        return frac * in_bytes, "reduce-scatter"
+    if name == "all_to_all":
+        return frac * in_bytes, "all-to-all"
+    if name == "ppermute":
+        return float(in_bytes), "collective-permute"
+    return 0.0, name
+
+
+def _sub_jaxprs(eqn):
+    """(jaxpr, trips) pairs nested under an eqn."""
+    p = eqn.params
+    name = eqn.primitive.name
+    if name == "scan":
+        return [(p["jaxpr"].jaxpr, float(p["length"]))]
+    if name == "while":
+        # all loops in this framework are scans; a bare while (e.g. from
+        # lax.map) is conservatively counted once and flagged by the caller
+        return [(p["body_jaxpr"].jaxpr, 1.0), (p["cond_jaxpr"].jaxpr, 1.0)]
+    if name == "cond":
+        return [(b.jaxpr, 1.0 / len(p["branches"])) for b in p["branches"]]
+    out = []
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p:
+            j = p[key]
+            out.append((getattr(j, "jaxpr", j), 1.0))
+    if name == "custom_vjp_call" or name == "custom_jvp_call":
+        pass  # fun jaxpr handled above via call_jaxpr/fun_jaxpr when present
+    return out
+
+
+def analyze_jaxpr(jaxpr, axis_sizes: dict[str, int]) -> Costs:
+    total = Costs()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for sub, trips in subs:
+                total.add(analyze_jaxpr(sub, axis_sizes), trips)
+            if name in ("scan", "while"):
+                # loop-boundary traffic (xs/carry), once per program; the
+                # per-iteration body traffic is already counted inside.
+                # call-like wrappers (pjit/shard_map/remat) are transparent —
+                # their io is not a data movement.
+                io = _eqn_io_bytes(eqn)
+                total.naive_bytes += io
+                total.naive_bytes_untripped += io
+                total.materialized_bytes += io
+            continue
+        io = _eqn_io_bytes(eqn)
+        total.naive_bytes += io
+        total.naive_bytes_untripped += io
+        if name in _MATERIALIZING:
+            total.materialized_bytes += io
+        if name == "dot_general":
+            total.flops += _dot_flops(eqn)
+        elif name == "conv_general_dilated":
+            total.flops += _conv_flops(eqn)
+        elif name in _COLLECTIVES:
+            b, label = _collective_cost(eqn, axis_sizes)
+            total.collective_bytes += b
+            total.collective_counts[label] = (
+                total.collective_counts.get(label, 0) + 1
+            )
+            shp = "/".join(
+                str(tuple(v.aval.shape))
+                for v in eqn.invars[:1]
+                if hasattr(v.aval, "shape")
+            )
+            axes = eqn.params.get("axes", eqn.params.get("axis_name", ()))
+            key = f"{label}@{axes}@{shp}"
+            total.collective_breakdown[key] = (
+                total.collective_breakdown.get(key, 0.0) + b
+            )
+        else:
+            # elementwise/reduction: ~1 flop per output element
+            total.flops += sum(
+                float(np.prod(v.aval.shape))
+                for v in eqn.outvars
+                if hasattr(v.aval, "shape")
+            )
+    return total
+
+
+def analyze_lowered(fn, args, axis_sizes: dict[str, int]) -> Costs:
+    """Trace ``fn`` (the pre-jit python callable or jit fn) and analyze."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return analyze_jaxpr(jaxpr.jaxpr, axis_sizes)

@@ -1,0 +1,77 @@
+"""Elastic / fault-tolerance controller.
+
+Orchestrates the fail-stop → shrink → continue (or scale-out) lifecycle on
+top of the checkpoint + topology primitives:
+
+* ``plan_recovery``: given the surviving node set, decide between
+  *rerouting* (same node count, dead nodes excluded from the gossip graph —
+  zero state surgery, the Metropolis reweighting keeps W doubly stochastic)
+  and *rescaling* (consensus-collapse the replicas to a new node count).
+* ``apply_recovery``: execute the plan against a TrainState.
+
+The end-to-end drill (checkpoint → kill half the nodes → rebuild → resume)
+runs in ``repro.launch.train --failure-drill`` and examples/train_lm.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+from ..core.topology import Topology, build_topology
+from ..train.checkpoint import elastic_reshape
+
+Tree = Any
+
+__all__ = ["RecoveryPlan", "plan_recovery", "apply_recovery"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPlan:
+    mode: str  # "reroute" | "rescale"
+    n_nodes: int
+    topology: Topology
+    dead: tuple[int, ...]
+
+
+def plan_recovery(
+    topology_name: str,
+    n_nodes: int,
+    dead: Sequence[int],
+    *,
+    allow_reroute: bool = True,
+) -> RecoveryPlan:
+    """Choose the cheapest recovery for a set of fail-stopped nodes.
+
+    Rerouting keeps the mesh shape (dead indices idle with self-weight 1) —
+    viable while the survivor graph stays connected and the waste (idle
+    devices) is acceptable; otherwise rescale to the largest power-of-two
+    node count that the survivors support (power-of-two keeps every
+    topology family constructible).
+    """
+    dead = tuple(sorted(set(int(d) for d in dead)))
+    alive = n_nodes - len(dead)
+    assert alive >= 1, "no survivors"
+
+    if allow_reroute and len(dead) <= max(1, n_nodes // 8):
+        base = build_topology(topology_name, n_nodes)
+        return RecoveryPlan(
+            mode="reroute", n_nodes=n_nodes, topology=base.exclude(dead), dead=dead
+        )
+
+    new_n = 1
+    while new_n * 2 <= alive:
+        new_n *= 2
+    return RecoveryPlan(
+        mode="rescale",
+        n_nodes=new_n,
+        topology=build_topology(topology_name, new_n),
+        dead=dead,
+    )
+
+
+def apply_recovery(state: Tree, plan: RecoveryPlan) -> Tree:
+    """Produce the TrainState for the recovered configuration."""
+    if plan.mode == "reroute":
+        return state  # gossip weights change; per-node state is untouched
+    return elastic_reshape(state, plan.n_nodes)

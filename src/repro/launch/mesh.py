@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: (16, 16) = (data, model) — 256 chips,
+16 decentralized nodes x 16-way tensor parallel.  Multi-pod: (2, 16, 16) =
+(pod, data, model) — 512 chips, 32 decentralized nodes; the gossip graph
+spans the flattened (pod, data) axes so cross-pod edges ride the (slow)
+inter-pod links exactly ``degree`` times per step instead of an all-reduce.
+
+A ``stage`` axis slot for pipeline parallelism is reserved but unused: at
+<=8B params, 16-way TP x (16-32)-way decentralized DP covers the assigned
+architectures (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "node_axes_of", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def node_axes_of(mesh) -> tuple[str, ...]:
+    """The decentralized node axes = every axis except the model axis."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+def n_nodes_of(mesh) -> int:
+    n = 1
+    for a in node_axes_of(mesh):
+        n *= mesh.shape[a]
+    return n

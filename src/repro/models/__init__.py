@@ -1,0 +1,29 @@
+"""Model substrate: manual-tensor-parallel model zoo (DESIGN.md §3)."""
+
+from .layers import TPContext
+from .transformer import (
+    RuntimeConfig,
+    block_groups,
+    cache_specs,
+    count_params,
+    decode_step,
+    forward_loss,
+    init_cache,
+    init_params,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "RuntimeConfig",
+    "TPContext",
+    "block_groups",
+    "cache_specs",
+    "count_params",
+    "decode_step",
+    "forward_loss",
+    "init_cache",
+    "init_params",
+    "param_specs",
+    "prefill",
+]

@@ -1,0 +1,335 @@
+"""Shared layers with *manual* tensor parallelism.
+
+All model code in this repo runs inside a fully-manual ``jax.shard_map``
+(see DESIGN.md §4).  ``TPContext`` carries the model-axis name/size; layers
+that need a cross-device reduction call ``tp.psum``.  With ``tp.size == 1``
+(smoke tests, examples on one device) every collective degrades to identity,
+so the same code runs unsharded.
+
+Conventions:
+* parameters are plain nested dicts of ``jnp.ndarray``; every ``init`` has a
+  sibling ``specs`` returning the same structure of ``PartitionSpec`` over
+  the model axis (node/stack axes are prepended by the train harness);
+* activations are kept replicated across the model axis at block boundaries
+  (Megatron style): col-sharded in-proj -> sharded hidden -> row-sharded
+  out-proj -> psum;
+* compute dtype is configurable (bf16 default), master params fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+__all__ = [
+    "TPContext",
+    "Initializer",
+    "rms_norm",
+    "layer_norm",
+    "norm_apply",
+    "norm_init",
+    "norm_specs",
+    "rope_freqs",
+    "apply_rope",
+    "linear_init",
+    "mlp_init",
+    "mlp_specs",
+    "mlp_apply",
+    "embedding_init",
+    "embedding_specs",
+    "embed_lookup",
+    "lm_head_logits",
+    "softmax_xent_sharded",
+]
+
+
+def pmax_stopgrad(x: jax.Array, axis) -> jax.Array:
+    """pmax with a zero tangent (it only feeds numerical-stability shifts,
+    which are semantically constant) — pmax has no JVP rule in JAX."""
+
+    @jax.custom_jvp
+    def f(y):
+        return jax.lax.pmax(y, axis)
+
+    @f.defjvp
+    def _jvp(primals, tangents):
+        (y,) = primals
+        return f(y), jnp.zeros_like(y)
+
+    return f(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPContext:
+    """Manual tensor-parallel context (model axis of the device mesh).
+
+    ``in_shard_map`` decides whether collectives are emitted: inside a
+    fully-manual shard_map they must be issued even when the model axis has
+    size 1 (a size-1 psum is free in the compiled code but required for the
+    vma replication proof); outside shard_map (smoke tests, single-device
+    examples) no axis exists and everything degrades to identity.
+    """
+
+    axis: str = "model"
+    size: int = 1
+    in_shard_map: bool = False
+
+    @property
+    def enabled(self) -> bool:
+        return self.in_shard_map
+
+    def psum(self, x: jax.Array) -> jax.Array:
+        return jax.lax.psum(x, self.axis) if self.enabled else x
+
+    def axis_index(self) -> jax.Array:
+        if self.enabled:
+            return jax.lax.axis_index(self.axis)
+        return jnp.int32(0)
+
+    def shard_size(self, full: int) -> int:
+        assert full % self.size == 0, f"{full} not divisible by tp={self.size}"
+        return full // self.size
+
+
+class Initializer:
+    """Deterministic param init: truncated-normal fan-in scaling."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def split(self) -> "Initializer":
+        self._key, sub = jax.random.split(self._key)
+        return Initializer(sub)
+
+    def normal(self, shape, scale: float, dtype=jnp.float32) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return (scale * jax.random.truncated_normal(sub, -2.0, 2.0, shape)).astype(dtype)
+
+    def fan_in(self, shape, fan_in: int | None = None, dtype=jnp.float32) -> jax.Array:
+        f = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+        return self.normal(shape, 1.0 / math.sqrt(f), dtype)
+
+    def zeros(self, shape, dtype=jnp.float32) -> jax.Array:
+        return jnp.zeros(shape, dtype)
+
+    def ones(self, shape, dtype=jnp.float32) -> jax.Array:
+        return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * (1.0 + scale.astype(jnp.float32))
+    return x.astype(dt)
+
+
+def layer_norm(
+    x: jax.Array,
+    scale: jax.Array | None,
+    bias: jax.Array | None,
+    eps: float = 1e-5,
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def norm_init(init: Initializer, norm_type: str, d: int) -> Tree:
+    if norm_type == "rmsnorm":
+        return {"scale": init.zeros((d,))}
+    if norm_type == "layernorm":
+        return {"scale": init.zeros((d,)), "bias": init.zeros((d,))}
+    if norm_type == "nonparametric_ln":  # OLMo: no affine params
+        return {}
+    raise ValueError(norm_type)
+
+
+def norm_specs(norm_type: str) -> Tree:
+    if norm_type == "rmsnorm":
+        return {"scale": P(None)}
+    if norm_type == "layernorm":
+        return {"scale": P(None), "bias": P(None)}
+    if norm_type == "nonparametric_ln":
+        return {}
+    raise ValueError(norm_type)
+
+
+def norm_apply(x: jax.Array, params: Tree, norm_type: str) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    if norm_type == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"])
+    if norm_type == "nonparametric_ln":
+        return layer_norm(x, None, None)
+    raise ValueError(norm_type)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP
+# ---------------------------------------------------------------------------
+
+
+def linear_init(init: Initializer, d_in: int, d_out: int, *, scale: float | None = None):
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return init.normal((d_in, d_out), s)
+
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def mlp_init(init: Initializer, d: int, f: int, gated: bool) -> Tree:
+    p = {
+        "w_in": linear_init(init, d, f),
+        "w_out": linear_init(init, f, d),
+    }
+    if gated:
+        p["w_gate"] = linear_init(init, d, f)
+    return p
+
+
+def mlp_specs(gated: bool, model_axis: str = "model") -> Tree:
+    p = {"w_in": P(None, model_axis), "w_out": P(model_axis, None)}
+    if gated:
+        p["w_gate"] = P(None, model_axis)
+    return p
+
+
+def mlp_apply(x: jax.Array, params: Tree, act: str, tp: TPContext) -> jax.Array:
+    """Megatron MLP: col-sharded in, row-sharded out, one psum."""
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(dt))
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = _ACTS[act](g) * h
+    else:
+        h = _ACTS[act](h)
+    y = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(dt))
+    return checkpoint_name(tp.psum(y), "tp_psum")
+
+
+# ---------------------------------------------------------------------------
+# Embedding + vocab-sharded LM head / loss
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(init: Initializer, vocab_padded: int, d: int) -> Tree:
+    return {"table": init.normal((vocab_padded, d), 0.02)}
+
+
+def embedding_specs(model_axis: str = "model") -> Tree:
+    return {"table": P(model_axis, None)}
+
+
+def embed_lookup(ids: jax.Array, table: jax.Array, tp: TPContext, vocab_padded: int):
+    """Lookup with a vocab-sharded table: local one-sided gather + psum.
+
+    ``table`` local shape (V/tp, d); ids are global token ids.
+    """
+    dt = table.dtype
+    v_local = table.shape[0]
+    lo = tp.axis_index() * v_local
+    local_ids = ids - lo
+    hit = (local_ids >= 0) & (local_ids < v_local)
+    safe = jnp.clip(local_ids, 0, v_local - 1)
+    emb = jnp.take(table, safe, axis=0)
+    emb = jnp.where(hit[..., None], emb, jnp.zeros((), dt))
+    return tp.psum(emb)
+
+
+def lm_head_logits(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., d); w local (d, V/tp) -> local logits (..., V/tp)."""
+    return jnp.einsum("...d,dv->...v", x, w.astype(x.dtype))
+
+
+def softmax_xent_sharded(
+    logits_local: jax.Array,
+    targets: jax.Array,
+    tp: TPContext,
+    *,
+    vocab_size: int,
+    vocab_padded: int,
+    mask: jax.Array | None = None,
+    z_loss: float = 0.0,
+):
+    """Cross entropy over a vocab-sharded logits tensor.
+
+    ``logits_local``: (T, V/tp) fp32-castable; ``targets``: (T,) global ids.
+    Padded vocab entries are excluded via masking; max / log-sum-exp / label
+    logit are combined across the model axis with psums.
+    """
+    lg = logits_local.astype(jnp.float32)
+    v_local = lg.shape[-1]
+    lo = tp.axis_index() * v_local
+    col = lo + jnp.arange(v_local)
+    valid = col < vocab_size
+    lg = jnp.where(valid, lg, -1e30)
+
+    mx = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    if tp.enabled:
+        mx = pmax_stopgrad(mx, tp.axis)
+    lg = lg - mx
+    sumexp = tp.psum(jnp.sum(jnp.exp(lg), axis=-1))
+    local_t = targets - lo
+    hit = (local_t >= 0) & (local_t < v_local)
+    safe = jnp.clip(local_t, 0, v_local - 1)
+    label_logit = tp.psum(
+        jnp.where(hit, jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0], 0.0)
+    )
+    logz = jnp.log(sumexp)
+    nll = logz - label_logit
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(logz + mx[..., 0])
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = jnp.asarray(nll.size, jnp.float32)
+    return jnp.sum(nll) / denom

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts layer (granite-moe family): top-k router + capacity
+dispatch, TPU-native.
+
+Dispatch is the sort-free "cumsum position + gather/scatter" dropless-with-
+capacity scheme: every token's slot within its expert is its running count
+(in token order); tokens beyond ``capacity`` are dropped (capacity_factor
+1.25 by default, as in GShard/Switch).  Expert compute is a single grouped
+einsum over (E_local, C, d) buffers — static shapes, MXU-friendly, no
+(T, E, C) one-hot monster.
+
+Expert sharding over the model axis picks the first exact fit:
+* ``E % tp == 0``      -> expert parallelism (granite-1b: 32 experts / 16);
+* ``d_ff % tp == 0``   -> tensor parallelism inside every expert
+                          (granite-3b: 40 experts, 512 d_ff / 16);
+* otherwise replicated.
+Either way each device scatter-adds its partial token outputs and one psum
+combines them — the same collective as the dense-MLP path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import Initializer, TPContext, _ACTS
+
+Tree = Any
+
+__all__ = ["moe_init", "moe_specs", "moe_forward", "moe_capacity"]
+
+
+def moe_capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = math.ceil(cfg.top_k * tokens * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU-friendly shapes
+
+
+def _expert_sharding(cfg: ModelConfig, tp: int) -> str:
+    if tp == 1:
+        return "replicated"
+    if cfg.n_experts % tp == 0:
+        return "expert"
+    if cfg.d_ff % tp == 0:
+        return "ffn"
+    return "replicated"
+
+
+def moe_init(init: Initializer, cfg: ModelConfig) -> Tree:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": init.normal((d, E), 1.0 / math.sqrt(d)),
+        "w_in": init.normal((E, d, f), 1.0 / math.sqrt(d)),
+        "w_out": init.normal((E, f, d), 1.0 / math.sqrt(f)),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = init.normal((E, d, f), 1.0 / math.sqrt(d))
+    return p
+
+
+def moe_specs(cfg: ModelConfig, tp: int, model_axis: str = "model") -> Tree:
+    mode = _expert_sharding(cfg, tp)
+    m = model_axis
+    if mode == "expert":
+        win, wout = P(m, None, None), P(m, None, None)
+    elif mode == "ffn":
+        win, wout = P(None, None, m), P(None, m, None)
+    else:
+        win, wout = P(None, None, None), P(None, None, None)
+    p = {"router": P(None, None), "w_in": win, "w_out": wout}
+    if cfg.gated_mlp:
+        p["w_gate"] = win
+    return p
+
+
+def moe_forward(
+    x: jax.Array,
+    params: Tree,
+    cfg: ModelConfig,
+    tp_ctx: TPContext,
+):
+    """x: (B, S, d) replicated -> ((B, S, d) replicated, aux dict)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    # ---- router (fp32) ----
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- aux losses (Switch load-balance + router z-loss) ----
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux_lb = E * jnp.sum(me * ce)
+    aux_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_load_balance": aux_lb, "moe_router_z": aux_z}
+
+    # ---- capacity positions: running count per expert in token order ----
+    C = moe_capacity(cfg, T)
+    flat_e = expert_idx.reshape(-1)  # (T*k,) expert of each assignment
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # position among same-expert assigns
+    pos = jnp.sum(pos * onehot, axis=-1)  # (T*k,)
+    keep = pos < C
+
+    # dispatch tables: token index + gate per (expert, slot)
+    tok_of = jnp.arange(T).repeat(k)  # (T*k,)
+    slot_e = jnp.where(keep, flat_e, E)  # dropped -> OOB expert row
+    table = jnp.full((E + 1, C), T, jnp.int32)  # T = OOB token -> zero pad
+    table = table.at[slot_e, jnp.where(keep, pos, 0)].set(
+        jnp.where(keep, tok_of, T), mode="drop"
+    )
+    gtable = jnp.zeros((E + 1, C), jnp.float32)
+    gtable = gtable.at[slot_e, jnp.where(keep, pos, 0)].set(
+        jnp.where(keep, gate_vals.reshape(-1), 0.0), mode="drop"
+    )
+    table, gtable = table[:E], gtable[:E]
+
+    # ---- local expert slab ----
+    E_local = params["w_in"].shape[0]
+    if E_local < E:  # expert-parallel: slice this device's rows
+        lo = tp_ctx.axis_index() * E_local
+        table_l = jax.lax.dynamic_slice_in_dim(table, lo, E_local, axis=0)
+        gtable_l = jax.lax.dynamic_slice_in_dim(gtable, lo, E_local, axis=0)
+    else:
+        table_l, gtable_l = table, gtable
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)  # OOB row
+    xin = jnp.take(xpad, table_l, axis=0)  # (E_local, C, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xin, params["w_in"].astype(dt))
+    if "w_gate" in params:
+        g = jnp.einsum("ecd,edf->ecf", xin, params["w_gate"].astype(dt))
+        h = _ACTS[cfg.act](g) * h
+    else:
+        h = _ACTS[cfg.act](h)
+    y = jnp.einsum("ecf,efd->ecd", h, params["w_out"].astype(dt))
+    y = y * gtable_l[..., None].astype(dt)
+
+    # ---- combine: scatter-add partial outputs, then one psum ----
+    out = jnp.zeros((T + 1, d), jnp.float32)
+    out = out.at[table_l.reshape(-1)].add(
+        y.reshape(-1, d).astype(jnp.float32), mode="drop"
+    )
+    out = out[:T]
+    if _expert_sharding(cfg, tp_ctx.size) == "replicated":
+        pass  # every device already holds the full output; no reduction
+    else:
+        out = tp_ctx.psum(out)
+    return out.reshape(B, S, d).astype(dt), aux

@@ -1,0 +1,101 @@
+"""ResNet-20 for CIFAR — the paper's own experimental domain.
+
+The ImageNet/ResNet-50 runs in the paper are out of scope for this
+container, but the *architecture family* the paper trains is represented so
+the decentralized optimizers are exercised on conv nets too (Table 1/3
+proxies in benchmarks/batchsize_accuracy.py use the quadratic; this model
+backs the examples and integration tests on synthetic 32x32 data).
+
+Pure-JAX, no TP (the paper treats each 8-GPU server as one node; a CIFAR
+ResNet fits trivially on one device): batch-norm is replaced with group
+norm so per-node statistics stay local (standard practice for decentralized
+training, avoids cross-node BN sync).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Initializer
+
+Tree = Any
+
+__all__ = ["resnet20_init", "resnet20_apply", "resnet20_loss"]
+
+_STAGES = (16, 32, 64)
+_BLOCKS_PER_STAGE = 3  # ResNet-20 = 6n+2 with n=3
+
+
+def _conv_init(init: Initializer, k: int, cin: int, cout: int):
+    return init.normal((k, k, cin, cout), math.sqrt(2.0 / (k * k * cin)))
+
+
+def _gn_init(c: int):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def resnet20_init(key: jax.Array, n_classes: int = 10) -> Tree:
+    init = Initializer(key)
+    p: Tree = {"stem": _conv_init(init, 3, 3, _STAGES[0]), "stem_gn": _gn_init(_STAGES[0])}
+    cin = _STAGES[0]
+    for si, c in enumerate(_STAGES):
+        for bi in range(_BLOCKS_PER_STAGE):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {
+                "conv1": _conv_init(init, 3, cin, c),
+                "gn1": _gn_init(c),
+                "conv2": _conv_init(init, 3, c, c),
+                "gn2": _gn_init(c),
+            }
+            if stride != 1 or cin != c:
+                blk["proj"] = _conv_init(init, 1, cin, c)
+            p[f"s{si}b{bi}"] = blk
+            cin = c
+    p["head"] = init.normal((cin, n_classes), 1.0 / math.sqrt(cin))
+    return p
+
+
+def _gn(x, gp, groups: int = 8, eps: float = 1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xr = x.reshape(n, h, w, g, c // g).astype(jnp.float32)
+    mu = xr.mean(axis=(1, 2, 4), keepdims=True)
+    var = xr.var(axis=(1, 2, 4), keepdims=True)
+    xr = (xr - mu) * jax.lax.rsqrt(var + eps)
+    x = xr.reshape(n, h, w, c)
+    return (x * gp["scale"] + gp["bias"]).astype(x.dtype)
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def resnet20_apply(params: Tree, images: jax.Array) -> jax.Array:
+    """images: (B, 32, 32, 3) -> logits (B, n_classes)."""
+    x = jax.nn.relu(_gn(_conv(images, params["stem"]), params["stem_gn"]))
+    cin = _STAGES[0]
+    for si, c in enumerate(_STAGES):
+        for bi in range(_BLOCKS_PER_STAGE):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = params[f"s{si}b{bi}"]
+            h = jax.nn.relu(_gn(_conv(x, blk["conv1"], stride), blk["gn1"]))
+            h = _gn(_conv(h, blk["conv2"]), blk["gn2"])
+            sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+            x = jax.nn.relu(h + sc)
+            cin = c
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]
+
+
+def resnet20_loss(params: Tree, images: jax.Array, labels: jax.Array):
+    logits = resnet20_apply(params, images)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), {"accuracy": acc}

@@ -1,0 +1,196 @@
+"""Selective SSM (Mamba-style) branch — used by hymba's parallel heads.
+
+TP scheme: the inner channel dimension ``d_ssm`` is column-sharded (the SSM
+recurrence is diagonal per channel, so channels shard freely); the (small)
+B/C/dt projections are row-sharded with one psum; out-proj is row-sharded
+with one psum.  The scan runs chunked: a ``lax.scan`` over chunks carries
+(h, conv_tail) while an associative scan parallelizes within the chunk —
+bounded memory with full parallelism inside chunks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import Initializer, TPContext, linear_init
+
+Tree = Any
+
+__all__ = [
+    "ssm_init",
+    "ssm_specs",
+    "ssm_forward",
+    "init_ssm_state",
+    "ssm_state_specs",
+    "ssm_decode_step",
+]
+
+DT_RANK_DIV = 16
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / DT_RANK_DIV))
+
+
+def ssm_init(init: Initializer, cfg: ModelConfig) -> Tree:
+    d, ds, N = cfg.d_model, cfg.d_ssm_inner, cfg.ssm_state
+    r = _dt_rank(cfg)
+    return {
+        "in_proj": init.normal((d, 2, ds), 1.0 / math.sqrt(d)),
+        "conv_w": init.normal((cfg.ssm_conv, ds), 1.0 / math.sqrt(cfg.ssm_conv)),
+        "conv_b": init.zeros((ds,)),
+        "x_proj": linear_init(init, ds, r + 2 * N),
+        "dt_proj": linear_init(init, r, ds),
+        "dt_bias": init.normal((ds,), 0.1),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (ds, N))
+        ),
+        "D": init.ones((ds,)),
+        "out_proj": linear_init(init, ds, d),
+    }
+
+
+def ssm_specs(cfg: ModelConfig, model_axis: str = "model") -> Tree:
+    m = model_axis
+    return {
+        "in_proj": P(None, None, m),  # (d, 2, ds): ds sharded, x/z aligned
+        "conv_w": P(None, m),
+        "conv_b": P(m),
+        "x_proj": P(m, None),    # row-sharded -> psum
+        "dt_proj": P(None, m),
+        "dt_bias": P(m),
+        "A_log": P(m, None),
+        "D": P(m),
+        "out_proj": P(m, None),  # row-sharded -> psum
+    }
+
+
+def _split_in_proj(w: jax.Array, ds_local: int):
+    """in_proj local (d, 2, ds_local): [:, 0] = x branch, [:, 1] = z branch.
+
+    Keeping the branch axis explicit means a column shard of ds gives every
+    device *aligned* x/z halves (a flat (d, 2 ds) layout would not)."""
+    return w[:, 0], w[:, 1]
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """x: (B, S, ds); w: (k, ds) depthwise; tail: (B, k-1, ds) carried state."""
+    kk = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], kk - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(kk)
+    )
+    new_tail = xp[:, -(kk - 1) :] if kk > 1 else tail
+    return out + b[None, None, :], new_tail
+
+
+def _selective_scan_chunk(a, bx, h0):
+    """h_t = a_t * h_{t-1} + bx_t within a chunk via associative scan.
+
+    a, bx: (B, C, ds, N); h0: (B, ds, N).  Returns (h_all, h_last)."""
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    pa, pb = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h_all = pa * h0[:, None] + pb
+    return h_all, h_all[:, -1]
+
+
+def ssm_forward(
+    x: jax.Array,
+    params: Tree,
+    cfg: ModelConfig,
+    tp_ctx: TPContext,
+    *,
+    chunk: int = 128,
+    state: Tree | None = None,
+    return_state: bool = False,
+):
+    """x: (B, S, d) replicated -> (B, S, d) replicated (after psum)."""
+    B, S, d = x.shape
+    dt = x.dtype
+    N = cfg.ssm_state
+    r = _dt_rank(cfg)
+    ds_local = params["conv_b"].shape[0]
+
+    wx, wz = _split_in_proj(params["in_proj"].astype(dt), ds_local)
+    xs = jnp.einsum("bsd,de->bse", x, wx)
+    z = jnp.einsum("bsd,de->bse", x, wz)
+
+    conv_tail = state["conv"] if state is not None else None
+    xs, new_tail = _causal_conv(xs, params["conv_w"].astype(dt), params["conv_b"].astype(dt), conv_tail)
+    xs = jax.nn.silu(xs)
+
+    # B, C, dt from the (row-sharded) x_proj: psum reassembles full features
+    dbl = tp_ctx.psum(jnp.einsum("bse,ef->bsf", xs, params["x_proj"].astype(dt)))
+    dt_lr, Bc, Cc = jnp.split(dbl.astype(jnp.float32), [r, r + N], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_lr, params["dt_proj"].astype(jnp.float32))
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B, S, ds_local)
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (ds_local, N)
+    a = jnp.exp(delta[..., None] * A[None, None])  # (B, S, ds, N)
+    bx = (delta * xs.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+
+    from ..utils import zeros_with_vma
+
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else zeros_with_vma((B, ds_local, N), jnp.float32, a)
+    )
+    ck = min(chunk, S)
+    if S % ck != 0:
+        ck = S
+    nc = S // ck
+
+    def body(h, inputs):
+        ac, bxc, Cck = inputs
+        h_all, h_last = _selective_scan_chunk(ac, bxc, h)
+        y = jnp.einsum("bcen,bcn->bce", h_all, Cck)
+        return h_last, y
+
+    split = lambda t: jnp.moveaxis(t.reshape(B, nc, ck, *t.shape[2:]), 1, 0)
+    h_last, ys = jax.lax.scan(body, h0, (split(a), split(bx), split(Cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, ds_local)
+    y = y + params["D"].astype(jnp.float32)[None, None] * xs.astype(jnp.float32)
+    y = (y.astype(dt)) * jax.nn.silu(z)
+    out = tp_ctx.psum(jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt)))
+    if return_state:
+        return out, {"h": h_last, "conv": new_tail.astype(jnp.float32)}
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, n_layers: int, batch: int, tp: int) -> Tree:
+    ds_local = cfg.d_ssm_inner // tp if cfg.d_ssm_inner % tp == 0 else cfg.d_ssm_inner
+    return {
+        "h": jnp.zeros((n_layers, batch, ds_local, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, ds_local), jnp.float32),
+    }
+
+
+def ssm_state_specs(batch_axes, model_axis: str = "model") -> Tree:
+    return {
+        "h": P(None, batch_axes, model_axis, None),
+        "conv": P(None, batch_axes, None, model_axis),
+    }
+
+
+def ssm_decode_step(x, params, state_layer, cfg, tp_ctx):
+    """x: (B, 1, d); state_layer: {'h': (B, ds, N), 'conv': (B, k-1, ds)}."""
+    out, new_state = ssm_forward(
+        x, params, cfg, tp_ctx, chunk=1, state=state_layer, return_state=True
+    )
+    return out, new_state

@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+mLSTM (pre-up-projection variant, xLSTM paper Fig. 9 left): the residual
+stream is up-projected by ``proj_factor``; q/k/v and exponential gates are
+computed in the inner space; the chunk-parallel cell (shared with the
+``mlstm_chunk`` kernel — the ref there is the single source of truth) runs
+per head; a gated (SiLU) skip branch modulates the output before the
+down-projection.
+
+TP: v-projection and the cell's value dimension are sharded over the model
+axis (matrix memory shards along dv); q/k are computed replicated (the
+k-dimension enters the state contraction so sharding it would psum every
+chunk); gates replicated (they are H scalars per token).  Down-proj
+row-sharded -> one psum.  sLSTM blocks are replicated across TP (the scalar
+recurrence is latency-bound; sharding it buys nothing — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..kernels.mlstm_chunk import ref as mlstm_ref
+from ..kernels.mlstm_chunk.ops import mlstm as mlstm_op
+from .layers import Initializer, TPContext, linear_init
+
+Tree = Any
+
+__all__ = [
+    "mlstm_init",
+    "mlstm_specs",
+    "mlstm_forward",
+    "init_mlstm_state",
+    "mlstm_state_specs",
+    "mlstm_decode_step",
+    "slstm_init",
+    "slstm_specs",
+    "slstm_forward",
+    "init_slstm_state",
+    "slstm_state_specs",
+    "slstm_decode_step",
+]
+
+
+def _inner(cfg: ModelConfig) -> int:
+    return int(cfg.proj_factor * cfg.d_model)
+
+
+def _head_dims(cfg: ModelConfig) -> tuple[int, int]:
+    di = _inner(cfg)
+    assert di % cfg.n_heads == 0
+    return cfg.n_heads, di // cfg.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(init: Initializer, cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    di = _inner(cfg)
+    H, dh = _head_dims(cfg)
+    return {
+        "up": linear_init(init, d, di),
+        "gate": init.normal((d, H, dh), 1.0 / math.sqrt(d)),
+        "wq": init.normal((di, H, dh), 1.0 / math.sqrt(di)),
+        "wk": init.normal((di, H, dh), 1.0 / math.sqrt(di)),
+        "wv": init.normal((di, H, dh), 1.0 / math.sqrt(di)),
+        "w_i": linear_init(init, di, cfg.n_heads),
+        "w_f": linear_init(init, di, cfg.n_heads),
+        "f_bias": init.ones((cfg.n_heads,)) * 3.0,  # open forget gates at init
+        "down": init.normal((H, dh, d), 1.0 / math.sqrt(di)),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig, model_axis: str = "model") -> Tree:
+    m = model_axis
+    return {
+        "up": P(None, None),
+        "gate": P(None, None, m),  # (d, H, dh): dv-aligned elementwise gating
+        "wq": P(None, None, None),
+        "wk": P(None, None, None),
+        "wv": P(None, None, m),   # shard value dim -> matrix memory shards on dv
+        "w_i": P(None, None),
+        "w_f": P(None, None),
+        "f_bias": P(None),
+        "down": P(None, m, None),  # (H, dh, d) row-sharded on dv -> psum
+    }
+
+
+def mlstm_forward(
+    x: jax.Array,
+    params: Tree,
+    cfg: ModelConfig,
+    tp_ctx: TPContext,
+    *,
+    chunk: int = 128,
+    impl: str = "ref",
+    state: Tree | None = None,
+    return_state: bool = False,
+):
+    """x: (B, S, d) replicated -> (B, S, d) replicated."""
+    B, S, d = x.shape
+    dt = x.dtype
+    H, dh = _head_dims(cfg)
+    dv_local = params["wv"].shape[-1]
+
+    xi = jnp.einsum("bsd,de->bse", x, params["up"].astype(dt))  # (B,S,di)
+    q = jnp.einsum("bse,ehk->bhsk", xi, params["wq"].astype(dt))
+    k = jnp.einsum("bse,ehk->bhsk", xi, params["wk"].astype(dt))
+    v = jnp.einsum("bse,ehk->bhsk", xi, params["wv"].astype(dt))  # dv sharded
+    i_raw = jnp.einsum("bse,eh->bhs", xi, params["w_i"].astype(dt)).astype(jnp.float32)
+    f_raw = (
+        jnp.einsum("bse,eh->bhs", xi, params["w_f"].astype(dt)).astype(jnp.float32)
+        + params["f_bias"].astype(jnp.float32)[None, :, None]
+    )
+
+    if state is None:
+        h, new_state = mlstm_op(q, k, v, i_raw, f_raw, chunk=chunk, impl=impl)
+    else:
+        hs, new_state = mlstm_ref.mlstm_chunked(
+            q, k, v, i_raw, f_raw, state=state, chunk=min(chunk, S)
+        )
+        h = hs
+    h = h.astype(dt)  # (B, H, S, dv_local)
+
+    # gated skip: gate param is (d, H, dh)-sharded on dh, aligned with h
+    hh = h.transpose(0, 2, 1, 3)  # (B, S, H, dv_local)
+    g = jnp.einsum("bsd,dhe->bshe", x, params["gate"].astype(dt))
+    hh = hh * jax.nn.silu(g)
+    out = tp_ctx.psum(jnp.einsum("bshe,hed->bsd", hh, params["down"].astype(dt)))
+    if return_state:
+        return out, new_state
+    return out
+
+
+def init_mlstm_state(cfg: ModelConfig, n_layers: int, batch: int, tp: int) -> Tree:
+    H, dh = _head_dims(cfg)
+    dv_local = dh // tp if dh % tp == 0 else dh
+    return {
+        "C": jnp.zeros((n_layers, batch, H, dh, dv_local), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, H, dh), jnp.float32),
+        "m": jnp.zeros((n_layers, batch, H), jnp.float32),
+    }
+
+
+def mlstm_state_specs(batch_axes, model_axis: str = "model") -> Tree:
+    return {
+        "C": P(None, batch_axes, None, None, model_axis),
+        "n": P(None, batch_axes, None, None),
+        "m": P(None, batch_axes, None),
+    }
+
+
+def mlstm_decode_step(x, params, state_layer, cfg, tp_ctx):
+    out, new_state = mlstm_forward(
+        x, params, cfg, tp_ctx, chunk=1, state=state_layer, return_state=True
+    )
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, strictly recurrent)
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(init: Initializer, cfg: ModelConfig) -> Tree:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_zifo": init.normal((d, 4 * d), s),
+        "r_zifo": init.normal((H, dh, 4 * dh), 1.0 / math.sqrt(dh)),
+        "b_zifo": init.zeros((4 * d,)),
+        "out": linear_init(init, d, d),
+    }
+
+
+def slstm_specs(cfg: ModelConfig, model_axis: str = "model") -> Tree:
+    # replicated: scalar recurrence is latency-bound, params are small
+    return {
+        "w_zifo": P(None, None),
+        "r_zifo": P(None, None, None),
+        "b_zifo": P(None),
+        "out": P(None, None),
+    }
+
+
+def _slstm_cell(carry, wx, r_zifo, H, dh):
+    """carry: (c, n, m, h_prev) each (B, d) [m: (B, d)]; wx: (B, 4d)."""
+    c, n, m, h_prev = carry
+    B = c.shape[0]
+    hh = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhe,hef->bhf", hh, r_zifo)  # (B, H, 4*dh)
+    # realign per-head [z|i|f|o] blocks with wx's global [z(d)|i(d)|f(d)|o(d)]
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * H * dh)
+    zifo = (wx + rec).astype(jnp.float32)
+    z, i_raw, f_raw, o_raw = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o_raw)
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    ip = jnp.exp(i_raw - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c_new = fp * c + ip * z
+    n_new = fp * n + ip
+    h = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h), h
+
+
+def slstm_forward(
+    x: jax.Array,
+    params: Tree,
+    cfg: ModelConfig,
+    tp_ctx: TPContext,
+    *,
+    chunk: int = 256,
+    state: Tree | None = None,
+    return_state: bool = False,
+):
+    B, S, d = x.shape
+    dt = x.dtype
+    H = cfg.n_heads
+    dh = d // H
+    wx = jnp.einsum("bsd,df->bsf", x, params["w_zifo"].astype(dt)) + params[
+        "b_zifo"
+    ].astype(dt)
+    r = params["r_zifo"].astype(jnp.float32)
+
+    if state is None:
+        from ..utils import zeros_with_vma
+
+        zeros = zeros_with_vma((B, d), jnp.float32, wx)
+        carry = (zeros, zeros, zeros, zeros)
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+
+    ck = min(chunk, S)
+    if S % ck != 0:
+        ck = S
+    nc = S // ck
+
+    def chunk_fn(carry, wxc):
+        def step(cr, w1):
+            return _slstm_cell(cr, w1.astype(jnp.float32), r, H, dh)
+
+        carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(wxc, 1, 0))
+        return carry, jnp.moveaxis(hs, 0, 1)
+
+    chunk_fn = jax.checkpoint(chunk_fn)
+    wxs = jnp.moveaxis(wx.reshape(B, nc, ck, 4 * d), 1, 0)
+    carry, hs = jax.lax.scan(chunk_fn, carry, wxs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(dt)
+    out = jnp.einsum("bsd,df->bsf", h, params["out"].astype(dt))
+    if return_state:
+        c, n, m, hlast = carry
+        return out, {"c": c, "n": n, "m": m, "h": hlast}
+    return out
+
+
+def init_slstm_state(cfg: ModelConfig, n_layers: int, batch: int) -> Tree:
+    d = cfg.d_model
+    z = jnp.zeros((n_layers, batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def slstm_state_specs(batch_axes) -> Tree:
+    p = P(None, batch_axes, None)
+    return {"c": p, "n": p, "m": p, "h": p}
+
+
+def slstm_decode_step(x, params, state_layer, cfg, tp_ctx):
+    out, new_state = slstm_forward(
+        x, params, cfg, tp_ctx, chunk=1, state=state_layer, return_state=True
+    )
+    return out, new_state

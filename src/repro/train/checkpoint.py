@@ -1,0 +1,134 @@
+"""Checkpoint / restart / elastic rescale.
+
+Fault-tolerance contract (DESIGN.md §6):
+
+* **atomic**: state is written to ``<dir>/tmp.<step>`` then renamed to
+  ``<dir>/step_<k>`` — a crash mid-write never corrupts the latest
+  checkpoint;
+* **exact restart**: restoring with the same node count is bit-identical
+  (stacked per-node replicas + optimizer state + step counter);
+* **elastic rescale**: restoring with a different node count
+  consensus-collapses the replicas (the decentralized average *is* the
+  model — paper Sec. 3) and re-broadcasts to the new node set; momentum is
+  mean-collapsed the same way.  Topology/weights are re-derived by the
+  caller for the new n.
+
+Storage is .npz per pytree bucket + a JSON manifest; keys are the pytree
+paths, so restore needs no pickled treedefs.  For multi-host pods each
+process would write its address-space shard under ``shard_<proc>/`` — the
+single-process container writes one shard.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "elastic_reshape",
+]
+
+
+def _flatten(tree: Tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Tree:
+    tree: Tree = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return tree
+
+
+def save_checkpoint(directory: str, state: Tree, *, metadata: dict | None = None):
+    step = int(state["step"])
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(prefix=f"tmp.{step}.", dir=directory)
+    try:
+        flat = _flatten(state)
+        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        manifest = {
+            "step": step,
+            "keys": sorted(flat),
+            "n_nodes": int(state["params"][next(iter(state["params"]))]["table"].shape[0])
+            if "embed" in state.get("params", {})
+            else None,
+            **(metadata or {}),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        final = os.path.join(directory, f"step_{step:08d}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and d.split("_")[1].isdigit()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int | None = None) -> tuple[Tree, dict]:
+    step = latest_step(directory) if step is None else step
+    assert step is not None, f"no checkpoints under {directory}"
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(d, "state.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    state = _unflatten(flat)
+    state.setdefault("comp", {})  # empty-subtree keys are dropped by savez
+    return state, manifest
+
+
+def elastic_reshape(state: Tree, new_n_nodes: int) -> Tree:
+    """Consensus-collapse the stacked replicas and re-broadcast to a new n.
+
+    Works for both shrink (node failure) and grow (scale-out).  Compression
+    error-feedback state is reset (it is node-local by definition).
+    """
+
+    def collapse(x):
+        mean = jnp.mean(jnp.asarray(x, jnp.float32), axis=0, keepdims=True)
+        out = jnp.broadcast_to(mean, (new_n_nodes,) + x.shape[1:])
+        return out.astype(x.dtype)
+
+    new = dict(state)
+    new["params"] = jax.tree.map(collapse, state["params"])
+    new["opt"] = jax.tree.map(collapse, state.get("opt", {}))
+    new["comp"] = jax.tree.map(
+        lambda x: jnp.zeros_like(collapse(x)), state.get("comp", {})
+    )
+    return new

@@ -1,0 +1,142 @@
+"""Serve step builders (prefill / decode) over the production mesh.
+
+Serving uses the *consensus* model: parameters are replicated across the
+node axes (the decentralized average is the model you ship) and sharded only
+over the model axis; request batches shard across the node axes when
+divisible (long_500k has global_batch=1, which stays replicated — noted in
+EXPERIMENTS.md).  KV caches are sequence-sharded over the model axis
+(split-K decode, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..models import transformer as T
+from ..models.layers import TPContext
+
+Tree = Any
+
+__all__ = ["ServeConfig", "build_prefill_step", "build_decode_step", "serve_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    runtime: T.RuntimeConfig = T.RuntimeConfig()
+    target_len: int = 0  # cache capacity target (0 -> prefill length)
+
+
+def _batch_axes(global_batch: int, node_axes: tuple[str, ...], mesh):
+    n = 1
+    for a in node_axes:
+        n *= mesh.shape[a]
+    return node_axes if global_batch % n == 0 and global_batch >= n else None
+
+
+def serve_specs(
+    cfg: ModelConfig, mesh, *, global_batch: int,
+    node_axes: tuple[str, ...] = ("data",), model_axis: str = "model",
+):
+    ba = _batch_axes(global_batch, node_axes, mesh)
+    pspecs = T.param_specs(cfg, mesh.shape[model_axis], model_axis, serve=True)
+    cspecs = T.cache_specs(cfg, ba, model_axis)
+    tok = P(ba, None)
+    return pspecs, cspecs, tok, ba
+
+
+def build_prefill_step(
+    cfg: ModelConfig, mesh, scfg: ServeConfig, *, global_batch: int,
+    node_axes: tuple[str, ...] = ("data",), model_axis: str = "model",
+):
+    tp = mesh.shape[model_axis]
+    tp_ctx = TPContext(axis=model_axis, size=tp, in_shard_map=True)
+    pspecs, cspecs, tok_spec, ba = serve_specs(
+        cfg, mesh, global_batch=global_batch,
+        node_axes=node_axes, model_axis=model_axis,
+    )
+
+    bspec: Tree = {"tokens": tok_spec}
+    if cfg.family == "vlm":
+        bspec["patch_embeds"] = P(ba, None, None)
+    if cfg.arch_kind == "encdec":
+        bspec["enc_frames"] = P(ba, None, None)
+
+    def fn(params, batch):
+        return T.prefill(
+            params, batch, cfg, tp_ctx, scfg.runtime,
+            target_len=scfg.target_len or batch["tokens"].shape[1],
+        )
+
+    sm = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(pspecs, bspec),
+        out_specs=(P(ba, model_axis), cspecs),  # logits vocab-sharded
+        axis_names=set(node_axes) | {model_axis},
+    )
+    return jax.jit(sm), (pspecs, bspec, cspecs)
+
+
+def build_decode_step(
+    cfg: ModelConfig, mesh, scfg: ServeConfig, *, global_batch: int,
+    target_len: int,
+    node_axes: tuple[str, ...] = ("data",), model_axis: str = "model",
+):
+    tp = mesh.shape[model_axis]
+    tp_ctx = TPContext(axis=model_axis, size=tp, in_shard_map=True)
+    pspecs, cspecs, tok_spec, ba = serve_specs(
+        cfg, mesh, global_batch=global_batch,
+        node_axes=node_axes, model_axis=model_axis,
+    )
+
+    def fn(params, tokens, cache, t):
+        return T.decode_step(
+            params, tokens, cache, t, cfg, tp_ctx, scfg.runtime,
+            target_len=target_len,
+        )
+
+    sm = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(pspecs, tok_spec, cspecs, P()),
+        out_specs=(P(ba, model_axis), cspecs),  # logits vocab-sharded
+        axis_names=set(node_axes) | {model_axis},
+    )
+    return jax.jit(sm, donate_argnums=(2,)), (pspecs, tok_spec, cspecs)
+
+
+def abstract_cache(
+    cfg: ModelConfig, global_batch: int, target_len: int, mesh,
+    scfg: ServeConfig, *, node_axes=("data",), model_axis="model",
+):
+    """ShapeDtypeStruct cache for dry-run decode cells (global shapes)."""
+    tp = mesh.shape[model_axis]
+
+    def build():
+        return T.init_cache(cfg, global_batch, target_len, tp, scfg.runtime)
+
+    shapes = jax.eval_shape(build)
+
+    # init_cache returns *local* (per-model-shard) slot counts; scale the
+    # sharded axes back to global sizes for the jit-level stand-ins.
+    cspecs = T.cache_specs(
+        cfg, _batch_axes(global_batch, node_axes, mesh), model_axis
+    )
+
+    def to_global(x, spec):
+        shape = list(x.shape)
+        for i, axis in enumerate(spec):
+            if axis == model_axis:
+                shape[i] *= tp
+        return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
+
+    return jax.tree.map(
+        to_global, shapes, cspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )

@@ -1,0 +1,247 @@
+"""The decentralized train step: fully-manual shard_map over
+(pod, data, model).
+
+Per step, on every node (= one (pod, data) mesh index):
+
+1. squeeze this node's replica out of the stacked TrainState;
+2. local gradient over the node's batch shard (optionally microbatched with
+   fp32 accumulation, per-layer remat, bf16 compute);
+3. the selected algorithm's update, with gossip = ppermute edge classes over
+   the node axes and mean = psum (PmSGD / SlowMo sync);
+4. metrics psum-reduced to replicated scalars.
+
+The DecentLaM fast path (``fused_update=True``) routes the elementwise tail
+through the ``decentlam_update`` kernel (one HBM pass).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core.gossip import (
+    make_allgather_gossip,
+    make_ppermute_gossip,
+    make_psum_mean,
+    make_stacked_gossip,
+    make_stacked_mean,
+)
+from ..core.optimizers import OptimizerConfig, make_optimizer, _preprocess_grads
+from ..core.schedules import ScheduleConfig, build_schedule
+from ..core.topology import Topology, build_topology
+from ..kernels.decentlam_update.ops import decentlam_update
+from ..models import transformer as T
+from ..models.layers import TPContext
+from .train_state import stacked_state_specs
+
+Tree = Any
+
+__all__ = ["TrainConfig", "build_train_step", "batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    algorithm: str = "decentlam"
+    topology: str = "exp"
+    gossip_impl: str = "ppermute"  # ppermute | allgather (naive baseline)
+    compression: str | None = None
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0
+    grad_accum: int = 1
+    schedule: ScheduleConfig = ScheduleConfig()
+    runtime: T.RuntimeConfig = T.RuntimeConfig()
+    fused_update: bool = False
+    fused_impl: str = "ref"  # ref | pallas | pallas_interpret
+    gossip_serialize: bool = True  # one recv buffer live at a time (§Perf A-3)
+    track_consensus: bool = False
+
+    def opt_config(self) -> OptimizerConfig:
+        return OptimizerConfig(
+            algorithm=self.algorithm,
+            momentum=self.momentum,
+            weight_decay=self.weight_decay,
+            grad_clip=self.grad_clip,
+        )
+
+
+def batch_specs(cfg: ModelConfig, node_axes) -> Tree:
+    s: Tree = {"tokens": P(node_axes, None), "targets": P(node_axes, None)}
+    if cfg.family == "vlm":
+        s["patch_embeds"] = P(node_axes, None, None)
+    if cfg.arch_kind == "encdec":
+        s["enc_frames"] = P(node_axes, None, None)
+    return s
+
+
+def _consensus_metric(params: Tree, node_axes, n_nodes: int, model_axis) -> jax.Array:
+    """(1/n) sum_i ||x_i - x_bar||^2 across nodes (telemetry; averaged over
+    model shards so the scalar is replicated on every device)."""
+    total = jnp.float32(0.0)
+    for x in jax.tree.leaves(params):
+        xf = x.astype(jnp.float32)
+        xb = jax.lax.psum(xf, node_axes) / n_nodes
+        total = total + jax.lax.psum(jnp.sum((xf - xb) ** 2), node_axes) / n_nodes
+    return jax.lax.pmean(total, model_axis)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    mesh,
+    *,
+    node_axes: tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+):
+    """Returns (jitted train_step, state_specs, batch_specs)."""
+    n_nodes = 1
+    for a in node_axes:
+        n_nodes *= mesh.shape[a]
+    tp = mesh.shape[model_axis]
+    tp_ctx = TPContext(axis=model_axis, size=tp, in_shard_map=True)
+    rt = tcfg.runtime
+
+    topology = build_topology(tcfg.topology, n_nodes)
+    if (
+        tcfg.algorithm == "decentlam"
+        and topology.period > 1
+        and tcfg.momentum > 0.5
+    ):
+        import warnings
+
+        warnings.warn(
+            "DecentLaM's convergence analysis assumes a static mixing matrix"
+            " (paper Assumption A.3); with time-varying topologies the"
+            f" momentum on the gossip penalty can resonate at beta="
+            f"{tcfg.momentum} > 0.5. Consider beta <= 0.5 or a static"
+            " topology (see DESIGN.md §5).",
+            stacklevel=2,
+        )
+    opt = make_optimizer(tcfg.opt_config())
+    lr_fn = build_schedule(tcfg.schedule)
+
+    if tcfg.gossip_impl == "ppermute":
+        gossip = make_ppermute_gossip(
+            topology, node_axes, compression=tcfg.compression,
+            serialize=tcfg.gossip_serialize,
+        )
+    elif tcfg.gossip_impl == "allgather":
+        gossip = make_allgather_gossip(topology, node_axes)
+    else:
+        raise ValueError(tcfg.gossip_impl)
+    mean = make_psum_mean(node_axes, n_nodes)
+
+    def loss_fn(params, batch):
+        return T.forward_loss(params, batch, cfg, tp_ctx, rt)
+
+    def grads_of(params, batch):
+        accum = tcfg.grad_accum
+        if accum == 1:
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+            return g, loss, metrics
+
+        def reshape(x):
+            b = x.shape[0]
+            assert b % accum == 0, (b, accum)
+            return x.reshape(accum, b // accum, *x.shape[1:])
+
+        mbs = jax.tree.map(reshape, batch)
+
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            gsum = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32) / accum, gsum, g
+            )
+            return (gsum, lsum + l / accum), metrics
+
+        # zero carries must match the grads' shard_map variance exactly:
+        # grads mirror param variance (vma-aware AD inserts the psums), and
+        # the loss varies over the node axes (it is per-node data).
+        g0 = jax.tree.map(lambda x: (x * 0).astype(jnp.float32), params)
+        l0 = (batch["tokens"].ravel()[:1].sum() * 0).astype(jnp.float32)
+        (g, loss), metrics = jax.lax.scan(micro, (g0, l0), mbs)
+        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        return g, loss, metrics
+
+    def step_fn(state: Tree, batch: Tree):
+        params = jax.tree.map(lambda x: x[0], state["params"])
+        opt_state = jax.tree.map(lambda x: x[0], state["opt"])
+        comp_state = jax.tree.map(lambda x: x[0], state["comp"])
+        step_idx = state["step"]
+        lr = lr_fn(step_idx)
+
+        grads, loss, metrics = grads_of(params, batch)
+
+        if tcfg.fused_update and tcfg.algorithm == "decentlam":
+            # DecentLaM fast path: payload -> gossip -> fused kernel tail
+            x32 = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+            g = _preprocess_grads(tcfg.opt_config(), x32, grads)
+            payload = jax.tree.map(lambda x, gg: x - lr * gg, x32, g)
+            mixed, comp_state = gossip(payload, step_idx, comp_state)
+            new_params, new_m = decentlam_update(
+                x32, mixed, opt_state["m"], lr,
+                beta=tcfg.momentum, impl=tcfg.fused_impl,
+            )
+            new_params = jax.tree.map(
+                lambda p, np_: np_.astype(p.dtype), params, new_params
+            )
+            new_opt = dict(opt_state)
+            new_opt["m"] = new_m
+        else:
+            new_params, new_opt, comp_state = opt.step(
+                params,
+                grads,
+                opt_state,
+                lr=lr,
+                step_idx=step_idx,
+                gossip=gossip,
+                mean=mean,
+                comp_state=comp_state,
+            )
+
+        # replicated scalar metrics
+        out_metrics = {
+            "loss": jax.lax.pmean(loss, node_axes),
+            "lr": lr,
+            **{k: jax.lax.pmean(v, node_axes) for k, v in metrics.items()},
+        }
+        if tcfg.track_consensus:
+            out_metrics["consensus_sq"] = _consensus_metric(
+                new_params, node_axes, n_nodes, model_axis
+            )
+
+        new_state = {
+            "step": step_idx + 1,
+            "params": jax.tree.map(lambda x: x[None], new_params),
+            "opt": jax.tree.map(lambda x: x[None], new_opt),
+            "comp": jax.tree.map(lambda x: x[None], comp_state),
+        }
+        return new_state, out_metrics
+
+    sspecs = stacked_state_specs(
+        cfg, opt, tp, node_axes, model_axis, tcfg.compression
+    )
+    bspecs = batch_specs(cfg, node_axes)
+    mspecs = {"loss": P(), "lr": P(), "xent": P(),
+              "moe_load_balance": P(), "moe_router_z": P()}
+    if tcfg.track_consensus:
+        mspecs["consensus_sq"] = P()
+
+    all_axes = set(node_axes) | {model_axis}
+    step_sm = jax.shard_map(
+        step_fn,
+        mesh=mesh,
+        in_specs=(sspecs, bspecs),
+        out_specs=(sspecs, mspecs),
+        axis_names=all_axes,
+    )
+    return jax.jit(step_sm, donate_argnums=(0,)), sspecs, bspecs

@@ -1,0 +1,128 @@
+"""TrainState: stacked per-node parameters + optimizer state.
+
+Every leaf carries a leading *node* axis of size ``n_nodes`` — one model
+replica per decentralized node (DESIGN.md §4).  ``init_train_state`` builds
+it on-device through jit-with-out-shardings so each device only ever
+materializes its own shard (mandatory at 8B x 32 replicas); the dry-run uses
+``abstract_train_state`` (eval_shape, zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..core.gossip import init_compression_state
+from ..core.compression import get_compressor
+from ..core.optimizers import Optimizer
+from ..models import transformer as T
+
+Tree = Any
+
+__all__ = [
+    "stacked_param_specs",
+    "stacked_state_specs",
+    "make_train_state_fn",
+    "init_train_state",
+    "abstract_train_state",
+]
+
+
+def _prepend_axis(spec_tree: Tree, axes) -> Tree:
+    return jax.tree.map(
+        lambda s: P(axes, *s), spec_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def stacked_param_specs(cfg: ModelConfig, tp: int, node_axes, model_axis="model"):
+    return _prepend_axis(T.param_specs(cfg, tp, model_axis), node_axes)
+
+
+def stacked_state_specs(
+    cfg: ModelConfig, opt: Optimizer, tp: int, node_axes, model_axis="model",
+    compression: str | None = None,
+) -> Tree:
+    """Specs for the full TrainState pytree (params + opt state + step)."""
+    from ..core.optimizers import state_keys
+
+    pspec = T.param_specs(cfg, tp, model_axis)
+    # every optimizer state bucket mirrors the param tree
+    opt_state_spec: Tree = {k: pspec for k in state_keys(opt.config)}
+    compressor = get_compressor(compression)
+    has_comp_state = compressor.name.startswith("topk")
+    return {
+        "step": P(),
+        "params": _prepend_axis(pspec, node_axes),
+        "opt": _prepend_axis(opt_state_spec, node_axes),
+        "comp": _prepend_axis(pspec, node_axes) if has_comp_state else {},
+    }
+
+
+def make_train_state_fn(
+    cfg: ModelConfig,
+    opt: Optimizer,
+    n_nodes: int,
+    tp: int,
+    compression: str | None = None,
+):
+    """Pure init function (jit-able with out_shardings)."""
+    compressor = get_compressor(compression)
+    has_comp_state = compressor.name.startswith("topk")
+
+    def init_fn(key):
+        params = T.init_params(key, cfg, tp)
+
+        def stack(x):
+            return jnp.broadcast_to(x[None], (n_nodes,) + x.shape)
+
+        sp = jax.tree.map(stack, params)
+        opt_state = jax.tree.map(stack, opt.init(params))
+        comp = (
+            jax.tree.map(stack, init_compression_state(compressor, params))
+            if has_comp_state
+            else {}
+        )
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "params": sp,
+            "opt": opt_state,
+            "comp": comp,
+        }
+
+    return init_fn
+
+
+def init_train_state(
+    key,
+    cfg: ModelConfig,
+    opt: Optimizer,
+    n_nodes: int,
+    tp: int,
+    *,
+    mesh=None,
+    node_axes=None,
+    model_axis: str = "model",
+    compression: str | None = None,
+):
+    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, compression)
+    if mesh is None:
+        return init_fn(key)
+    specs = stacked_state_specs(cfg, opt, tp, node_axes, model_axis, compression)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
+    )
+    return jax.jit(init_fn, out_shardings=shardings)(key)
+
+
+def abstract_train_state(
+    cfg: ModelConfig, opt: Optimizer, n_nodes: int, tp: int,
+    compression: str | None = None,
+):
+    """ShapeDtypeStruct pytree of the TrainState (dry-run input stand-in)."""
+    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, compression)
+    return jax.eval_shape(init_fn, jax.random.key(0))

@@ -1,0 +1,20 @@
+"""Small shared utilities."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["zeros_with_vma"]
+
+
+def zeros_with_vma(shape, dtype, like):
+    """Zeros that carry the same manual-axes variance as ``like``.
+
+    Inside a fully-manual shard_map, ``lax.scan`` requires carry input/output
+    types (including the varying-manual-axes set) to match.  A plain
+    ``jnp.zeros`` is 'unvarying'; adding a zeroed scalar derived from a
+    varying tensor promotes the literal to the right variance at the cost of
+    one O(1) fused add.  Outside shard_map this is a no-op zeros.
+    """
+    z = (like.ravel()[:1].sum() * 0).astype(dtype)
+    return jnp.zeros(shape, dtype) + z

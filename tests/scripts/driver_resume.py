@@ -1,0 +1,25 @@
+
+"""Subprocess worker: the end-to-end CLI driver — train, checkpoint, resume."""
+
+import os
+import sys
+import tempfile
+
+ckpt = tempfile.mkdtemp(prefix="drv_ckpt_")
+import repro.launch.train as train
+
+base = [
+    "drv", "--preset", "tiny", "--steps", "8", "--algorithm", "decentlam",
+    "--topology", "ring", "--seq-len", "32", "--per-node-batch", "2",
+    "--ckpt-dir", ckpt, "--ckpt-every", "4", "--log-every", "4",
+]
+sys.argv = base
+train.main()
+
+from repro.train.checkpoint import latest_step
+assert latest_step(ckpt) == 8, latest_step(ckpt)
+
+sys.argv = base[:4] + ["16"] + base[5:] + ["--resume"]
+train.main()
+assert latest_step(ckpt) == 16, latest_step(ckpt)
+print("driver resume OK")

@@ -1,0 +1,85 @@
+"""Elastic recovery planning + the paper's own (CIFAR ResNet) domain."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import OptimizerConfig, build_topology, make_optimizer
+from repro.core.gossip import make_stacked_gossip, make_stacked_mean
+from repro.launch.elastic import apply_recovery, plan_recovery
+from repro.models.resnet_cifar import resnet20_apply, resnet20_init, resnet20_loss
+from repro.train.train_state import init_train_state
+from repro.configs import tiny_lm
+
+
+def test_plan_reroute_for_few_failures():
+    plan = plan_recovery("exp", 16, dead=[5])
+    assert plan.mode == "reroute"
+    assert plan.n_nodes == 16
+    W = plan.topology.W(0)
+    assert W[5, 5] == 1.0  # dead node isolated
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_plan_rescale_for_many_failures():
+    plan = plan_recovery("exp", 16, dead=[1, 2, 3, 4, 5, 6, 7])
+    assert plan.mode == "rescale"
+    assert plan.n_nodes == 8  # largest power of two <= 9 survivors
+    plan.topology.validate()
+
+
+def test_apply_recovery_rescale_collapses_replicas():
+    cfg = tiny_lm(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                  vocab_size=64)
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam"))
+    st = init_train_state(jax.random.key(0), cfg, opt, 8, tp=1)
+    st["params"] = jax.tree.map(
+        lambda x: x + jnp.arange(8, dtype=x.dtype).reshape((-1,) + (1,) * (x.ndim - 1)),
+        st["params"],
+    )
+    plan = plan_recovery("exp", 8, dead=[0, 1, 2, 3, 4])
+    st2 = apply_recovery(st, plan)
+    leaf = jax.tree.leaves(st2["params"])[0]
+    assert leaf.shape[0] == plan.n_nodes == 2
+    src = jax.tree.leaves(st["params"])[0]
+    np.testing.assert_allclose(
+        np.asarray(leaf[0], np.float32),
+        np.asarray(src, np.float32).mean(axis=0),
+        rtol=1e-5,
+    )
+
+
+def test_training_continues_after_reroute():
+    """Gossip on the rerouted topology still mixes the survivors."""
+    plan = plan_recovery("exp", 8, dead=[3])
+    g = make_stacked_gossip(plan.topology)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 5)), jnp.float32)
+    y = x
+    for k in range(40):
+        y, _ = g(y, jnp.int32(k), ())
+    alive = [i for i in range(8) if i != 3]
+    ya = np.asarray(y)[alive]
+    # survivors reach consensus among themselves
+    assert np.abs(ya - ya.mean(axis=0)).max() < 1e-3
+    # the dead node's state is untouched
+    np.testing.assert_allclose(np.asarray(y)[3], np.asarray(x)[3], atol=1e-6)
+
+
+def test_resnet20_forward_and_learning():
+    params = resnet20_init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 32, 32, 3)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, (8,)), jnp.int32)
+    logits = resnet20_apply(params, x)
+    assert logits.shape == (8, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    @jax.jit
+    def step(p):
+        (l, m), g = jax.value_and_grad(resnet20_loss, has_aux=True)(p, x, y)
+        return l, jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    l0, params = step(params)
+    for _ in range(8):
+        l1, params = step(params)
+    assert float(l1) < float(l0)  # overfits the fixed batch

@@ -1,0 +1,93 @@
+"""Gossip executor + compression unit tests (stacked harness)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    build_topology,
+    consensus_distance,
+    get_compressor,
+    gossip_bytes_per_step,
+    make_stacked_gossip,
+    make_stacked_mean,
+    wire_bytes,
+)
+
+
+def test_gossip_preserves_mean():
+    topo = build_topology("exp", 8)
+    g = make_stacked_gossip(topo)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 17)), jnp.float32)
+    y, _ = g(x, jnp.int32(0), ())
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(y, 0)), np.asarray(jnp.mean(x, 0)), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("name", ["ring", "torus", "exp"])
+def test_gossip_contracts_consensus_by_rho(name):
+    topo = build_topology(name, 16)
+    g = make_stacked_gossip(topo)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((16, 33)), jnp.float32)
+    y, _ = g(x, jnp.int32(0), ())
+    c0 = float(consensus_distance(x))
+    c1 = float(consensus_distance(y))
+    assert c1 <= topo.rho() ** 2 * c0 * (1 + 1e-4), (name, c1 / c0, topo.rho() ** 2)
+
+
+def test_repeated_gossip_converges_to_mean():
+    topo = build_topology("one-peer-exp", 8)
+    g = make_stacked_gossip(topo)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((8, 5)), jnp.float32)
+    target = jnp.mean(x, axis=0)
+    y = x
+    for k in range(64):
+        y, _ = g(y, jnp.int32(k), ())
+    np.testing.assert_allclose(
+        np.asarray(y), np.broadcast_to(np.asarray(target), y.shape), atol=1e-4
+    )
+
+
+def test_int8_compressor_roundtrip_error():
+    c = get_compressor("int8")
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(1000), jnp.float32)
+    msg, _ = c.encode(x, ())
+    y = c.decode(msg, x)
+    err = float(jnp.max(jnp.abs(x - y)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+def test_topk_error_feedback_accumulates():
+    c = get_compressor("topk:0.1")
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(100), jnp.float32)
+    err = c.init(x)
+    # repeated transmission of the same payload: error feedback ensures the
+    # cumulative decoded mass approaches the payload
+    decoded_sum = jnp.zeros_like(x)
+    for _ in range(30):
+        msg, err = c.encode(x, err)
+        decoded_sum = decoded_sum + c.decode(msg, x)
+    avg = decoded_sum / 30.0
+    assert float(jnp.linalg.norm(avg - x)) / float(jnp.linalg.norm(x)) < 0.2
+
+
+def test_comm_volume_model_favors_sparse_topologies():
+    payload = 100e6  # 100 MB of params
+    ring = gossip_bytes_per_step(build_topology("ring", 64), payload)
+    onep = gossip_bytes_per_step(build_topology("one-peer-exp", 64), payload)
+    allg = gossip_bytes_per_step(
+        build_topology("ring", 64), payload, impl="allgather"
+    )
+    # degree-bounded gossip is O(1) in n; all-gather is O(n)
+    assert onep["egress_bytes"] < ring["egress_bytes"] < allg["egress_bytes"]
+    assert allg["egress_bytes"] > 50 * onep["egress_bytes"]
+
+
+def test_wire_bytes_model():
+    assert wire_bytes(1000, None) == 1000
+    assert wire_bytes(1000, "bf16") == 500
+    assert wire_bytes(1000, "int8") == pytest.approx(254)
+    assert wire_bytes(4000, "topk:0.01") == pytest.approx(0.01 * 1000 * 8)

@@ -1,0 +1,155 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles,
+interpret=True on CPU (the kernels' TPU lowering path is exercised on real
+hardware; the *math* is identical)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decentlam_update.ops import decentlam_update
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import reference_attention
+from repro.kernels.mlstm_chunk.ops import mlstm
+from repro.kernels.mlstm_chunk.ref import (
+    mlstm_chunked,
+    mlstm_decode_step,
+    mlstm_sequential,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dt):
+    return jnp.asarray(RNG.standard_normal(shape), dt)
+
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, Hkv, hd, causal, window, dtype
+    (2, 128, 128, 4, 2, 64, True, 0, jnp.float32),
+    (1, 256, 256, 4, 4, 32, True, 64, jnp.float32),
+    (2, 100, 100, 2, 1, 64, True, 0, jnp.bfloat16),
+    (1, 128, 128, 2, 2, 64, False, 0, jnp.float32),
+    (1, 64, 192, 2, 2, 64, False, 0, jnp.float32),  # cross-ish Sq != Sk
+    (2, 160, 160, 8, 2, 32, True, 96, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_reference(case):
+    B, Sq, Sk, H, Hkv, hd, causal, window, dt = case
+    q = _rand((B, Sq, H, hd), dt)
+    k = _rand((B, Sk, Hkv, hd), dt)
+    v = _rand((B, Sk, Hkv, hd), dt)
+    out = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    ref = reference_attention(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol
+    )
+
+
+def test_flash_attention_block_size_invariance():
+    q = _rand((1, 256, 2, 64), jnp.float32)
+    k = _rand((1, 256, 2, 64), jnp.float32)
+    v = _rand((1, 256, 2, 64), jnp.float32)
+    outs = [
+        np.asarray(
+            flash_attention(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+        )
+        for (bq, bk) in [(64, 64), (128, 64), (64, 128), (128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+MLSTM_CASES = [
+    (2, 3, 128, 32, 48, 32),
+    (1, 2, 256, 64, 64, 64),
+    (1, 1, 64, 16, 16, 64),
+]
+
+
+@pytest.mark.parametrize("case", MLSTM_CASES)
+def test_mlstm_chunked_matches_sequential(case):
+    B, H, S, dk, dv, chunk = case
+    q, k = _rand((B, H, S, dk), jnp.float32), _rand((B, H, S, dk), jnp.float32)
+    v = _rand((B, H, S, dv), jnp.float32)
+    ir = _rand((B, H, S), jnp.float32)
+    fr = 2.0 + _rand((B, H, S), jnp.float32)
+    h_seq, st_seq = mlstm_sequential(q, k, v, ir, fr)
+    h_ch, st_ch = mlstm_chunked(q, k, v, ir, fr, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_seq), np.asarray(h_ch), atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(st_seq["C"]), np.asarray(st_ch["C"]), atol=2e-4
+    )
+
+
+@pytest.mark.parametrize("case", MLSTM_CASES[:2])
+def test_mlstm_pallas_matches_ref(case):
+    B, H, S, dk, dv, chunk = case
+    q, k = _rand((B, H, S, dk), jnp.float32), _rand((B, H, S, dk), jnp.float32)
+    v = _rand((B, H, S, dv), jnp.float32)
+    ir = _rand((B, H, S), jnp.float32)
+    fr = 2.0 + _rand((B, H, S), jnp.float32)
+    h_ref, st_ref = mlstm(q, k, v, ir, fr, chunk=chunk, impl="ref")
+    h_pl, st_pl = mlstm(q, k, v, ir, fr, chunk=chunk, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h_pl), atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(st_ref["C"]), np.asarray(st_pl["C"]), atol=2e-4
+    )
+
+
+def test_mlstm_decode_extends_sequence():
+    B, H, S, dk, dv = 1, 2, 65, 32, 32
+    q, k = _rand((B, H, S, dk), jnp.float32), _rand((B, H, S, dk), jnp.float32)
+    v = _rand((B, H, S, dv), jnp.float32)
+    ir = _rand((B, H, S), jnp.float32)
+    fr = 2.0 + _rand((B, H, S), jnp.float32)
+    h_all, _ = mlstm_sequential(q, k, v, ir, fr)
+    _, st = mlstm_chunked(
+        q[:, :, : S - 1], k[:, :, : S - 1], v[:, :, : S - 1],
+        ir[:, :, : S - 1], fr[:, :, : S - 1], chunk=16,
+    )
+    h1, _ = mlstm_decode_step(
+        q[:, :, S - 1], k[:, :, S - 1], v[:, :, S - 1],
+        ir[:, :, S - 1], fr[:, :, S - 1], st,
+    )
+    np.testing.assert_allclose(
+        np.asarray(h1), np.asarray(h_all[:, :, S - 1]), atol=2e-4
+    )
+
+
+@pytest.mark.parametrize(
+    "shape,dt",
+    [((1000,), jnp.float32), ((33, 77), jnp.float32), ((8, 128), jnp.bfloat16),
+     ((64, 1024), jnp.float32)],
+)
+def test_decentlam_update_kernel(shape, dt):
+    x = _rand(shape, dt)
+    mix = x - 0.01 * jnp.sign(x)
+    m = _rand(shape, jnp.float32)
+    lr = jnp.float32(0.02)
+    p_ref, m_ref = decentlam_update({"w": x}, {"w": mix}, {"w": m}, lr, beta=0.9, impl="ref")
+    p_pl, m_pl = decentlam_update(
+        {"w": x}, {"w": mix}, {"w": m}, lr, beta=0.9, impl="pallas_interpret"
+    )
+    np.testing.assert_allclose(
+        np.asarray(p_ref["w"], np.float32), np.asarray(p_pl["w"], np.float32),
+        atol=1e-2 if dt == jnp.bfloat16 else 1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(m_ref["w"]), np.asarray(m_pl["w"]), atol=1e-2
+    )
+
+
+def test_decentlam_update_semantics():
+    """x_new must equal mix - lr*beta*m (algebraic identity of eq. 17 tail)."""
+    x = _rand((256,), jnp.float32)
+    mix = _rand((256,), jnp.float32)
+    m = _rand((256,), jnp.float32)
+    lr = jnp.float32(0.1)
+    p, m2 = decentlam_update({"w": x}, {"w": mix}, {"w": m}, lr, beta=0.9, impl="ref")
+    np.testing.assert_allclose(
+        np.asarray(p["w"]), np.asarray(mix - 0.1 * 0.9 * m), atol=1e-5
+    )

@@ -1,0 +1,34 @@
+"""The model's attention layer routed through the Pallas flash kernel
+(interpret mode) must match the jnp chunked path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.models import transformer as T
+from repro.models.layers import TPContext
+
+TP1 = TPContext(size=1)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "olmo-1b", "h2o-danube-1.8b"])
+def test_forward_loss_pallas_matches_jnp(arch):
+    cfg = SMOKES[arch]
+    params = T.init_params(jax.random.key(0), cfg, tp=1)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32),
+    }
+    outs = {}
+    for impl in ("jnp", "pallas_interpret"):
+        rt = T.RuntimeConfig(dtype="float32", remat=False, attn_impl=impl)
+        loss, _ = jax.jit(lambda p, b: T.forward_loss(p, b, cfg, TP1, rt))(
+            params, batch
+        )
+        outs[impl] = float(loss)
+    assert abs(outs["jnp"] - outs["pallas_interpret"]) < 1e-4, outs

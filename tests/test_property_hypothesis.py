@@ -1,0 +1,119 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import metropolis_weights, rho, _classes_from_W
+from repro.core import build_topology, make_stacked_gossip, consensus_distance
+from repro.kernels.decentlam_update.ops import decentlam_update
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import reference_attention
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@st.composite
+def connected_adjacency(draw, max_n=10):
+    n = draw(st.integers(3, max_n))
+    adj = np.zeros((n, n), np.int64)
+    # random spanning tree guarantees connectivity
+    perm = draw(st.permutations(list(range(n))))
+    for i in range(1, n):
+        j = perm[draw(st.integers(0, i - 1))]
+        adj[perm[i], j] = adj[j, perm[i]] = 1
+    # extra random edges
+    extra = draw(st.integers(0, n))
+    for _ in range(extra):
+        a = draw(st.integers(0, n - 1))
+        b = draw(st.integers(0, n - 1))
+        if a != b:
+            adj[a, b] = adj[b, a] = 1
+    return adj
+
+
+@SET
+@given(connected_adjacency())
+def test_metropolis_always_doubly_stochastic(adj):
+    W = metropolis_weights(adj)
+    n = adj.shape[0]
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=1), np.ones(n), atol=1e-12)
+    assert (W >= -1e-12).all()
+    assert rho(W) < 1.0  # connected => mixing
+
+
+@SET
+@given(connected_adjacency())
+def test_edge_class_decomposition_reconstructs_W(adj):
+    W = metropolis_weights(adj)
+    n = W.shape[0]
+    R = np.diag(np.diag(W))
+    for c in _classes_from_W(W):
+        c.validate(n)
+        for src, dst in c.pairs:
+            R[dst, src] += c.recv_weight[dst]
+    np.testing.assert_allclose(R, W, atol=1e-12)
+
+
+@SET
+@given(
+    st.sampled_from(["ring", "torus", "exp", "one-peer-exp"]),
+    st.integers(0, 1000),
+)
+def test_gossip_mean_preservation_any_step(name, step):
+    topo = build_topology(name, 8)
+    g = make_stacked_gossip(topo)
+    rng = np.random.default_rng(step)
+    x = jnp.asarray(rng.standard_normal((8, 7)), jnp.float32)
+    y, _ = g(x, jnp.int32(step), ())
+    np.testing.assert_allclose(
+        np.asarray(jnp.mean(y, 0)), np.asarray(jnp.mean(x, 0)), atol=1e-5
+    )
+    assert float(consensus_distance(y)) <= float(consensus_distance(x)) + 1e-6
+
+
+@SET
+@given(
+    st.integers(1, 3),  # batch
+    st.sampled_from([32, 64, 96]),  # seq
+    st.sampled_from([1, 2, 4]),  # heads
+    st.sampled_from([32, 64]),  # head dim
+    st.booleans(),  # causal
+    st.sampled_from([0, 16]),  # window
+)
+def test_flash_attention_property(b, s, h, hd, causal, window):
+    rng = np.random.default_rng(b * 1000 + s + h)
+    q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+    if window and not causal:
+        causal = True  # windowed bidir not used by any arch
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=32, bk=32,
+                          interpret=True)
+    ref = reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5)
+
+
+@SET
+@given(
+    st.integers(1, 2000),  # size
+    st.floats(0.0, 0.99),  # beta
+    st.floats(1e-6, 0.5),  # lr
+)
+def test_decentlam_update_identity(n, beta, lr):
+    """Fused kernel == x - lr*(beta*m + (x - mix)/lr) for any shape/params."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    mix = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    m = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    p, m2 = decentlam_update(
+        {"w": x}, {"w": mix}, {"w": m}, jnp.float32(lr), beta=beta,
+        impl="pallas_interpret",
+    )
+    g_tilde = (x - mix) / max(lr, 1e-12)
+    m_expect = beta * m + g_tilde
+    x_expect = x - lr * m_expect
+    np.testing.assert_allclose(np.asarray(m2["w"]), np.asarray(m_expect), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(p["w"]), np.asarray(x_expect), rtol=2e-4, atol=2e-4)

@@ -1,0 +1,108 @@
+"""Serving correctness: one decode step must equal the prefill oracle.
+
+For MoE archs the comparison uses a dropless capacity factor (capacity
+dispatch may drop tokens at cf=1.25 during prefill — standard GShard
+behavior — while single-token decode never drops)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.models import transformer as T
+from repro.models.layers import TPContext
+
+RT = T.RuntimeConfig(dtype="float32", remat=False)
+TP1 = TPContext(size=1)
+S = 24
+
+
+def _cfg(arch):
+    cfg = SMOKES[arch]
+    if cfg.moe:
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.n_experts) / cfg.top_k
+        )
+    return cfg
+
+
+def _batches(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S + 1)), jnp.int32)
+    full = {"tokens": toks}
+    pre = {"tokens": toks[:, :S]}
+    if cfg.family == "vlm":
+        pe = jnp.asarray(
+            rng.standard_normal((2, cfg.num_patches, cfg.d_model)), jnp.float32
+        )
+        full["patch_embeds"] = pe
+        pre["patch_embeds"] = pe
+    if cfg.arch_kind == "encdec":
+        fr = jnp.asarray(
+            rng.standard_normal((2, cfg.enc_seq, cfg.d_model)), jnp.float32
+        )
+        full["enc_frames"] = fr
+        pre["enc_frames"] = fr
+    return toks, full, pre
+
+
+@pytest.mark.parametrize("grouped", [False, True])
+@pytest.mark.parametrize("arch", sorted(SMOKES))
+def test_decode_matches_prefill(arch, grouped):
+    cfg = _cfg(arch)
+    rt = dataclasses.replace(RT, decode_grouped_gqa=grouped)
+    params = T.init_params(jax.random.key(0), cfg, tp=1)
+    toks, full, pre = _batches(cfg)
+    lg_full, _ = jax.jit(
+        lambda p, b: T.prefill(p, b, cfg, TP1, rt, target_len=S + 8)
+    )(params, full)
+    _, cache = jax.jit(
+        lambda p, b: T.prefill(p, b, cfg, TP1, rt, target_len=S + 8)
+    )(params, pre)
+    lg_dec, _ = jax.jit(
+        lambda p, t, c: T.decode_step(
+            p, t, c, jnp.int32(S), cfg, TP1, rt, target_len=S + 8
+        )
+    )(params, toks[:, S : S + 1], cache)
+    err = np.max(np.abs(np.asarray(lg_full) - np.asarray(lg_dec)))
+    rel = err / (np.max(np.abs(np.asarray(lg_full))) + 1e-9)
+    assert rel < 5e-4, (arch, grouped, err, rel)
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "hymba-1.5b"])
+def test_rolling_window_cache_matches_full_history(arch):
+    """SWA rolling buffer: multi-step decode equals prefill-with-longer-
+    sequence (window semantics identical between the two paths)."""
+    cfg = _cfg(arch)
+    params = T.init_params(jax.random.key(1), cfg, tp=1)
+    rng = np.random.default_rng(1)
+    total = S + 5
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, total)), jnp.int32)
+    _, cache = jax.jit(
+        lambda p, b: T.prefill(p, b, cfg, TP1, RT, target_len=total + 4)
+    )(params, {"tokens": toks[:, :S]})
+    lg = None
+    for t in range(S, total):
+        lg, cache = jax.jit(
+            lambda p, tk, c, tt: T.decode_step(
+                p, tk, c, tt, cfg, TP1, RT, target_len=total + 4
+            )
+        )(params, toks[:, t : t + 1], cache, jnp.int32(t))
+    lg_full, _ = jax.jit(
+        lambda p, b: T.prefill(p, b, cfg, TP1, RT, target_len=total + 4)
+    )(params, {"tokens": toks})
+    rel = np.max(np.abs(np.asarray(lg) - np.asarray(lg_full))) / (
+        np.max(np.abs(np.asarray(lg_full))) + 1e-9
+    )
+    assert rel < 5e-4, rel
+
+
+def test_cache_capacity_bounded_by_window():
+    cfg = _cfg("h2o-danube-1.8b")  # smoke window = 16
+    cache = T.init_cache(cfg, batch=2, target_len=1024, tp=1, rt=RT)
+    for g in cache.values():
+        if "kv" in g:
+            assert g["kv"]["k"].shape[2] <= max(cfg.sliding_window, 16)

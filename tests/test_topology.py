@@ -1,0 +1,86 @@
+import numpy as np
+import pytest
+
+from repro.core.topology import (
+    TOPOLOGIES,
+    build_topology,
+    metropolis_weights,
+    rho,
+)
+
+NS = [4, 8, 16]
+
+
+@pytest.mark.parametrize("name", ["ring", "torus", "exp", "one-peer-exp", "random-match", "full"])
+@pytest.mark.parametrize("n", NS)
+def test_topology_valid(name, n):
+    t = build_topology(name, n)
+    t.validate()  # symmetric, doubly stochastic, classes reconstruct W
+    assert t.n == n
+
+
+@pytest.mark.parametrize("name", ["ring", "torus", "exp", "one-peer-exp", "random-match"])
+def test_rho_in_unit_interval(name):
+    t = build_topology(name, 16)
+    r = t.rho()
+    assert 0.0 < r < 1.0, r
+
+
+def test_rho_ordering_matches_connectivity():
+    # better-connected graphs have smaller rho (paper Sec. 4)
+    ring = build_topology("ring", 16).rho()
+    torus = build_topology("torus", 16).rho()
+    exp = build_topology("exp", 16).rho()
+    full = build_topology("full", 16).rho()
+    assert full < exp < torus < ring
+
+
+def test_one_peer_exponential_period():
+    t = build_topology("one-peer-exp", 16)
+    assert t.period == 4  # log2(16)
+    for s in range(t.period):
+        W = t.W(s)
+        # perfect matching: every row has exactly one off-diagonal 1/2
+        off = W - np.diag(np.diag(W))
+        assert (np.count_nonzero(off, axis=1) == 1).all()
+        assert np.allclose(off[off > 0], 0.5)
+
+
+def test_random_match_seeded_deterministic():
+    a = build_topology("random-match", 8, seed=3)
+    b = build_topology("random-match", 8, seed=3)
+    for s in range(a.period):
+        np.testing.assert_array_equal(a.W(s), b.W(s))
+
+
+def test_exclude_reroutes_and_stays_doubly_stochastic():
+    t = build_topology("exp", 16)
+    t2 = t.exclude([3, 7])
+    t2.validate()
+    W = t2.W(0)
+    # dead nodes are isolated with self weight 1
+    for d in (3, 7):
+        assert W[d, d] == 1.0
+        assert np.count_nonzero(W[d]) == 1
+    # survivors still mix: spectral gap of the survivor block < 1
+    alive = [i for i in range(16) if i not in (3, 7)]
+    Ws = W[np.ix_(alive, alive)]
+    assert rho(Ws) < 1.0
+    np.testing.assert_allclose(Ws.sum(axis=1), 1.0, atol=1e-12)
+
+
+def test_metropolis_irregular_graph():
+    # star graph: strongly irregular degrees
+    n = 6
+    adj = np.zeros((n, n), np.int64)
+    adj[0, 1:] = 1
+    adj[1:, 0] = 1
+    W = metropolis_weights(adj)
+    np.testing.assert_allclose(W, W.T)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    assert (np.diag(W) >= 0).all()
+
+
+def test_disconnected_is_identity():
+    t = build_topology("none", 8)
+    np.testing.assert_array_equal(t.W(0), np.eye(8))
