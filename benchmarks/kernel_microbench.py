@@ -1,48 +1,194 @@
-"""Microbenchmarks for the Pallas-kernel hot spots (CPU timings of the jnp
-reference paths; the Pallas kernels themselves are TPU-target and validated
-in interpret mode).  Reported as name,us_per_call,derived-GB/s|GF/s.
+"""Microbenchmarks for the Pallas-kernel hot spots.
+
+Two families:
+
+* **Fused optimizer tails** — for every algorithm in ``ALGORITHMS``, the
+  elementwise update tail compared two ways over a 4M-element leaf:
+
+  - *unfused* (measured): the textbook per-op execution — each tree op its
+    own dispatch with materialized intermediates, exactly the pre-engine
+    ``optimizers.py`` sequence, including the coupled weight-decay pass
+    every baseline runs in large-batch training.  Wall time is the sum of
+    the measured per-pass times; the same passes give the host's effective
+    elementwise memory bandwidth.
+  - *fused* (roofline at measured bandwidth): the update-spec stage kernel
+    reads its operands and writes its outputs in ONE HBM pass, so its
+    memory-bound cost is (stage bytes) / (measured bandwidth).  CPU XLA
+    cannot reproduce a multi-output single-pass loop (it emits one loop
+    per output — see ``fused_stage_us_cpu`` in the JSON for the raw CPU
+    stage wall time), so the projection at the *measured* bandwidth is the
+    faithful stand-in for the TPU kernel, whose math is validated
+    elementwise in interpret mode in tests/test_kernels.py.
+
+  Reported as ``algo,unfused_us,fused_us,speedup`` plus per-variant HBM
+  pass bytes (in units of the leaf size n).
+
+* **Attention / mLSTM reference paths** — CPU timings of the jnp chunked
+  implementations (name,us_per_call,derived GB/s|GF/s), unchanged.
+
+``run(json_path=...)`` additionally dumps the machine-readable per-algorithm
+table (see benchmarks/run.py, which writes BENCH_kernels.json) so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decentlam_update.ops import decentlam_update
-from repro.kernels.flash_attention.ref import reference_attention
+from repro.core.optimizers import ALGORITHMS, OptimizerConfig
+from repro.core.update_spec import (
+    post_io,
+    pre_io,
+    reference_stage,
+    stage_plan,
+)
+from repro.kernels.flash_attention.ref import reference_attention  # noqa: F401 — table reference
 from repro.kernels.mlstm_chunk.ops import mlstm
 from repro.models.attention import attention_core
+
+N_TAIL = 4_000_000  # 16 MB fp32 per operand: memory-bound territory
+BETA, WD, LR = 0.9, 0.01, 0.01
 
 
 def _time(fn, *args, iters=5):
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    best = float("inf")
+    for _ in range(3):  # best-of-3 medians to tame CI-runner noise
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters * 1e6)  # us
+    return best
 
 
-def run(csv: bool = True):
+# ---------------------------------------------------------------------------
+# per-algorithm fused vs unfused tails
+# ---------------------------------------------------------------------------
+
+# one jit per elementary tree op == one dispatch + materialized output,
+# exactly the pre-engine optimizer execution
+_wd_pass = jax.jit(lambda w, x, g: w * x + g)
+_mom = jax.jit(lambda b, m, g: b * m + g)
+_step = jax.jit(lambda x, lr, d: x - lr * d)
+_gt = jax.jit(lambda x, mix, lr: (x - mix) / jnp.maximum(lr, 1e-12))
+_qg_m = jax.jit(
+    lambda b, m, x, mix, lr: b * m + (1.0 - b) * (x - mix) / jnp.maximum(lr, 1e-12)
+)
+_d2_z = jax.jit(lambda x, xp, m, mp, lr: 2.0 * x - xp - lr * (m - mp))
+_lars_scale = jax.jit(lambda r, g: r * g)
+
+
+def _unfused_tail_fns(algo):
+    """The per-op sequence of the stock (pre-engine) optimizer step,
+    communication excluded.  Every entry is one dispatch/HBM pass,
+    annotated with the number of n-sized arrays it touches (reads+writes).
+    """
+    wd = (lambda e: _wd_pass(e["wd"], e["x"], e["g"]), 3)
+    mom = (lambda e: _mom(e["beta"], e["m"], e["g"]), 3)
+    step_m = (lambda e: _step(e["x"], e["lr"], e["m"]), 3)
+    step_g = (lambda e: _step(e["x"], e["lr"], e["g"]), 3)
+    awc_x = (lambda e: _step(e["mix"], e["lr"], e["m"]), 3)
+    gt = (lambda e: _gt(e["x"], e["mix"], e["lr"]), 3)
+    qg_m = (lambda e: _qg_m(e["beta"], e["m"], e["x"], e["mix"], e["lr"]), 4)
+    d2_z = (lambda e: _d2_z(e["x"], e["xp"], e["m"], e["mp"], e["lr"]), 5)
+    lars = (lambda e: _lars_scale(e["lr"], e["g"]), 2)  # r*g; norms excluded both ways
+    return {
+        "pmsgd": [wd, mom, step_m],
+        "pmsgd-lars": [wd, lars, mom, step_m],
+        "dsgd": [wd, step_g],
+        "dmsgd": [wd, mom, step_m],
+        "da-dmsgd": [wd, mom, step_m],
+        "awc-dmsgd": [wd, mom, awc_x],
+        "slowmo": [wd, mom, step_m],  # periodic outer sync excluded
+        "qg-dmsgd": [wd, mom, step_m, qg_m],
+        "d2-dmsgd": [wd, mom, d2_z],
+        "decentlam": [wd, step_g, gt, mom, step_m],
+    }[algo]
+
+
+def _fused_stages(cfg):
+    """(jitted stage callable, arrays touched) per engine stage, comm
+    excluded.  The stage list comes from ``update_spec.stage_plan`` — the
+    same gating ``run_update`` executes (free assigns skipped, decoupled-wd
+    placement) — so the benchmark can't drift from the engine.
+
+    The callable is the pure-jnp stage under one jit — CPU XLA runs one
+    loop per *output*, so its wall time overstates the one-pass Pallas
+    kernel; it is reported raw in the JSON while the headline fused cost
+    is the arrays-touched roofline at measured bandwidth.
+    """
+    stages = []
+    for kind, op, ctx in stage_plan(cfg):
+        ins, outs = pre_io(op, ctx) if kind == "pre" else post_io(op)
+
+        def stage_fn(env, _kind=kind, _op=op, _ctx=ctx, _ins=ins):
+            ops = {n: {"w": env[n]} for n in _ins}
+            s = {"lr": env["lr"], "gs": None, "r": None}
+            return reference_stage(_kind, _op, _ctx, ops, s, {"w": env["x"]})
+
+        stages.append((jax.jit(stage_fn), len(ins) + len(outs)))
+    return stages
+
+
+def bench_optimizer_tails(n=N_TAIL, iters=5):
+    rng = np.random.default_rng(0)
+
+    def arr():
+        return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+    env = {
+        "x": arr(), "g": arr(), "m": arr(), "mix": arr(),
+        "xp": arr(), "mp": arr(), "x_prev": None, "m_prev": None,
+        "lr": jnp.float32(LR), "beta": jnp.float32(BETA), "wd": jnp.float32(WD),
+    }
+    env["x_prev"], env["m_prev"] = env["xp"], env["mp"]
+
+    table = {}
+    for algo in ALGORITHMS:
+        cfg = OptimizerConfig(algorithm=algo, momentum=BETA, weight_decay=WD)
+        unfused = _unfused_tail_fns(algo)
+        pass_times = [_time(f, env, iters=iters) for f, _ in unfused]
+        t_unfused = sum(pass_times)
+        unfused_arrays = sum(k for _, k in unfused)
+        # effective elementwise bandwidth of this host, from the same passes
+        bws = [k * 4.0 * n / t for (_, k), t in zip(unfused, pass_times)]
+        bw = float(np.median(bws))  # bytes/us
+
+        stages = _fused_stages(cfg)
+        fused_arrays = sum(k for _, k in stages)
+        t_fused = fused_arrays * 4.0 * n / bw  # one-pass roofline
+        t_fused_cpu = sum(_time(f, env, iters=iters) for f, _ in stages)
+        table[algo] = {
+            "unfused_us": round(t_unfused, 1),
+            "fused_us": round(t_fused, 1),
+            "speedup": round(t_unfused / t_fused, 3),
+            "unfused_passes": len(unfused),
+            "fused_stages": len(stages),
+            "unfused_array_passes": unfused_arrays,
+            "fused_array_passes": fused_arrays,
+            "fused_stage_us_cpu": round(t_fused_cpu, 1),
+            "bandwidth_gb_s": round(bw * 1e6 / 1e9, 2),
+            "elements": n,
+        }
+    return table
+
+
+# ---------------------------------------------------------------------------
+# attention / mlstm reference-path timings (unchanged hot spots)
+# ---------------------------------------------------------------------------
+
+
+def bench_kernel_refs():
     rng = np.random.default_rng(0)
     rows = []
 
-    # fused decentlam update: memory-bound; derived metric = GB/s touched
-    n = 4_000_000
-    x = jnp.asarray(rng.standard_normal(n), jnp.float32)
-    tree = ({"w": x}, {"w": x * 0.99}, {"w": jnp.zeros_like(x)})
-    f = jax.jit(
-        lambda a, b, c: decentlam_update(a, b, c, jnp.float32(0.01), beta=0.9,
-                                         impl="ref")
-    )
-    us = _time(f, *tree)
-    rows.append(("decentlam_update_ref_4M", us, f"{5*4*n/us/1e3:.1f}GB/s"))
-
-    # chunked attention (jnp flash-style): derived = GFLOP/s
     B, S, H, hd = 1, 1024, 4, 64
     q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
     g = jax.jit(lambda q: attention_core(q, q, q, causal=True, q_block=256))
@@ -50,19 +196,48 @@ def run(csv: bool = True):
     fl = 4 * B * H * S * S * hd / 2
     rows.append(("attention_core_1k", us, f"{fl/us/1e3:.1f}GF/s"))
 
-    # chunked mlstm
     q2 = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
     v2 = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
     gates = jnp.asarray(rng.standard_normal((1, 2, 512)), jnp.float32)
     h = jax.jit(lambda a, b, c: mlstm(a, a, b, c, c + 2, chunk=128, impl="ref"))
     us = _time(h, q2, v2, gates)
     rows.append(("mlstm_chunk_512", us, ""))
+    return rows
+
+
+def run(csv: bool = True, json_path: str | None = None):
+    tails = bench_optimizer_tails()
+    refs = bench_kernel_refs()
 
     if csv:
+        print(
+            "algo,unfused_us,fused_us,speedup,"
+            "unfused_array_passes,fused_array_passes"
+        )
+        for algo, row in tails.items():
+            print(
+                f"tail/{algo},{row['unfused_us']:.0f},{row['fused_us']:.0f},"
+                f"{row['speedup']:.2f},{row['unfused_array_passes']},"
+                f"{row['fused_array_passes']}"
+            )
         print("name,us_per_call,derived")
-        for name, us, d in rows:
+        for name, us, d in refs:
             print(f"kernel/{name},{us:.0f},{d}")
-    return rows
+
+    payload = {
+        "bench": "kernel_microbench",
+        "config": {"n": N_TAIL, "beta": BETA, "weight_decay": WD, "lr": LR},
+        "optimizer_tails": tails,
+        "kernel_refs": [
+            {"name": name, "us_per_call": round(us, 1), "derived": d}
+            for name, us, d in refs
+        ],
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    return payload
 
 
 if __name__ == "__main__":

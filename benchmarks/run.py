@@ -2,6 +2,10 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 
+``kernel_microbench`` additionally writes ``BENCH_kernels.json``
+(per-algorithm fused/unfused tail timings) so the perf trajectory is
+machine-readable across PRs.
+
 Prints ``name,...`` CSV blocks per benchmark:
 
 ==========================  ====================================
@@ -43,12 +47,20 @@ BENCHES = {
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default=None, help="run a single benchmark")
+    p.add_argument(
+        "--kernels-json",
+        default="BENCH_kernels.json",
+        help="where kernel_microbench writes its machine-readable table",
+    )
     args = p.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     for name in names:
         print(f"\n# ===== {name} =====")
         t0 = time.time()
-        BENCHES[name]()
+        if name == "kernel_microbench":
+            BENCHES[name](json_path=args.kernels_json)
+        else:
+            BENCHES[name]()
         print(f"# {name} done in {time.time()-t0:.1f}s")
 
 

@@ -3,7 +3,6 @@
 Run:  PYTHONPATH=src python examples/bias_demo.py
 """
 
-import numpy as np
 
 from repro.core import build_topology, make_linear_regression, run_bias_experiment
 

@@ -5,4 +5,6 @@ See README.md / DESIGN.md.  Subpackages: ``core`` (the paper's algorithms),
 ``train`` (distributed runtime), ``data``, ``launch``, ``configs``.
 """
 
+from . import compat  # noqa: F401  — applies jax version-compat config
+
 __version__ = "1.0.0"

@@ -1,0 +1,69 @@
+"""Small jax version-compatibility seams.
+
+The repo targets the current jax API (``jax.shard_map``, dict-valued
+``compiled.cost_analysis()``, vma-checked shard_map); older jaxlib builds —
+including the 0.4.x line this container ships — spell those differently.
+Everything version-dependent is funneled through here so the rest of the
+code reads as if on current jax.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis", "LEGACY_SHARD_MAP"]
+
+# True when only jax.experimental.shard_map exists.  Its AD (without the
+# rep-checker's rewrite pass) does NOT insert the psums that make gradients
+# of replicated-in values correct — callers must add them (see
+# train/step.py's replicated-grad reduction).
+LEGACY_SHARD_MAP = not hasattr(jax, "shard_map")
+
+if LEGACY_SHARD_MAP:
+    # modern jax default; on 0.4.x the non-partitionable threefry makes
+    # jit-with-out-shardings produce different random values than the same
+    # program unsharded, which breaks every distributed == stacked
+    # equivalence check at init time.  Partitionable threefry produces the
+    # same bits in both cases.
+    jax.config.update("jax_threefry_partitionable", True)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``.
+
+    ``axis_names`` only exists on the new API; the experimental one binds
+    every mesh axis, which is what all call sites here use anyway.
+    ``check_vma`` maps to the experimental API's ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs: dict[str, Any] = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # the legacy rep-checker predates primitives the models use (e.g.
+    # checkpoint_name's `name`) and its inference is weaker than the modern
+    # vma tracker, so it must run unchecked; the AD consequence is handled
+    # by the LEGACY_SHARD_MAP replicated-grad reduction at the call sites
+    check_rep = False if check_vma is None else check_vma
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_rep
+    )
+
+
+def cost_analysis(compiled) -> dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` to a flat dict.
+
+    Older jaxlibs return a one-element list of per-computation dicts.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca

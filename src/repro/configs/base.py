@@ -17,8 +17,6 @@ long_500k      524288 1               serve decode (sub-quadratic archs only)
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Sequence
 
 __all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "pad_to"]
 

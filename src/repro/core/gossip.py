@@ -26,7 +26,7 @@ computation.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -35,6 +35,14 @@ decentlam    **Alg. 2 / eq. (17)**:
 The DecentLaM step sends exactly one gossip payload per iteration —
 ``x - lr g`` — which every node can emit as soon as its local backward pass
 finishes (the paper's wait-free-backprop observation).
+
+Each algorithm's elementwise tail is declared as *data* — an
+:class:`~repro.core.update_spec.UpdateSpec` of (payload op, comm, recombine
+op) phases — and executed by :func:`~repro.core.update_spec.run_update`.
+The reference path here walks the spec with pure-jnp tree maps; the fused
+Pallas engine (:mod:`repro.kernels.fused_update`) walks the *same* spec with
+one-HBM-pass stage kernels, so the two paths share their math by
+construction.
 """
 
 from __future__ import annotations
@@ -45,9 +53,18 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .update_spec import reference_stage, run_update, update_spec
+
 Tree = Any
 
-__all__ = ["OptimizerConfig", "Optimizer", "make_optimizer", "state_keys", "ALGORITHMS"]
+__all__ = [
+    "OptimizerConfig",
+    "Optimizer",
+    "make_optimizer",
+    "state_keys",
+    "update_spec",
+    "ALGORITHMS",
+]
 
 ALGORITHMS = (
     "pmsgd",
@@ -121,10 +138,6 @@ def _axpy(a, x: Tree, y: Tree) -> Tree:  # a*x + y
     return jax.tree.map(lambda u, v: a * u + v, x, y)
 
 
-def _sub(x: Tree, y: Tree) -> Tree:
-    return jax.tree.map(jnp.subtract, x, y)
-
-
 def _scale(a, x: Tree) -> Tree:
     return jax.tree.map(lambda u: a * u, x)
 
@@ -164,6 +177,14 @@ def _lars_scaled(cfg: OptimizerConfig, params: Tree, grads: Tree) -> Tree:
 
 
 def _preprocess_grads(cfg: OptimizerConfig, params: Tree, grads: Tree) -> Tree:
+    """Unfused gradient preprocessing (clip -> coupled wd -> LARS).
+
+    The spec-driven paths fold the resulting *scalars* into the fused stages
+    (see ``update_spec.grad_scalars`` / ``_g_eff``) instead of materializing
+    the scaled gradient; this tree-level version is the semantic oracle, and
+    ``test_optimizers.py::test_preprocess_grads_matches_fused_scalar_folding``
+    pins the fused folding to it.
+    """
     g = _f32(grads)
     if cfg.grad_clip > 0.0:
         g = _clip_by_global_norm(g, cfg.grad_clip)
@@ -174,15 +195,9 @@ def _preprocess_grads(cfg: OptimizerConfig, params: Tree, grads: Tree) -> Tree:
     return g
 
 
-def _apply_decoupled_wd(cfg: OptimizerConfig, lr, params: Tree) -> Tree:
-    if cfg.weight_decay > 0.0 and cfg.decoupled_wd:
-        return jax.tree.map(lambda p: p - lr * cfg.weight_decay * p, params)
-    return params
-
-
 def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
-    b = cfg.momentum
     algo = cfg.algorithm
+    spec = update_spec(cfg)
     no_comp = ()
 
     # ---------------- state ----------------
@@ -200,126 +215,25 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
 
     # ---------------- step ----------------
     def step(params, grads, state, *, lr, step_idx, gossip, mean, comp_state=no_comp):
-        x = _f32(params)
-        g = _preprocess_grads(cfg, x, grads)
-        lr = jnp.asarray(lr, jnp.float32)
-        safe_lr = jnp.maximum(lr, 1e-12)
-        new_state = dict(state)
-
-        def _momentum_step(x, direction, m_prev):
-            """m <- b m + d;  x <- x - lr*(b m + d) [nesterov] or x - lr*m."""
-            m = _axpy(b, m_prev, direction)
-            upd = _axpy(b, m, direction) if cfg.nesterov else m
-            return _sub(x, _scale(lr, upd)), m
-
-        if algo in ("pmsgd", "pmsgd-lars"):
-            gbar = mean(g)
-            x, m = _momentum_step(x, gbar, state["m"])
-            new_state["m"] = m
-
-        elif algo == "dsgd":
-            x, comp_state = gossip(_sub(x, _scale(lr, g)), step_idx, comp_state)
-
-        elif algo == "dmsgd":
-            m = _axpy(b, state["m"], g)
-            upd = _axpy(b, m, g) if cfg.nesterov else m
-            x, comp_state = gossip(_sub(x, _scale(lr, upd)), step_idx, comp_state)
-            new_state["m"] = m
-
-        elif algo == "da-dmsgd":
-            m, comp_state = gossip(
-                _axpy(b, state["m"], g), step_idx, comp_state
-            )
-            x, comp_state = gossip(_sub(x, _scale(lr, m)), step_idx, comp_state)
-            new_state["m"] = m
-
-        elif algo == "awc-dmsgd":
-            m = _axpy(b, state["m"], g)
-            gx, comp_state = gossip(x, step_idx, comp_state)
-            x = _sub(gx, _scale(lr, m))
-            new_state["m"] = m
-
-        elif algo == "qg-dmsgd":
-            # heavy-ball quasi-global momentum [Lin et al. 2021]
-            d = _axpy(b, state["m"], g)
-            x_new, comp_state = gossip(_sub(x, _scale(lr, d)), step_idx, comp_state)
-            m = jax.tree.map(
-                lambda mm, xo, xn: b * mm + (1.0 - b) * (xo - xn) / safe_lr,
-                state["m"],
-                x,
-                x_new,
-            )
-            x = x_new
-            new_state["m"] = m
-
-        elif algo == "d2-dmsgd":
-            m = _axpy(b, state["m"], g)
-            z = jax.tree.map(
-                lambda xx, xp, mm, mp: 2.0 * xx - xp - lr * (mm - mp),
-                x,
-                state["x_prev"],
-                m,
-                state["m_prev"],
-            )
-            x_new, comp_state = gossip(z, step_idx, comp_state)
-            new_state.update(m=m, x_prev=x, m_prev=m)
-            x = x_new
-
-        elif algo == "slowmo":
-            # inner DmSGD
-            m = _axpy(b, state["m"], g)
-            x, comp_state = gossip(_sub(x, _scale(lr, m)), step_idx, comp_state)
-            new_state["m"] = m
-
-            def sync(args):
-                x, u, anchor = args
-                xbar = mean(x)
-                u = jax.tree.map(
-                    lambda uu, a, xb: cfg.slowmo_momentum * uu + (a - xb) / safe_lr,
-                    u,
-                    anchor,
-                    xbar,
-                )
-                x = jax.tree.map(
-                    lambda a, uu: a - cfg.slowmo_lr * lr * uu, anchor, u
-                )
-                return x, u, x
-
-            def no_sync(args):
-                return args
-
-            do_sync = (step_idx + 1) % cfg.slowmo_period == 0
-            x, u, anchor = jax.lax.cond(
-                do_sync, sync, no_sync, (x, state["u"], state["anchor"])
-            )
-            new_state["u"] = u
-            new_state["anchor"] = anchor
-
-        elif algo == "decentlam":
-            # Alg. 2 / eq. (17): one payload, sendable right after backward.
-            payload = _sub(x, _scale(lr, g))
-            mixed, comp_state = gossip(payload, step_idx, comp_state)
-            g_tilde = jax.tree.map(lambda xx, mx: (xx - mx) / safe_lr, x, mixed)
-            x, m = _momentum_step(x, g_tilde, state["m"])
-            new_state["m"] = m
-
-        else:  # pragma: no cover
-            raise AssertionError(algo)
-
-        x = _apply_decoupled_wd(cfg, lr, x)
+        x, new_state, comp_state = run_update(
+            spec,
+            cfg,
+            x=_f32(params),
+            g=_f32(grads),
+            state=state,
+            lr=lr,
+            step_idx=step_idx,
+            gossip=gossip,
+            mean=mean,
+            comp_state=comp_state,
+            stage=reference_stage,
+        )
         out = jax.tree.map(lambda p, nx: nx.astype(p.dtype), params, x)
         return out, new_state, comp_state
 
-    gossips = {
-        "pmsgd": 0,
-        "pmsgd-lars": 0,
-        "dsgd": 1,
-        "dmsgd": 1,
-        "da-dmsgd": 2,
-        "awc-dmsgd": 1,
-        "slowmo": 1,
-        "qg-dmsgd": 1,
-        "d2-dmsgd": 1,
-        "decentlam": 1,
-    }[algo]
-    return Optimizer(config=cfg, init=init, step=step, gossips_per_step=gossips)
+    return Optimizer(
+        config=cfg,
+        init=init,
+        step=step,
+        gossips_per_step=spec.gossips_per_step,
+    )

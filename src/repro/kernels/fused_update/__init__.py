@@ -1,0 +1,3 @@
+from .ops import LANES, decentlam_update, fused_stage, make_stage
+
+__all__ = ["LANES", "decentlam_update", "fused_stage", "make_stage"]

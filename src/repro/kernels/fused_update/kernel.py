@@ -1,0 +1,112 @@
+"""Generic fused optimizer-stage Pallas TPU kernel.
+
+One kernel family covers every elementwise stage of every algorithm's update
+tail (see ``repro.core.update_spec``): the stage op is a compile-time enum,
+so each (kind, op, MathCtx) pair lowers to its own fully-fused elementwise
+kernel — one read of the operands, one write of the outputs, per leaf.
+
+Tensors are flattened and tiled (rows, 1024) with (block_rows, 1024) VMEM
+blocks — lane-dim 1024 = 8 x 128 keeps the VPU fully fed.  The traced
+scalars (lr, clip scale, LARS trust ratio) arrive as a single (3,) f32
+vector in SMEM; all other constants (beta, weight decay, nesterov, the op
+itself) are baked into the kernel.
+
+The kernel body calls the *same* ``pre_math``/``post_math`` the pure-JAX
+reference path uses, so parity with the stacked oracle holds by
+construction; ``interpret=True`` runs the identical math on CPU for tests.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.update_spec import MathCtx, post_math, pre_math
+
+LANES = 1024
+
+_SDS_HAS_VMA = "vma" in inspect.signature(jax.ShapeDtypeStruct.__init__).parameters
+
+
+def _stage_body(s_ref, *refs, kind: str, op: str, ctx: MathCtx, names_in, names_out):
+    ins, outs = refs[: len(names_in)], refs[len(names_in) :]
+    s = {"lr": s_ref[0], "gs": s_ref[1], "r": s_ref[2]}
+    vals = {n: r[...].astype(jnp.float32) for n, r in zip(names_in, ins)}
+    math = pre_math if kind == "pre" else post_math
+    res = math(op, ctx, s, **vals)
+    for n, oref in zip(names_out, outs):
+        oref[...] = res[n].astype(oref.dtype)
+
+
+def _vma_of(x):
+    """Varying manual axes of ``x`` on jax versions that track them."""
+    if not hasattr(jax, "typeof"):
+        return frozenset()
+    try:
+        return jax.typeof(x).vma
+    except Exception:  # noqa: BLE001 — outside a trace / no vma support
+        return frozenset()
+
+
+def fused_stage_kernel(
+    kind: str,
+    op: str,
+    ctx: MathCtx,
+    scalars: jax.Array,  # (3,) f32 in SMEM: lr, clip scale, LARS ratio
+    inputs: dict[str, jax.Array],  # each (rows, LANES)
+    out_dtypes: dict[str, jnp.dtype],
+    *,
+    block_rows: int = 64,
+    interpret: bool = False,
+):
+    """One fused elementwise stage over pre-tiled operands."""
+    names_in = tuple(inputs)
+    names_out = tuple(out_dtypes)
+    first = inputs[names_in[0]]
+    rows = first.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    bs = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+
+    # inside a check_vma shard_map (newer jax) the outputs must declare their
+    # varying axes; they inherit the inputs' (elementwise kernel), and every
+    # operand must be promoted to the same variance (scalars are replicated)
+    vma = frozenset()
+    for a in inputs.values():
+        vma = vma | _vma_of(a)
+    if vma:
+
+        def _promote(a):
+            missing = tuple(sorted(vma - _vma_of(a)))
+            return jax.lax.pvary(a, missing) if missing else a
+
+        scalars = _promote(scalars)
+        inputs = {n: _promote(a) for n, a in inputs.items()}
+
+    if _SDS_HAS_VMA:
+        out_shape = [
+            jax.ShapeDtypeStruct(first.shape, dt, vma=vma)
+            for dt in out_dtypes.values()
+        ]
+    else:
+        out_shape = [
+            jax.ShapeDtypeStruct(first.shape, dt) for dt in out_dtypes.values()
+        ]
+
+    kern = functools.partial(
+        _stage_body, kind=kind, op=op, ctx=ctx, names_in=names_in, names_out=names_out
+    )
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + [bs] * len(names_in),
+        out_specs=[bs] * len(names_out),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, *inputs.values())
+    return dict(zip(names_out, outs))

@@ -5,10 +5,9 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .kernel import mlstm_chunk_kernel
-from .ref import init_state, mlstm_chunked
+from .ref import mlstm_chunked
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "impl", "interpret"))

@@ -25,12 +25,9 @@ Validated against fully-unrolled XLA compiles in tests/test_costmodel.py.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 
 @dataclasses.dataclass

@@ -26,7 +26,6 @@ Usage::
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -34,6 +33,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from .. import compat
 from ..configs import ARCHS, SHAPES, get_config, shape_applicable
 from ..configs.base import ModelConfig, ShapeSpec
 from ..core.optimizers import make_optimizer
@@ -44,7 +44,7 @@ from ..train.step import TrainConfig, build_train_step
 from ..train.train_state import abstract_train_state
 from .costmodel import analyze_jaxpr
 from .mesh import MODEL_AXIS, make_production_mesh, node_axes_of, n_nodes_of
-from .roofline import HW, model_flops, parse_collective_bytes, roofline_terms
+from .roofline import model_flops, parse_collective_bytes, roofline_terms
 
 
 def _abstract_batch(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
@@ -170,7 +170,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, args) -> dict:
 
     ma = compiled.memory_analysis()
     print(f"  memory_analysis: {ma}")
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     print(
         "  cost_analysis (XLA, loop bodies once): flops=%.4g bytes=%.4g"
         % (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0))

@@ -23,7 +23,6 @@ Examples::
 
 import argparse
 import os
-import sys
 
 
 def _parse():

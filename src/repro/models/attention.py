@@ -22,7 +22,6 @@ Sharding scheme (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax

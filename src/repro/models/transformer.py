@@ -15,7 +15,6 @@ fully-manual shard_map (tp=16 production mesh) — see DESIGN.md §4.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any
 

@@ -14,9 +14,9 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig
 from ..models import transformer as T
 from ..models.layers import TPContext
@@ -73,7 +73,7 @@ def build_prefill_step(
             target_len=scfg.target_len or batch["tokens"].shape[1],
         )
 
-    sm = jax.shard_map(
+    sm = shard_map(
         fn,
         mesh=mesh,
         in_specs=(pspecs, bspec),
@@ -101,7 +101,7 @@ def build_decode_step(
             target_len=target_len,
         )
 
-    sm = jax.shard_map(
+    sm = shard_map(
         fn,
         mesh=mesh,
         in_specs=(pspecs, tok_spec, cspecs, P()),

@@ -10,32 +10,33 @@ Per step, on every node (= one (pod, data) mesh index):
    the node axes and mean = psum (PmSGD / SlowMo sync);
 4. metrics psum-reduced to replicated scalars.
 
-The DecentLaM fast path (``fused_update=True``) routes the elementwise tail
-through the ``decentlam_update`` kernel (one HBM pass).
+The fused fast path (``fused_update=True``) routes every algorithm's
+elementwise tail — payload build, momentum accumulate, Nesterov, weight
+decay, LARS scaling, recombination — through the Pallas fused-update engine
+(one HBM pass per stage; see ``repro.kernels.fused_update``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import LEGACY_SHARD_MAP, shard_map
 from ..configs.base import ModelConfig
 from ..core.gossip import (
     make_allgather_gossip,
     make_ppermute_gossip,
     make_psum_mean,
-    make_stacked_gossip,
-    make_stacked_mean,
 )
-from ..core.optimizers import OptimizerConfig, make_optimizer, _preprocess_grads
+from ..core.optimizers import OptimizerConfig, make_optimizer
 from ..core.schedules import ScheduleConfig, build_schedule
-from ..core.topology import Topology, build_topology
-from ..kernels.decentlam_update.ops import decentlam_update
+from ..core.topology import build_topology
+from ..core.update_spec import run_update, update_spec
+from ..kernels.fused_update import make_stage
 from ..models import transformer as T
 from ..models.layers import TPContext
 from .train_state import stacked_state_specs
@@ -140,6 +141,41 @@ def build_train_step(
     def loss_fn(params, batch):
         return T.forward_loss(params, batch, cfg, tp_ctx, rt)
 
+    # Legacy shard_map AD (pre-vma jax) differs from the modern tracker in
+    # two ways that matter inside the fully-manual region:
+    #   1. grads of model-axis-*replicated* params (norm scales) stay
+    #      partial per shard — the cross-shard psum must be added by hand;
+    #   2. psum transposes to psum (the old pmap convention), so the
+    #      replicated loss cotangent picks up one net factor of tp on every
+    #      backward path — divide it back out.
+    # Both are no-ops on modern jax (vma AD emits exactly this), and the
+    # distributed == stacked equivalence tests check the result leaf-exactly.
+    pspec_leaves = jax.tree.leaves(
+        T.param_specs(cfg, tp, model_axis), is_leaf=lambda s: isinstance(s, P)
+    )
+
+    def _spec_axes(spec) -> set:
+        axes = set()
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in entry if isinstance(entry, tuple) else (entry,):
+                axes.add(a)
+        return axes
+
+    def reduce_replicated_grads(grads):
+        if not LEGACY_SHARD_MAP or tp == 1:
+            return grads
+        inv_tp = 1.0 / tp
+        leaves, treedef = jax.tree.flatten(grads)
+        fixed = [
+            g * inv_tp
+            if model_axis in _spec_axes(s)
+            else jax.lax.psum(g, model_axis) * inv_tp
+            for g, s in zip(leaves, pspec_leaves)
+        ]
+        return jax.tree.unflatten(treedef, fixed)
+
     def grads_of(params, batch):
         accum = tcfg.grad_accum
         if accum == 1:
@@ -180,22 +216,26 @@ def build_train_step(
         lr = lr_fn(step_idx)
 
         grads, loss, metrics = grads_of(params, batch)
+        grads = reduce_replicated_grads(grads)
 
-        if tcfg.fused_update and tcfg.algorithm == "decentlam":
-            # DecentLaM fast path: payload -> gossip -> fused kernel tail
-            x32 = jax.tree.map(lambda x: x.astype(jnp.float32), params)
-            g = _preprocess_grads(tcfg.opt_config(), x32, grads)
-            payload = jax.tree.map(lambda x, gg: x - lr * gg, x32, g)
-            mixed, comp_state = gossip(payload, step_idx, comp_state)
-            new_params, new_m = decentlam_update(
-                x32, mixed, opt_state["m"], lr,
-                beta=tcfg.momentum, impl=tcfg.fused_impl,
+        if tcfg.fused_update:
+            # fused fast path (any algorithm): the spec's phases run with
+            # the Pallas stage executor — payload build and recombination
+            # are one HBM pass each, with the gossip in between
+            ocfg = tcfg.opt_config()
+            new_params, new_opt, comp_state = run_update(
+                update_spec(ocfg),
+                ocfg,
+                x=params,
+                g=jax.tree.map(lambda gg: gg.astype(jnp.float32), grads),
+                state=opt_state,
+                lr=lr,
+                step_idx=step_idx,
+                gossip=gossip,
+                mean=mean,
+                comp_state=comp_state,
+                stage=make_stage(tcfg.fused_impl),
             )
-            new_params = jax.tree.map(
-                lambda p, np_: np_.astype(p.dtype), params, new_params
-            )
-            new_opt = dict(opt_state)
-            new_opt["m"] = new_m
         else:
             new_params, new_opt, comp_state = opt.step(
                 params,
@@ -237,7 +277,7 @@ def build_train_step(
         mspecs["consensus_sq"] = P()
 
     all_axes = set(node_axes) | {model_axis}
-    step_sm = jax.shard_map(
+    step_sm = shard_map(
         step_fn,
         mesh=mesh,
         in_specs=(sspecs, bspecs),

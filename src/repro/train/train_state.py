@@ -9,7 +9,6 @@ materializes its own shard (mandatory at 8B x 32 replicas); the dry-run uses
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -1,0 +1,77 @@
+"""CI regression gate: fail on any test failure not in the allowlist.
+
+Usage::
+
+    python tests/ci/check_regressions.py report.xml tests/ci/allowed_failures.txt
+
+Parses a pytest junit XML report and compares the set of failed/errored
+test ids against the allowlist (one ``path::test_id`` per line, ``#``
+comments).  Exit code 1 when a test outside the allowlist fails — i.e. a
+regression vs the recorded baseline — or when the report contains no tests
+at all (catastrophic collection failure).  Allowlisted tests that now pass
+are reported so the baseline can be tightened.
+
+The seed of this repo was 16 failed / 161 passed; the baseline file tracks
+what is *currently* known-failing (empty = everything must pass).
+"""
+
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def failed_ids(report_path: str) -> tuple[set[str], int]:
+    tree = ET.parse(report_path)
+    root = tree.getroot()
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    failed: set[str] = set()
+    total = 0
+    for suite in suites:
+        for case in suite.iter("testcase"):
+            total += 1
+            tid = f"{case.get('classname', '')}::{case.get('name', '')}"
+            if case.find("failure") is not None or case.find("error") is not None:
+                failed.add(tid)
+    return failed, total
+
+
+def read_allowlist(path: str) -> set[str]:
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return set()
+    return {
+        ln.strip() for ln in lines if ln.strip() and not ln.strip().startswith("#")
+    }
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    report = sys.argv[1]
+    allowlist = read_allowlist(sys.argv[2]) if len(sys.argv) > 2 else set()
+
+    failed, total = failed_ids(report)
+    if total == 0:
+        print(f"REGRESSION GATE: {report} contains no test results")
+        return 1
+
+    new = sorted(failed - allowlist)
+    fixed = sorted(allowlist - failed)
+    print(f"{total} tests, {len(failed)} failed, allowlist {len(allowlist)}")
+    for tid in fixed:
+        print(f"  now passing (remove from allowlist): {tid}")
+    if new:
+        print(f"REGRESSION GATE: {len(new)} failure(s) not in the baseline:")
+        for tid in new:
+            print(f"  {tid}")
+        return 1
+    print("REGRESSION GATE: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

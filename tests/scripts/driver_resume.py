@@ -1,7 +1,6 @@
 
 """Subprocess worker: the end-to-end CLI driver — train, checkpoint, resume."""
 
-import os
 import sys
 import tempfile
 

@@ -2,6 +2,7 @@
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import (
     OptimizerConfig,
@@ -11,6 +12,8 @@ from repro.core import (
     make_optimizer,
     run_stacked,
 )
+
+pytestmark = pytest.mark.slow
 
 
 def test_thm2_decaying_lr_converges_to_optimum():

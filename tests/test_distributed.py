@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = [pytest.mark.distributed, pytest.mark.slow]
+
 SCRIPTS = os.path.join(os.path.dirname(__file__), "scripts")
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OptimizerConfig, build_topology, make_optimizer
-from repro.core.gossip import make_stacked_gossip, make_stacked_mean
+from repro.core import OptimizerConfig, make_optimizer
+from repro.core.gossip import make_stacked_gossip
 from repro.launch.elastic import apply_recovery, plan_recovery
 from repro.models.resnet_cifar import resnet20_apply, resnet20_init, resnet20_loss
 from repro.train.train_state import init_train_state

@@ -11,7 +11,6 @@ from repro.core import (
     get_compressor,
     gossip_bytes_per_step,
     make_stacked_gossip,
-    make_stacked_mean,
     wire_bytes,
 )
 
@@ -91,3 +90,58 @@ def test_wire_bytes_model():
     assert wire_bytes(1000, "bf16") == 500
     assert wire_bytes(1000, "int8") == pytest.approx(254)
     assert wire_bytes(4000, "topk:0.01") == pytest.approx(0.01 * 1000 * 8)
+
+
+# ---------------------------------------------------------------------------
+# gossip_bytes_per_step: the Fig. 6 comm-volume model, impl x compression
+# ---------------------------------------------------------------------------
+
+N = 8
+PAYLOAD = 4.0 * 1_000_000  # 1M fp32 params on the wire
+COMPRESSIONS = [None, "bf16", "int8", "topk:0.05"]
+# sends per step for n=8, averaged over the topology period
+DEGREES = {"ring": 2.0, "exp": 6.0, "one-peer-exp": 1.0, "torus": 3.0}
+
+
+@pytest.mark.parametrize("comp", COMPRESSIONS)
+def test_wire_bytes_matches_encoded_message(comp):
+    """The analytic model must equal the actual encoded bytes on the wire."""
+    n = 4000
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(n), jnp.float32)
+    c = get_compressor(comp)
+    msg, _ = c.encode(x, c.init(x))
+    actual = sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(msg))
+    assert actual == pytest.approx(wire_bytes(x.nbytes, comp), rel=1e-6)
+
+
+@pytest.mark.parametrize("comp", COMPRESSIONS)
+@pytest.mark.parametrize("name", sorted(DEGREES))
+def test_gossip_bytes_ppermute_scales_with_degree_and_compression(name, comp):
+    topo = build_topology(name, N)
+    out = gossip_bytes_per_step(topo, PAYLOAD, impl="ppermute", compression=comp)
+    assert out["hops"] == DEGREES[name]
+    assert out["egress_bytes"] == pytest.approx(
+        DEGREES[name] * wire_bytes(PAYLOAD, comp)
+    )
+
+
+@pytest.mark.parametrize("comp", COMPRESSIONS)
+def test_gossip_bytes_allgather_ignores_compression(comp):
+    """The naive baseline ships raw fp32 (GSPMD all-gathers the payload
+    before the local W-row reduction, so compression can't help it)."""
+    topo = build_topology("ring", N)
+    out = gossip_bytes_per_step(topo, PAYLOAD, impl="allgather", compression=comp)
+    assert out["egress_bytes"] == pytest.approx((N - 1) * PAYLOAD)
+    assert out["hops"] == N - 1
+
+
+def test_gossip_bytes_compression_ordering():
+    """For any fixed topology: topk:0.05 < int8 < bf16 < none egress."""
+    topo = build_topology("exp", N)
+
+    def egress(comp):
+        return gossip_bytes_per_step(topo, PAYLOAD, compression=comp)[
+            "egress_bytes"
+        ]
+
+    assert egress("topk:0.05") < egress("int8") < egress("bf16") < egress(None)

@@ -7,7 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decentlam_update.ops import decentlam_update
+from repro.core import build_topology, make_stacked_gossip, make_stacked_mean
+from repro.core.optimizers import ALGORITHMS, OptimizerConfig, make_optimizer
+from repro.core.update_spec import run_update, update_spec
+from repro.kernels.fused_update import decentlam_update, make_stage
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import reference_attention
 from repro.kernels.mlstm_chunk.ops import mlstm
@@ -153,3 +156,97 @@ def test_decentlam_update_semantics():
     np.testing.assert_allclose(
         np.asarray(p["w"]), np.asarray(mix - 0.1 * 0.9 * m), atol=1e-5
     )
+
+
+# ---------------------------------------------------------------------------
+# Fused multi-algorithm engine: every algorithm's full update tail through
+# the Pallas stage kernels (interpret mode) vs the stacked reference step.
+# ---------------------------------------------------------------------------
+
+N_NODES = 8
+
+
+def _fused_vs_reference(cfg: OptimizerConfig, dt, *, steps=1, lr=0.01):
+    """Run `steps` of the stacked harness via both paths and compare."""
+    rng = np.random.default_rng(7)
+    topo = build_topology("exp", N_NODES)
+    gossip, mean = make_stacked_gossip(topo), make_stacked_mean(N_NODES)
+    params = {
+        "w": jnp.asarray(rng.standard_normal((N_NODES, 37)), dt),
+        "b": jnp.asarray(rng.standard_normal((N_NODES, 5, 3)), dt),
+    }
+    opt = make_optimizer(cfg)
+    spec = update_spec(cfg)
+    stage = make_stage("pallas_interpret")
+
+    p_ref, p_fus = params, params
+    s_ref, s_fus = opt.init(params), opt.init(params)
+    for k in range(steps):
+        grads = {
+            kk: jnp.asarray(rng.standard_normal(v.shape), jnp.float32)
+            for kk, v in params.items()
+        }
+        p_ref, s_ref, _ = opt.step(
+            p_ref, grads, s_ref, lr=lr, step_idx=jnp.int32(k),
+            gossip=gossip, mean=mean,
+        )
+        x, s_fus, _ = run_update(
+            spec, cfg, x=p_fus, g=grads, state=s_fus, lr=lr,
+            step_idx=jnp.int32(k), gossip=gossip, mean=mean,
+            comp_state=(), stage=stage,
+        )
+        p_fus = jax.tree.map(lambda p, v: v.astype(p.dtype), p_fus, x)
+
+    # the momentum recovery (x - mix)/lr amplifies roundoff by 1/lr per
+    # step, so state comparisons need a relative component
+    tol = 4e-2 if dt == jnp.bfloat16 else 2e-5
+    rtol = 2e-3
+    for kk in params:
+        np.testing.assert_allclose(
+            np.asarray(p_ref[kk], np.float32),
+            np.asarray(p_fus[kk], np.float32),
+            rtol=rtol,
+            atol=tol,
+            err_msg=f"{cfg.algorithm} params[{kk}]",
+        )
+    for sk in s_ref:
+        for kk in params:
+            np.testing.assert_allclose(
+                np.asarray(s_ref[sk][kk], np.float32),
+                np.asarray(s_fus[sk][kk], np.float32),
+                rtol=rtol,
+                atol=tol,
+                err_msg=f"{cfg.algorithm} state[{sk}][{kk}]",
+            )
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_fused_engine_matches_reference(algo, dt):
+    cfg = OptimizerConfig(
+        algorithm=algo, momentum=0.9, weight_decay=0.01, slowmo_period=2
+    )
+    _fused_vs_reference(cfg, dt, steps=2)
+
+
+@pytest.mark.parametrize(
+    "cfg",
+    [
+        OptimizerConfig(algorithm="decentlam", momentum=0.9, nesterov=True),
+        OptimizerConfig(algorithm="dmsgd", momentum=0.9, nesterov=True,
+                        weight_decay=0.1, decoupled_wd=True),
+        OptimizerConfig(algorithm="decentlam", momentum=0.9, grad_clip=0.5),
+        OptimizerConfig(algorithm="pmsgd-lars", momentum=0.9,
+                        weight_decay=1e-4, lars_trust=0.02),
+        OptimizerConfig(algorithm="dmsgd", momentum=0.9, lars=True,
+                        weight_decay=1e-4, grad_clip=1.0),
+        OptimizerConfig(algorithm="da-dmsgd", momentum=0.9, weight_decay=0.1,
+                        decoupled_wd=True),
+    ],
+    ids=["nesterov", "nesterov-decoupled-wd", "clip", "lars", "lars-clip",
+         "two-gossip-decoupled-wd"],
+)
+def test_fused_engine_feature_flags(cfg):
+    """Nesterov / weight decay / clip / LARS fold into the fused stages."""
+    _fused_vs_reference(cfg, jnp.float32, steps=2)

@@ -1,7 +1,6 @@
 """The model's attention layer routed through the Pallas flash kernel
 (interpret mode) must match the jnp chunked path."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

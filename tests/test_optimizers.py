@@ -1,6 +1,5 @@
 """Algorithm-level unit tests on the stacked reference harness."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -14,7 +13,8 @@ from repro.core import (
     make_stacked_mean,
     run_stacked,
 )
-from repro.core.optimizers import ALGORITHMS, state_keys
+from repro.core.optimizers import ALGORITHMS, _preprocess_grads, state_keys
+from repro.core.update_spec import grad_scalars, math_ctx, reference_stage
 
 
 def _run(algo, topo_name, *, n=8, steps=200, lr=1e-3, beta=0.9, het=1.0):
@@ -159,6 +159,33 @@ def test_nesterov_matches_closed_form():
     )
     np.testing.assert_allclose(np.asarray(x2), -0.1 * 1.9, rtol=1e-6)
     np.testing.assert_allclose(np.asarray(st["m"]), 1.0, rtol=1e-6)
+
+
+def test_preprocess_grads_matches_fused_scalar_folding():
+    """The fused stages fold clip/coupled-wd/LARS as scalars (grad_scalars +
+    _g_eff); _preprocess_grads is the unfused semantic oracle — pin them."""
+    cfg = OptimizerConfig(
+        algorithm="dmsgd", momentum=0.9, weight_decay=0.05, grad_clip=0.5,
+        lars=True, lars_trust=0.02,
+    )
+    rng = np.random.default_rng(11)
+    x = {"a": jnp.asarray(rng.standard_normal((7, 3)), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal(11), jnp.float32)}
+    g = {"a": jnp.asarray(rng.standard_normal((7, 3)), jnp.float32),
+         "b": jnp.asarray(rng.standard_normal(11), jnp.float32)}
+
+    want = _preprocess_grads(cfg, x, g)
+
+    scalars = dict(grad_scalars(cfg, x, g))
+    scalars["lr"] = jnp.float32(0.01)
+    ctx = math_ctx(cfg, nesterov_ok=True, apply_decoupled_wd=False)
+    got = reference_stage(
+        "pre", "identity_g", ctx, {"x": x, "g": g}, scalars, x
+    )["payload"]
+    for k in x:
+        np.testing.assert_allclose(
+            np.asarray(want[k]), np.asarray(got[k]), rtol=1e-6, atol=1e-7
+        )
 
 
 def test_nesterov_decentlam_converges():

@@ -1,15 +1,22 @@
-"""Property-based tests (hypothesis) on the system's invariants."""
+"""Property-based tests (hypothesis) on the system's invariants.
 
-import jax
+Requires the ``test`` extra (``pip install -e .[test]``); the module skips
+cleanly when hypothesis isn't installed so bare-environment collection
+still works.
+"""
+
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.topology import metropolis_weights, rho, _classes_from_W
-from repro.core import build_topology, make_stacked_gossip, consensus_distance
-from repro.kernels.decentlam_update.ops import decentlam_update
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import reference_attention
+pytest.importorskip("hypothesis", reason="install the [test] extra")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.topology import metropolis_weights, rho, _classes_from_W  # noqa: E402
+from repro.core import build_topology, make_stacked_gossip, consensus_distance  # noqa: E402
+from repro.kernels.fused_update import decentlam_update  # noqa: E402
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
+from repro.kernels.flash_attention.ref import reference_attention  # noqa: E402
 
 SET = settings(max_examples=25, deadline=None)
 

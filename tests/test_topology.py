@@ -2,7 +2,6 @@ import numpy as np
 import pytest
 
 from repro.core.topology import (
-    TOPOLOGIES,
     build_topology,
     metropolis_weights,
     rho,
