@@ -3,8 +3,10 @@
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 
 ``kernel_microbench`` additionally writes ``BENCH_kernels.json``
-(per-algorithm fused/unfused tail timings) so the perf trajectory is
-machine-readable across PRs.
+(per-algorithm fused/unfused tail timings) and ``sim_scenarios`` writes
+``BENCH_sim.json`` (per-scenario bias/throughput under the cluster
+simulator) so the perf/robustness trajectory is machine-readable across
+PRs; both are gated in CI (``tests/ci/check_bench_sim.py``).
 
 Prints ``name,...`` CSV blocks per benchmark:
 
@@ -15,6 +17,7 @@ batchsize_accuracy          Tables 1/3/4 proxy (batch-size sweep)
 topology_sweep              Table 5 (topology robustness)
 comm_volume                 Fig. 6 (communication cost model)
 kernel_microbench           kernel hot-spot timings
+sim_scenarios               cluster-scenario bias + throughput
 ==========================  ====================================
 """
 
@@ -29,6 +32,7 @@ from . import (
     comm_volume,
     kernel_microbench,
     serving_microbench,
+    sim_scenarios,
     table2_bias_scaling,
     topology_sweep,
 )
@@ -41,6 +45,7 @@ BENCHES = {
     "comm_volume": comm_volume.run,
     "kernel_microbench": kernel_microbench.run,
     "serving_microbench": serving_microbench.run,
+    "sim_scenarios": sim_scenarios.run,
 }
 
 
@@ -52,6 +57,11 @@ def main() -> None:
         default="BENCH_kernels.json",
         help="where kernel_microbench writes its machine-readable table",
     )
+    p.add_argument(
+        "--sim-json",
+        default="BENCH_sim.json",
+        help="where sim_scenarios writes its machine-readable table",
+    )
     args = p.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     for name in names:
@@ -59,6 +69,8 @@ def main() -> None:
         t0 = time.time()
         if name == "kernel_microbench":
             BENCHES[name](json_path=args.kernels_json)
+        elif name == "sim_scenarios":
+            BENCHES[name](json_path=args.sim_json)
         else:
             BENCHES[name]()
         print(f"# {name} done in {time.time()-t0:.1f}s")

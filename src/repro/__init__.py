@@ -1,8 +1,9 @@
 """DecentLaM on TPU: a decentralized large-batch training framework in JAX.
 
 See README.md / DESIGN.md.  Subpackages: ``core`` (the paper's algorithms),
-``models`` (manual-TP model zoo), ``kernels`` (Pallas TPU kernels),
-``train`` (distributed runtime), ``data``, ``launch``, ``configs``.
+``sim`` (discrete-event cluster simulator), ``models`` (manual-TP model
+zoo), ``kernels`` (Pallas TPU kernels), ``train`` (distributed runtime),
+``data``, ``launch``, ``configs``.
 """
 
 from . import compat  # noqa: F401  — applies jax version-compat config

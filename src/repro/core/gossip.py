@@ -215,12 +215,24 @@ def gossip_bytes_per_step(
 ) -> dict[str, float]:
     """Per-node egress bytes + latency hops for one gossip step (averaged over
     the topology period).  For comparison, ring all-reduce of the same payload
-    costs ``2 (n-1)/n * payload`` bytes and ``2 (n-1)`` hops."""
+    costs ``2 (n-1)/n * payload`` bytes and ``2 (n-1)`` hops.
+
+    The ``allgather`` baseline ships raw fp32: GSPMD all-gathers the payload
+    before the local W-row reduction, so message compression cannot be
+    applied on that path — requesting it is a modeling error and raises
+    rather than silently pricing bytes that would never be saved.
+    """
     from .compression import wire_bytes
 
     n = topology.n
-    per_payload = wire_bytes(payload_bytes, compression)
     if impl == "allgather":
+        if compression is not None:
+            raise ValueError(
+                "impl='allgather' cannot compress: the payload is "
+                "all-gathered raw before the local W-row reduction; pass "
+                "compression=None or use impl='ppermute'"
+            )
         return {"egress_bytes": (n - 1) / n * payload_bytes * n, "hops": n - 1}
+    per_payload = wire_bytes(payload_bytes, compression)
     sends = np.mean([len(topology.edge_classes(t)) for t in range(topology.period)])
     return {"egress_bytes": float(sends) * per_payload, "hops": float(sends)}

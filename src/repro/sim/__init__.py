@@ -1,0 +1,62 @@
+"""Discrete-event cluster simulator: heterogeneous nodes, stale gossip,
+failure scenarios.
+
+Turns the stacked reference oracle + topology fault tolerance + elastic
+controller + cost model into a scenario engine: any algorithm from
+:mod:`repro.core.optimizers` runs under a virtual cluster with per-node
+clocks, bounded-staleness gossip, fail-stop/rejoin/slowdown/link-degrade
+schedules, and wall-clock projection.  See ``README.md`` §Simulator and
+``tests/test_sim.py``.
+"""
+
+from .clock import (
+    ConstantDuration,
+    EventQueue,
+    LognormalDuration,
+    PeriodicStragglerDuration,
+    node_rngs,
+)
+from .delayed_gossip import (
+    delay_matrix,
+    init_delay_state,
+    make_delayed_stacked_gossip,
+    run_delayed,
+)
+from .events import (
+    SCENARIOS,
+    FailStop,
+    LinkDegrade,
+    Rejoin,
+    Scenario,
+    Slowdown,
+    get_scenario,
+)
+from .metrics import SimResult, effective_batch_fraction
+from .runner import simulate
+from .wallclock import payload_bytes, project_wallclock, step_costs, step_time_seconds
+
+__all__ = [
+    "ConstantDuration",
+    "EventQueue",
+    "FailStop",
+    "LinkDegrade",
+    "LognormalDuration",
+    "PeriodicStragglerDuration",
+    "Rejoin",
+    "SCENARIOS",
+    "Scenario",
+    "SimResult",
+    "Slowdown",
+    "delay_matrix",
+    "effective_batch_fraction",
+    "get_scenario",
+    "init_delay_state",
+    "make_delayed_stacked_gossip",
+    "node_rngs",
+    "payload_bytes",
+    "project_wallclock",
+    "run_delayed",
+    "simulate",
+    "step_costs",
+    "step_time_seconds",
+]

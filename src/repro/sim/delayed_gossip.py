@@ -1,0 +1,196 @@
+"""Stacked gossip with per-edge delay buffers (bounded staleness).
+
+``x_i <- w_ii x_i(t) + sum_j w_ij x_j(t - d_ij)``: every edge ``(i, j)``
+carries a fixed integer delay ``d_ij`` and the receiver mixes the sender's
+payload from ``d_ij`` gossip rounds ago — the synchronous model of
+AD-PSGD-style asynchrony (each node mixes its neighbors' last *available*
+iterates).  Self-contributions are always current (``d_ii = 0``), and before
+the buffers warm up every edge uses the oldest payload recorded so far, so
+round 0 is identical to fresh gossip.
+
+At uniform delay 0 this *is* :func:`repro.core.gossip.make_stacked_gossip`
+(the factory returns it directly), so the zero-staleness simulator degrades
+to the lockstep oracle bit-exactly.
+
+The history buffers ride the optimizer's ``comp_state`` channel (the same
+pytree slot the distributed path uses for compression error-feedback).  For
+algorithms with more than one gossip per step (da-dmsgd) the state is a
+tuple of per-call slots rotated structurally on every call, so each gossip
+phase keeps its own independent history.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gossip import GossipFn, make_stacked_gossip, make_stacked_mean
+from ..core.optimizers import Optimizer
+from ..core.topology import Topology
+
+Tree = Any
+
+__all__ = [
+    "delay_matrix",
+    "make_delayed_stacked_gossip",
+    "init_delay_state",
+    "run_delayed",
+]
+
+
+def delay_matrix(n: int, delay) -> np.ndarray:
+    """Normalize a delay spec (int or ``(n, n)`` array) to an int matrix with
+    a zero diagonal (self-contributions are never stale)."""
+    if np.isscalar(delay):
+        D = np.full((n, n), int(delay), dtype=np.int64)
+    else:
+        D = np.asarray(delay, dtype=np.int64).copy()
+        assert D.shape == (n, n), f"delay matrix must be ({n}, {n})"
+    assert (D >= 0).all(), "delays must be non-negative"
+    np.fill_diagonal(D, 0)
+    return D
+
+
+def make_delayed_stacked_gossip(topology: Topology, delay) -> GossipFn:
+    """Delayed dense gossip over stacked ``(n, ...)`` leaves.
+
+    ``comp_state`` must come from :func:`init_delay_state`; each call
+    consumes the first slot and rotates it to the back.
+    """
+    n = topology.n
+    D = delay_matrix(n, delay)
+    depth = int(D.max())
+    if depth == 0:
+        return make_stacked_gossip(topology)
+
+    uniq = [int(d) for d in np.unique(D)]
+    # per-phase, per-delay weight matrices: W_t masked to edges with delay d
+    Wds: list[list[tuple[int, jnp.ndarray]]] = []
+    for t in range(topology.period):
+        W = topology.W(t)
+        per_t = []
+        for d in uniq:
+            Wd = np.where(D == d, W, 0.0)
+            if (Wd != 0.0).any():
+                per_t.append((d, jnp.asarray(Wd, jnp.float32)))
+        Wds.append(per_t)
+
+    ring = depth + 1
+
+    def apply_phase(t: int, tree: Tree, slot: dict) -> tuple[Tree, dict]:
+        count = slot["count"]
+        pos = count % ring
+
+        def mix_leaf(hist, x):
+            x32 = x.astype(jnp.float32)
+            hist = jax.lax.dynamic_update_index_in_dim(hist, x32, pos, axis=0)
+            out = jnp.zeros_like(x32)
+            for d, Wd in Wds[t]:
+                # before warmup, fall back to the oldest recorded payload
+                d_eff = jnp.minimum(d, count)
+                read = (count - d_eff) % ring
+                stale = jax.lax.dynamic_index_in_dim(hist, read, axis=0, keepdims=False)
+                out = out + jnp.einsum("ij,j...->i...", Wd, stale)
+            return out.astype(x.dtype), hist
+
+        leaves, treedef = jax.tree.flatten(tree)
+        hists = treedef.flatten_up_to(slot["hist"])
+        mixed, new_hists = [], []
+        for x, h in zip(leaves, hists):
+            m, h = mix_leaf(h, x)
+            mixed.append(m)
+            new_hists.append(h)
+        new_slot = {"hist": treedef.unflatten(new_hists), "count": count + 1}
+        return treedef.unflatten(mixed), new_slot
+
+    def gossip(tree, step, comp_state):
+        slots = tuple(comp_state)
+        slot = slots[0]
+        if topology.period == 1:
+            mixed, new_slot = apply_phase(0, tree, slot)
+        else:
+            branches = [functools.partial(apply_phase, t) for t in range(topology.period)]
+            mixed, new_slot = jax.lax.switch(
+                step % topology.period, branches, tree, slot
+            )
+        return mixed, slots[1:] + (new_slot,)
+
+    return gossip
+
+
+def init_delay_state(topology: Topology, delay, template: Tree, n_slots: int = 1):
+    """History state for :func:`make_delayed_stacked_gossip`.
+
+    ``template`` is any stacked ``(n, ...)`` pytree with payload shapes (the
+    initial params work).  Returns ``()`` when the delay is uniformly zero —
+    the factory degrades to plain stacked gossip which ignores comp state.
+    """
+    D = delay_matrix(topology.n, delay)
+    depth = int(D.max())
+    if depth == 0:
+        return ()
+    ring = depth + 1
+
+    def slot():
+        hist = jax.tree.map(
+            lambda x: jnp.zeros((ring,) + x.shape, jnp.float32), template
+        )
+        return {"hist": hist, "count": jnp.int32(0)}
+
+    return tuple(slot() for _ in range(max(1, n_slots)))
+
+
+def run_delayed(
+    opt: Optimizer,
+    topology: Topology,
+    params0: Tree,
+    grad_fn: Callable[[Tree, int], Tree],
+    *,
+    delay,
+    lr,
+    n_steps: int,
+    record_every: int = 0,
+    metric_fn: Callable[[Tree], jax.Array] | None = None,
+):
+    """:func:`repro.core.reference.run_stacked` with delayed gossip.
+
+    At uniform delay 0 the computation is identical to ``run_stacked`` (the
+    gossip closure is literally ``make_stacked_gossip``'s and the delay state
+    is empty), so results are bit-exact.  The exact-mean closure (PmSGD /
+    SlowMo outer sync) is *not* delayed: staleness models gossip links, not
+    the all-reduce fabric.
+    """
+    gossip = make_delayed_stacked_gossip(topology, delay)
+    mean = make_stacked_mean(topology.n)
+    comp = init_delay_state(topology, delay, params0, opt.gossips_per_step)
+    lr_fn = lr if callable(lr) else (lambda _s: jnp.float32(lr))
+
+    state = opt.init(params0)
+
+    @jax.jit
+    def one(params, state, comp, step):
+        grads = grad_fn(params, step)
+        params, state, comp = opt.step(
+            params,
+            grads,
+            state,
+            lr=lr_fn(step),
+            step_idx=step,
+            gossip=gossip,
+            mean=mean,
+            comp_state=comp,
+        )
+        return params, state, comp
+
+    params = params0
+    trace: list[float] = []
+    for k in range(n_steps):
+        params, state, comp = one(params, state, comp, jnp.int32(k))
+        if record_every and (k % record_every == 0 or k == n_steps - 1):
+            assert metric_fn is not None
+            trace.append(float(metric_fn(params)))
+    return params, state, np.asarray(trace)

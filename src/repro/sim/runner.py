@@ -1,0 +1,519 @@
+"""Discrete-event cluster simulator for decentralized training.
+
+Drives any algorithm from :mod:`repro.core.optimizers` in the stacked
+layout under a virtual cluster: per-node clocks (:mod:`repro.sim.clock`),
+scenario schedules (:mod:`repro.sim.events`), stale neighbor snapshots, and
+fail-stop recovery through :func:`repro.launch.elastic.plan_recovery` +
+``Topology.exclude``.
+
+Execution model (the *virtual stacked step*): when node ``i`` completes its
+``k``-th optimizer step, the engine assembles a virtual stacked state whose
+row ``j`` is the last snapshot of node ``j`` *visible* to ``i`` when the
+step started (publication time + link delay <= start time), runs the exact
+same jitted stacked step as :func:`repro.core.reference.run_stacked`, and
+keeps only row ``i`` of the result.  Neighbor contributions are therefore
+the payloads those nodes would publish from their last available iterates —
+the AD-PSGD stale-iterate model.  Under equal constant speeds, zero link
+delay and no events, every virtual state equals the true synchronous state,
+so the simulation is **bit-exact** with ``run_stacked`` (the oracle remains
+the oracle; ``tests/test_sim.py`` pins this for every algorithm x topology).
+
+Staleness is bounded SSP-style with version-capped reads: a node may not
+*start* a step that would put it more than ``scenario.max_staleness`` steps
+ahead of any alive in-neighbor (it stalls instead, and stall time is
+recorded — the throughput cost), and a reader at step ``k`` never consumes
+a neighbor payload newer than version ``k`` (fast nodes buffer old payloads
+for lagging readers).  ``max_staleness=1`` is therefore exactly
+version-synchronous BSP — stragglers cost wall-clock, not quality — while
+larger bounds admit genuinely stale mixing (and expose, e.g., DecentLaM's
+momentum-staleness feedback; see ``benchmarks/sim_scenarios.py``).
+
+Known modeling choices (documented, asserted where relevant):
+
+* Exact-mean communication (PmSGD, SlowMo's outer sync) averages the
+  *virtual* rows — under failures the frozen dead rows are excluded only by
+  gossip weights, so mean-based algorithms are best simulated failure-free.
+* A node's own lr/topology-phase index is its local step count; under
+  asynchrony, nodes may gossip with different phases of a time-varying
+  topology (real deployments have the same artifact unless they run a
+  global round counter).
+* After a *rescale* recovery the cluster restarts from a consensus
+  collapse of the survivors (checkpoint-restore semantics): new node count,
+  synced step counters, fresh mailboxes, and gradients restricted to the
+  surviving nodes' data via the ``restrict`` callback.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gossip import make_stacked_gossip, make_stacked_mean
+from ..core.optimizers import Optimizer
+from ..core.reference import consensus_distance
+from ..core.topology import Topology, build_topology
+from ..launch.elastic import plan_recovery
+from .clock import EventQueue, node_rngs
+from .delayed_gossip import init_delay_state, make_delayed_stacked_gossip
+from .events import FailStop, LinkDegrade, Rejoin, Scenario, Slowdown, get_scenario
+from .metrics import SimResult
+
+Tree = Any
+GradFn = Callable[[Tree, Any], Tree]
+
+__all__ = ["simulate"]
+
+
+def _row(tree: Tree, i: int) -> Tree:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _set_row(tree: Tree, i: int, row: Tree) -> Tree:
+    return jax.tree.map(lambda a, r: a.at[i].set(r), tree, row)
+
+
+def _stack_rows(rows: list[Tree]) -> Tree:
+    return jax.tree.map(lambda *r: jnp.stack(r), *rows)
+
+
+def _mean_rows(tree: Tree, idx: list[int]) -> Tree:
+    """f32 mean over the listed rows (consensus collapse)."""
+    sel = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(
+        lambda a: jnp.mean(a[sel].astype(jnp.float32), axis=0).astype(a.dtype), tree
+    )
+
+
+def _make_step(
+    opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn
+) -> Callable:
+    """The jitted stacked one-step — same computation as ``run_stacked``."""
+    gossip = make_stacked_gossip(topology)
+    mean = make_stacked_mean(topology.n)
+
+    @jax.jit
+    def one(params, state, step):
+        grads = grad_fn(params, step)
+        params, state, _ = opt.step(
+            params,
+            grads,
+            state,
+            lr=lr_fn(step),
+            step_idx=step,
+            gossip=gossip,
+            mean=mean,
+        )
+        return params, state
+
+    return one
+
+
+def _in_neighbors(topology: Topology) -> list[set[int]]:
+    """Union over period phases of each node's gossip in-edges."""
+    nbrs: list[set[int]] = [set() for _ in range(topology.n)]
+    for t in range(topology.period):
+        W = topology.W(t)
+        for i in range(topology.n):
+            for j in np.nonzero(np.abs(W[i]) > 0)[0]:
+                if j != i:
+                    nbrs[i].add(int(j))
+    return nbrs
+
+
+def simulate(
+    opt: Optimizer,
+    topology_name: str,
+    n: int,
+    params0: Tree,
+    grad_fn: GradFn,
+    *,
+    lr,
+    n_steps: int,
+    scenario: Scenario | str | None = None,
+    seed: int = 0,
+    record_dt: float = 0.0,
+    metric_fn: Callable[[Tree], Any] | None = None,
+    restrict: Callable[[tuple[int, ...]], GradFn] | None = None,
+) -> SimResult:
+    """Run one scenario; terminates when every alive node has completed
+    ``n_steps`` steps (fast nodes may have done more).
+
+    ``restrict(alive_original_indices) -> grad_fn`` supplies the gradient
+    function for a rescaled (smaller) cluster; required only for scenarios
+    whose failures exceed the reroute budget.  ``record_dt`` > 0 records a
+    trace entry (time, step range, consensus, metric) each time simulated
+    time crosses a multiple of it.
+    """
+    if scenario is None:
+        scenario = get_scenario("homogeneous", n, n_steps)
+    elif isinstance(scenario, str):
+        scenario = get_scenario(scenario, n, n_steps)
+
+    lr_fn = lr if callable(lr) else (lambda _s: jnp.float32(lr))
+
+    if scenario.engine == "delayed":
+        return _run_delayed_engine(
+            opt, topology_name, n, params0, grad_fn, lr_fn, scenario,
+            n_steps=n_steps, record_dt=record_dt, metric_fn=metric_fn,
+        )
+
+    base_topology = build_topology(topology_name, n)
+    topo = base_topology
+    one = _make_step(opt, topo, grad_fn, lr_fn)
+    nbrs = _in_neighbors(topo)
+
+    x = params0
+    state = opt.init(params0)
+    n_cur = n
+    steps = np.zeros(n, dtype=np.int64)
+    stall = np.zeros(n, dtype=np.float64)
+    speed_scale = np.ones(n, dtype=np.float64)
+    link_delay = np.zeros((n, n), dtype=np.float64)
+    rngs = node_rngs(seed, n)
+    durations = scenario.duration_models(n)
+    dead: set[int] = set()
+    kept_indices = tuple(range(n))
+    recovery_mode = "none"
+    rescaled = False
+
+    # mailbox[j]: list of (step, pub_time, x_row, state_row), oldest first
+    depth = scenario.max_staleness + 4
+    mailbox: list[list] = [[] for _ in range(n)]
+    events_log: list[dict] = []
+    trace: list[dict] = []
+    next_record = record_dt if record_dt > 0 else None
+
+    def publish(i: int, t: float) -> None:
+        mailbox[i].append((int(steps[i]), t, _row(x, i), _row(state, i)))
+        if len(mailbox[i]) > depth:
+            mailbox[i].pop(0)
+
+    def visible(j: int, deadline: float, version_cap: int):
+        """Latest snapshot of ``j`` published by ``deadline`` whose version is
+        <= ``version_cap`` (else the oldest retained).
+
+        The version cap gives SSP parameter-server semantics: a reader at
+        step ``k`` never consumes a neighbor payload *newer* than version
+        ``k`` — nodes that run ahead keep their old payloads buffered for
+        lagging readers.  Without the cap, a slow node would mix its fast
+        neighbors' future iterates, which destabilizes algorithms whose
+        gradient estimator differences iterates (DecentLaM's ``1/lr``
+        amplification); with it, ``max_staleness=1`` is exactly
+        version-synchronous BSP and stragglers cost stall time, not quality.
+        """
+        box = mailbox[j]
+        for snap in reversed(box):
+            if snap[1] <= deadline and snap[0] <= version_cap:
+                return snap
+        return box[0]
+
+    def alive_nodes() -> list[int]:
+        return [i for i in range(n_cur) if i not in dead]
+
+    def blocked_by(i: int) -> list[int]:
+        """Alive in-neighbors too far behind for ``i`` to start its next step."""
+        horizon = steps[i] + 1 - scenario.max_staleness
+        return [j for j in sorted(nbrs[i]) if j not in dead and steps[j] < horizon]
+
+    queue = EventQueue()
+    start_time = np.zeros(n, dtype=np.float64)
+    # per-node epoch: bumped on fail-stop so a dead node's still-queued
+    # completion event cannot double-schedule it after a rejoin
+    epoch = np.zeros(n, dtype=np.int64)
+    waiting: dict[int, float] = {}  # node -> time it became ready-but-blocked
+
+    def schedule(i: int, now: float) -> None:
+        if blocked_by(i):
+            waiting[i] = now
+            return
+        dur = durations[i](i, int(steps[i]), rngs[i]) * speed_scale[i]
+        start_time[i] = now
+        queue.push(now + dur, i, int(epoch[i]))
+
+    def release_waiting(now: float) -> None:
+        for i in sorted(waiting):
+            if i in dead:
+                del waiting[i]
+                continue
+            if not blocked_by(i):
+                stall[i] += now - waiting.pop(i)
+                schedule(i, now)
+
+    def record(t: float) -> None:
+        alive = alive_nodes()
+        xa = jax.tree.map(lambda a: a[jnp.asarray(alive)], x)
+        entry = {
+            "t": round(t, 6),
+            "min_step": int(steps[alive].min()),
+            "max_step": int(steps[alive].max()),
+            "consensus": float(consensus_distance(jax.tree.leaves(xa)[0])),
+        }
+        if metric_fn is not None:
+            entry["metric"] = float(metric_fn(xa))
+        trace.append(entry)
+
+    # ---- scenario event application --------------------------------------
+    pending = [
+        e for _, e in sorted(enumerate(scenario.events), key=lambda p: (p[1].at_step, p[0]))
+    ]
+    ev_ptr = 0
+
+    def apply_events(t: float) -> None:
+        nonlocal ev_ptr, topo, one, nbrs, dead, recovery_mode, rescaled
+        nonlocal x, state, n_cur, steps, stall, speed_scale, link_delay
+        nonlocal rngs, durations, mailbox, grad_fn
+        while ev_ptr < len(pending):
+            ev = pending[ev_ptr]
+            alive = alive_nodes()
+            if not alive or int(steps[alive].max()) < ev.at_step:
+                return
+            ev_ptr += 1
+            if rescaled and isinstance(ev, (FailStop, Rejoin)):
+                raise NotImplementedError(
+                    "membership events after a rescale recovery are not "
+                    "supported (node identities changed)"
+                )
+            if isinstance(ev, Slowdown):
+                for i in ev.nodes:
+                    if i < n_cur:
+                        speed_scale[i] *= ev.factor
+                events_log.append({"t": t, "event": f"slowdown{ev.nodes}x{ev.factor}"})
+            elif isinstance(ev, LinkDegrade):
+                for (u, v) in ev.edges:
+                    if u < n_cur and v < n_cur:
+                        link_delay[u, v] = link_delay[v, u] = ev.delay
+                events_log.append({"t": t, "event": f"link_degrade{ev.edges}+{ev.delay}"})
+            elif isinstance(ev, FailStop):
+                dead |= set(int(d) for d in ev.nodes)
+                for d in ev.nodes:
+                    waiting.pop(int(d), None)
+                    if int(d) < n_cur:
+                        epoch[int(d)] += 1  # invalidate any queued completion
+                plan = plan_recovery(topology_name, n_cur, sorted(dead))
+                recovery_mode = plan.mode
+                events_log.append(
+                    {"t": t, "event": f"failstop{tuple(sorted(ev.nodes))}->{plan.mode}"}
+                )
+                if plan.mode == "reroute":
+                    topo = plan.topology
+                    one = _make_step(opt, topo, grad_fn, lr_fn)
+                    nbrs = _in_neighbors(topo)
+                else:
+                    _rescale(plan, t)
+            elif isinstance(ev, Rejoin):
+                back = [int(i) for i in ev.nodes if int(i) in dead]
+                if not back:
+                    continue
+                alive = alive_nodes()
+                xbar = _mean_rows(x, alive)
+                sbar = _mean_rows(state, alive)
+                sync_step = int(steps[alive].max())
+                min_alive = int(steps[alive].min())
+                for i in back:
+                    dead.discard(i)
+                    x = _set_row(x, i, xbar)
+                    state = _set_row(state, i, sbar)
+                    steps[i] = sync_step
+                    # backfill the consensus row under every version a lagging
+                    # reader may request, so the version cap never has to fall
+                    # back to a future snapshot (the SSP read invariant holds
+                    # across re-entry)
+                    row_x, row_s = _row(x, i), _row(state, i)
+                    mailbox[i] = [
+                        (v, t, row_x, row_s)
+                        for v in range(max(0, min(min_alive, sync_step)), sync_step + 1)
+                    ]
+                plan = plan_recovery(topology_name, n_cur, sorted(dead)) if dead else None
+                topo = plan.topology if plan else base_topology
+                recovery_mode = plan.mode if plan else "reroute"
+                one = _make_step(opt, topo, grad_fn, lr_fn)
+                nbrs = _in_neighbors(topo)
+                events_log.append({"t": t, "event": f"rejoin{tuple(back)}"})
+                for i in back:
+                    schedule(i, t)
+            release_waiting(t)
+
+    def _rescale(plan, t: float) -> None:
+        nonlocal topo, one, nbrs, dead, rescaled, x, state, n_cur, steps
+        nonlocal stall, speed_scale, link_delay, rngs, durations, mailbox, grad_fn
+        nonlocal kept_indices
+        if restrict is None:
+            raise ValueError(
+                f"scenario requires a rescale to n={plan.n_nodes} but no "
+                "`restrict` callback was given to rebuild grad_fn for the "
+                "surviving nodes"
+            )
+        survivors = [i for i in range(n_cur) if i not in dead]
+        kept = survivors[: plan.n_nodes]
+        new_n = plan.n_nodes
+        # consensus-collapse the alive replicas, broadcast to the new cluster
+        xbar = _mean_rows(x, survivors)
+        sbar = _mean_rows(state, survivors)
+        x = _stack_rows([xbar] * new_n)
+        state = _stack_rows([sbar] * new_n)
+        sync_step = int(steps[survivors].max())
+        steps = np.full(new_n, sync_step, dtype=np.int64)
+        stall = stall[kept].copy()
+        speed_scale = speed_scale[kept].copy()
+        link_delay = np.zeros((new_n, new_n), dtype=np.float64)
+        epoch[:new_n] = epoch[kept] + 1  # queue was drained; invalidate stale pushes
+        rngs = [rngs[i] for i in kept]
+        durations = [durations[i] for i in kept]
+        dead = set()
+        rescaled = True
+        n_cur = new_n
+        kept_indices = tuple(kept_indices[i] for i in kept)
+        grad_fn = restrict(kept_indices)
+        topo = plan.topology
+        one = _make_step(opt, topo, grad_fn, lr_fn)
+        nbrs = _in_neighbors(topo)
+        mailbox[:] = [[] for _ in range(new_n)]
+        waiting.clear()
+        # drop every pending completion (the collapse is a sync barrier)
+        while queue:
+            queue.pop()
+        for i in range(new_n):
+            publish(i, t)
+            schedule(i, t)
+
+    # ---- main loop -------------------------------------------------------
+    t = 0.0
+    for i in range(n):
+        publish(i, 0.0)
+    for i in range(n):
+        schedule(i, 0.0)
+
+    while True:
+        alive = alive_nodes()
+        if alive and steps[alive].min() >= n_steps:
+            break
+        if not queue:
+            if waiting:
+                raise RuntimeError(f"deadlock: all runnable nodes waiting: {waiting}")
+            break
+        t, i, tag = queue.pop()
+        if i in dead or i >= n_cur or tag != epoch[i]:
+            continue  # stale event from before a failure/rejoin/rescale
+
+        # assemble the virtual stacked state as seen from node i
+        st = start_time[i]
+        rows_x, rows_s = [], []
+        for j in range(n_cur):
+            if j == i:
+                rows_x.append(_row(x, i))
+                rows_s.append(_row(state, i))
+            else:
+                snap = visible(j, st - link_delay[j, i], int(steps[i]))
+                rows_x.append(snap[2])
+                rows_s.append(snap[3])
+        xv = _stack_rows(rows_x)
+        sv = _stack_rows(rows_s)
+
+        pv, nv = one(xv, sv, jnp.int32(int(steps[i])))
+        x = _set_row(x, i, _row(pv, i))
+        state = _set_row(state, i, _row(nv, i))
+        steps[i] += 1
+        publish(i, t)
+
+        if next_record is not None and t >= next_record:
+            record(t)
+            while next_record <= t:
+                next_record += record_dt
+
+        n_before = n_cur
+        apply_events(t)
+        if n_cur == n_before and i not in dead:
+            # a rescale barrier (n shrinks) already rescheduled every node
+            schedule(i, t)
+        release_waiting(t)
+
+    alive = alive_nodes()
+    final_metric = None
+    xa = jax.tree.map(lambda a: a[jnp.asarray(alive)], x)
+    if metric_fn is not None:
+        final_metric = float(metric_fn(xa))
+    final_consensus = float(consensus_distance(jax.tree.leaves(xa)[0]))
+    if next_record is not None:
+        # the final snapshot supersedes a periodic record at the same instant
+        if trace and trace[-1]["t"] == round(t, 6):
+            trace.pop()
+        record(t)
+
+    return SimResult(
+        params=x,
+        opt_state=state,
+        steps=steps.copy(),
+        stall_time=stall.copy(),
+        sim_time=float(t),
+        n_nodes=n_cur,
+        n_start=n,
+        target_steps=n_steps,
+        recovery_mode=recovery_mode,
+        dead=tuple(sorted(dead)),
+        kept=kept_indices,
+        trace=trace,
+        events_log=events_log,
+        final_metric=final_metric,
+        final_consensus=final_consensus,
+    )
+
+
+def _run_delayed_engine(
+    opt, topology_name, n, params0, grad_fn, lr_fn, scenario,
+    *, n_steps, record_dt, metric_fn,
+) -> SimResult:
+    """Synchronous bounded-staleness rounds (``engine="delayed"``)."""
+    topology = build_topology(topology_name, n)
+    gossip = make_delayed_stacked_gossip(topology, scenario.gossip_delay)
+    mean = make_stacked_mean(n)
+    comp = init_delay_state(
+        topology, scenario.gossip_delay, params0, opt.gossips_per_step
+    )
+    state = opt.init(params0)
+
+    @jax.jit
+    def one(params, state, comp, step):
+        grads = grad_fn(params, step)
+        params, state, comp = opt.step(
+            params, grads, state,
+            lr=lr_fn(step), step_idx=step, gossip=gossip, mean=mean,
+            comp_state=comp,
+        )
+        return params, state, comp
+
+    trace: list[dict] = []
+    every = max(1, int(record_dt)) if record_dt > 0 else 0
+    params = params0
+    for k in range(n_steps):
+        params, state, comp = one(params, state, comp, jnp.int32(k))
+        if every and (k % every == 0 or k == n_steps - 1):
+            entry = {
+                "t": float(k + 1),
+                "min_step": k + 1,
+                "max_step": k + 1,
+                "consensus": float(consensus_distance(jax.tree.leaves(params)[0])),
+            }
+            if metric_fn is not None:
+                entry["metric"] = float(metric_fn(params))
+            trace.append(entry)
+
+    return SimResult(
+        params=params,
+        opt_state=state,
+        steps=np.full(n, n_steps, dtype=np.int64),
+        stall_time=np.zeros(n),
+        sim_time=float(n_steps),
+        n_nodes=n,
+        n_start=n,
+        target_steps=n_steps,
+        recovery_mode="none",
+        dead=(),
+        trace=trace,
+        events_log=[],
+        kept=tuple(range(n)),
+        final_metric=(float(metric_fn(params)) if metric_fn is not None else None),
+        final_consensus=float(consensus_distance(jax.tree.leaves(params)[0])),
+    )

@@ -1,0 +1,148 @@
+"""Project simulated steps onto wall-clock time and throughput.
+
+The simulator's clock runs in *nominal steps*; this module prices one
+nominal step in seconds on the hardware model of
+:mod:`repro.launch.roofline` so every scenario reports speed next to
+quality:
+
+* compute + HBM terms come from the trip-count-aware jaxpr walk of
+  :mod:`repro.launch.costmodel` over the *actual* stacked one-step program
+  (divided by ``n`` — the stacked layout computes all replicas in one
+  program, a real node runs one row);
+* the gossip term prices per-node link egress with
+  :func:`repro.core.gossip.gossip_bytes_per_step` (edge-class ppermute
+  model, optional compression).
+
+The three terms combine as ``max`` (roofline: compute, memory and the
+gossip fabric overlap) and scale the simulated duration:
+
+    wallclock_s = sim_time * step_time_s
+    throughput  = total completed steps / wallclock_s
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gossip import gossip_bytes_per_step, make_stacked_gossip, make_stacked_mean
+from ..core.optimizers import Optimizer
+from ..core.topology import Topology
+from ..launch.costmodel import analyze_lowered
+from ..launch.roofline import HW, roofline_terms
+from .metrics import SimResult
+
+Tree = Any
+
+__all__ = ["payload_bytes", "step_costs", "step_time_seconds", "project_wallclock"]
+
+
+def payload_bytes(params: Tree) -> float:
+    """Gossip payload size: one f32 copy of every parameter row."""
+    leaves = jax.tree.leaves(params)
+    per_node = sum(float(np.prod(x.shape[1:])) for x in leaves)
+    return 4.0 * per_node
+
+
+def step_costs(
+    opt: Optimizer,
+    topology: Topology,
+    params0: Tree,
+    grad_fn: Callable,
+    *,
+    lr: float = 1e-3,
+) -> dict[str, float]:
+    """Per-node FLOPs / HBM bytes of one optimizer step, from the jaxpr of
+    the same stacked step the simulator executes."""
+    mean = make_stacked_mean(topology.n)
+    gossip = make_stacked_gossip(topology)
+    state = opt.init(params0)
+
+    def one(params, state):
+        grads = grad_fn(params, jnp.int32(0))
+        params, state, _ = opt.step(
+            params, grads, state,
+            lr=jnp.float32(lr), step_idx=jnp.int32(0), gossip=gossip, mean=mean,
+        )
+        return params, state
+
+    costs = analyze_lowered(one, (params0, state), axis_sizes={})
+    n = topology.n
+    return {
+        "flops_per_node": costs.flops / n,
+        "hbm_bytes_per_node": costs.materialized_bytes / n,
+    }
+
+
+def step_time_seconds(
+    topology: Topology,
+    payload: float,
+    *,
+    flops_per_node: float = 0.0,
+    hbm_bytes_per_node: float = 0.0,
+    gossips_per_step: int = 1,
+    compression: str | None = None,
+    hw: HW = HW(),
+) -> dict[str, float]:
+    """Roofline price of one nominal step (seconds) + its terms."""
+    comm = gossip_bytes_per_step(
+        topology, payload, impl="ppermute", compression=compression
+    )
+    terms = roofline_terms(
+        flops_per_device=flops_per_node,
+        bytes_per_device=hbm_bytes_per_node,
+        collective_egress=comm["egress_bytes"] * max(1, gossips_per_step),
+        hw=hw,
+    )
+    return {
+        "step_time_s": terms["step_time_lower_bound_s"],
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "gossip_egress_bytes": comm["egress_bytes"] * max(1, gossips_per_step),
+    }
+
+
+def project_wallclock(
+    result: SimResult,
+    topology: Topology,
+    *,
+    opt: Optimizer | None = None,
+    grad_fn: Callable | None = None,
+    compression: str | None = None,
+    hw: HW = HW(),
+) -> dict[str, float]:
+    """Quality-AND-speed report for a finished scenario run.
+
+    When ``opt``/``grad_fn`` are given, compute/memory terms come from the
+    jaxpr cost model; otherwise the step is priced on gossip bandwidth
+    alone (payload from the result's parameter shapes).
+    """
+    payload = payload_bytes(result.params)
+    kw: dict[str, float] = {}
+    gossips = 1
+    if opt is not None:
+        gossips = opt.gossips_per_step
+        if grad_fn is not None:
+            kw = step_costs(opt, topology, result.params, grad_fn)
+            kw = {
+                "flops_per_node": kw["flops_per_node"],
+                "hbm_bytes_per_node": kw["hbm_bytes_per_node"],
+            }
+    price = step_time_seconds(
+        topology, payload,
+        gossips_per_step=gossips, compression=compression, hw=hw, **kw,
+    )
+    total_steps = int(result.steps[result.alive].sum())
+    wallclock_s = result.sim_time * price["step_time_s"]
+    return {
+        **price,
+        "sim_time": result.sim_time,
+        "wallclock_s": wallclock_s,
+        "steps_per_s": (total_steps / wallclock_s) if wallclock_s > 0 else 0.0,
+        "stall_s": float(result.stall_time.sum()) * price["step_time_s"],
+    }

@@ -1,0 +1,94 @@
+"""CI gate for BENCH_sim.json (the cluster-simulator scenario benchmark).
+
+Usage::
+
+    python tests/ci/check_bench_sim.py BENCH_sim.json
+
+Validates the machine-readable invariants the simulator subsystem promises
+(ISSUE 2 acceptance criteria):
+
+* every registry scenario ran for every benchmarked algorithm;
+* the version-synchronous scenarios (homogeneous, straggler_1slow,
+  failstop_quarter, churn) completed without divergence for all algorithms;
+* DecentLaM's bias-to-optimum is no worse than DmSGD's under each of those
+  scenarios (<= 1.05x, measured against the final cluster's own optimum so
+  rescale data-loss doesn't mask algorithmic bias) — the paper's claim
+  restated under realistic clusters;
+* the straggler costs throughput, not quality: nonzero stall time and a
+  longer simulated horizon than homogeneous.
+
+Exit code 1 on any violation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_SCENARIOS = (
+    "homogeneous",
+    "straggler_1slow",
+    "failstop_quarter",
+    "churn",
+    "stale_gossip_k1",
+    "stale_gossip_k2",
+    "stale_gossip_k4",
+)
+SYNC_SCENARIOS = ("homogeneous", "straggler_1slow", "failstop_quarter", "churn")
+ALGORITHMS = ("dsgd", "dmsgd", "decentlam")
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+
+    errors: list[str] = []
+    scenarios = bench.get("scenarios", {})
+    for name in REQUIRED_SCENARIOS:
+        if name not in scenarios:
+            errors.append(f"missing scenario {name!r}")
+            continue
+        for algo in ALGORITHMS:
+            if algo not in scenarios[name]:
+                errors.append(f"{name}: missing algorithm {algo!r}")
+
+    for name in SYNC_SCENARIOS:
+        for algo in ALGORITHMS:
+            entry = scenarios.get(name, {}).get(algo)
+            if entry is None:
+                continue
+            if entry.get("diverged"):
+                errors.append(f"{name}/{algo}: diverged under synchronous gossip")
+            if entry.get("steps_min", 0) < bench["config"]["n_steps"]:
+                errors.append(f"{name}/{algo}: did not reach the target step count")
+
+    for name, claim in bench.get("claims", {}).items():
+        if not claim.get("decentlam_no_worse"):
+            errors.append(
+                f"{name}: DecentLaM bias {claim.get('decentlam_bias')} worse "
+                f"than DmSGD {claim.get('dmsgd_bias')}"
+            )
+
+    hom = scenarios.get("homogeneous", {}).get("decentlam", {})
+    strag = scenarios.get("straggler_1slow", {}).get("decentlam", {})
+    if hom and strag:
+        if not strag.get("stall_time", 0) > 0:
+            errors.append("straggler_1slow: expected nonzero stall time")
+        if not strag.get("sim_time", 0) > hom.get("sim_time", 0):
+            errors.append("straggler_1slow: expected longer horizon than homogeneous")
+
+    if errors:
+        print(f"SIM BENCH GATE: {len(errors)} violation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_claims = len(bench.get("claims", {}))
+    print(f"SIM BENCH GATE: ok ({len(scenarios)} scenarios, {n_claims} claims hold)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

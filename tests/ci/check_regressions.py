@@ -2,7 +2,8 @@
 
 Usage::
 
-    python tests/ci/check_regressions.py report.xml tests/ci/allowed_failures.txt
+    python tests/ci/check_regressions.py report.xml tests/ci/allowed_failures.txt \
+        [--forbid-skips]
 
 Parses a pytest junit XML report and compares the set of failed/errored
 test ids against the allowlist (one ``path::test_id`` per line, ``#``
@@ -10,6 +11,13 @@ comments).  Exit code 1 when a test outside the allowlist fails — i.e. a
 regression vs the recorded baseline — or when the report contains no tests
 at all (catastrophic collection failure).  Allowlisted tests that now pass
 are reported so the baseline can be tightened.
+
+``--forbid-skips`` additionally treats *skipped* tests outside the
+allowlist as regressions.  The CI fast tier passes it: the workflow
+installs ``.[test]`` so the hypothesis property suite must actually run —
+a skip there means the environment silently lost the test extra, which
+previously showed up as "228 passed, 1 skipped" and a green build.  Local
+bare-environment runs (no hypothesis) simply omit the flag.
 
 The seed of this repo was 16 failed / 161 passed; the baseline file tracks
 what is *currently* known-failing (empty = everything must pass).
@@ -21,11 +29,13 @@ import sys
 import xml.etree.ElementTree as ET
 
 
-def failed_ids(report_path: str) -> tuple[set[str], int]:
+def parse_report(report_path: str) -> tuple[set[str], set[str], int]:
+    """(failed_ids, skipped_ids, total) from a junit XML report."""
     tree = ET.parse(report_path)
     root = tree.getroot()
     suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
     failed: set[str] = set()
+    skipped: set[str] = set()
     total = 0
     for suite in suites:
         for case in suite.iter("testcase"):
@@ -33,7 +43,9 @@ def failed_ids(report_path: str) -> tuple[set[str], int]:
             tid = f"{case.get('classname', '')}::{case.get('name', '')}"
             if case.find("failure") is not None or case.find("error") is not None:
                 failed.add(tid)
-    return failed, total
+            elif case.find("skipped") is not None:
+                skipped.add(tid)
+    return failed, skipped, total
 
 
 def read_allowlist(path: str) -> set[str]:
@@ -48,26 +60,38 @@ def read_allowlist(path: str) -> set[str]:
 
 
 def main() -> int:
-    if len(sys.argv) < 2:
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    flags = {a for a in sys.argv[1:] if a.startswith("--")}
+    unknown = flags - {"--forbid-skips"}
+    if not args or unknown:
         print(__doc__)
         return 2
-    report = sys.argv[1]
-    allowlist = read_allowlist(sys.argv[2]) if len(sys.argv) > 2 else set()
+    report = args[0]
+    allowlist = read_allowlist(args[1]) if len(args) > 1 else set()
+    forbid_skips = "--forbid-skips" in flags
 
-    failed, total = failed_ids(report)
+    failed, skipped, total = parse_report(report)
     if total == 0:
         print(f"REGRESSION GATE: {report} contains no test results")
         return 1
 
-    new = sorted(failed - allowlist)
-    fixed = sorted(allowlist - failed)
-    print(f"{total} tests, {len(failed)} failed, allowlist {len(allowlist)}")
+    offending = set(failed)
+    if forbid_skips:
+        offending |= skipped
+    new = sorted(offending - allowlist)
+    fixed = sorted(allowlist - offending)
+    print(
+        f"{total} tests, {len(failed)} failed, {len(skipped)} skipped "
+        f"({'forbidden' if forbid_skips else 'tolerated'}), "
+        f"allowlist {len(allowlist)}"
+    )
     for tid in fixed:
         print(f"  now passing (remove from allowlist): {tid}")
     if new:
         print(f"REGRESSION GATE: {len(new)} failure(s) not in the baseline:")
         for tid in new:
-            print(f"  {tid}")
+            kind = "skipped" if tid in skipped else "failed"
+            print(f"  [{kind}] {tid}")
         return 1
     print("REGRESSION GATE: ok")
     return 0

@@ -28,6 +28,39 @@ def test_plan_rescale_for_many_failures():
     plan.topology.validate()
 
 
+def test_plan_recovery_reroute_rescale_boundary():
+    """The reroute budget is len(dead) <= max(1, n // 8), inclusive."""
+    # n=16: boundary at 2 dead
+    assert plan_recovery("exp", 16, dead=[3, 11]).mode == "reroute"
+    assert plan_recovery("exp", 16, dead=[3, 11, 12]).mode == "rescale"
+    # n=8: n // 8 == 1 — a single failure reroutes, two rescale
+    assert plan_recovery("ring", 8, dead=[0]).mode == "reroute"
+    plan = plan_recovery("ring", 8, dead=[0, 1])
+    assert plan.mode == "rescale" and plan.n_nodes == 4
+    # tiny clusters: max(1, n // 8) keeps one-failure reroute viable at n=4
+    assert plan_recovery("ring", 4, dead=[2]).mode == "reroute"
+    # allow_reroute=False forces the rescale path even within budget
+    forced = plan_recovery("exp", 16, dead=[3], allow_reroute=False)
+    assert forced.mode == "rescale" and forced.n_nodes == 8
+
+
+def test_plan_recovery_boundary_on_time_varying_topology():
+    """Rerouting a time-varying topology preserves its period and excludes
+    the dead nodes from every phase."""
+    for name in ("one-peer-exp", "random-match"):
+        base = plan_recovery(name, 16, dead=[4, 9])
+        assert base.mode == "reroute"
+        topo = base.topology
+        from repro.core import build_topology
+
+        assert topo.period == build_topology(name, 16).period
+        for phase in range(topo.period):
+            W = topo.W(phase)
+            for d in (4, 9):
+                assert W[d, d] == 1.0
+                assert np.count_nonzero(W[d]) == 1
+
+
 def test_apply_recovery_rescale_collapses_replicas():
     cfg = tiny_lm(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
                   vocab_size=64)

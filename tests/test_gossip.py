@@ -125,14 +125,22 @@ def test_gossip_bytes_ppermute_scales_with_degree_and_compression(name, comp):
     )
 
 
-@pytest.mark.parametrize("comp", COMPRESSIONS)
-def test_gossip_bytes_allgather_ignores_compression(comp):
-    """The naive baseline ships raw fp32 (GSPMD all-gathers the payload
-    before the local W-row reduction, so compression can't help it)."""
+def test_gossip_bytes_allgather_uncompressed():
+    """The naive baseline ships raw fp32: O(n) egress regardless of topology
+    (GSPMD all-gathers the payload before the local W-row reduction)."""
     topo = build_topology("ring", N)
-    out = gossip_bytes_per_step(topo, PAYLOAD, impl="allgather", compression=comp)
+    out = gossip_bytes_per_step(topo, PAYLOAD, impl="allgather", compression=None)
     assert out["egress_bytes"] == pytest.approx((N - 1) * PAYLOAD)
     assert out["hops"] == N - 1
+
+
+@pytest.mark.parametrize("comp", [c for c in COMPRESSIONS if c is not None])
+def test_gossip_bytes_allgather_rejects_compression(comp):
+    """Compression cannot help the all-gather path, so asking for it is an
+    explicit error instead of silently pricing raw bytes."""
+    topo = build_topology("ring", N)
+    with pytest.raises(ValueError, match="cannot compress"):
+        gossip_bytes_per_step(topo, PAYLOAD, impl="allgather", compression=comp)
 
 
 def test_gossip_bytes_compression_ordering():

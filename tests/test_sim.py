@@ -1,0 +1,407 @@
+"""Discrete-event cluster simulator (repro.sim).
+
+The acceptance contract of the subsystem:
+
+* zero-delay, homogeneous-speed, no-event simulation is **bit-exact** with
+  ``run_stacked`` for every algorithm x topology (the oracle remains the
+  oracle) — both for the event engine and the delayed-gossip engine;
+* scenarios are deterministic from a seed;
+* staleness is version-capped and SSP-bounded;
+* fail-stop recovery routes through ``plan_recovery`` (reroute and rescale).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ALGORITHMS,
+    OptimizerConfig,
+    bias_to_optimum,
+    build_topology,
+    make_linear_regression,
+    make_optimizer,
+    run_stacked,
+)
+from repro.sim import (
+    ConstantDuration,
+    EventQueue,
+    FailStop,
+    LognormalDuration,
+    PeriodicStragglerDuration,
+    Scenario,
+    delay_matrix,
+    effective_batch_fraction,
+    get_scenario,
+    init_delay_state,
+    make_delayed_stacked_gossip,
+    node_rngs,
+    project_wallclock,
+    run_delayed,
+    simulate,
+)
+
+N, D, M = 4, 4, 6
+TOPOLOGIES = ["ring", "torus", "exp", "one-peer-exp", "random-match", "full"]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_linear_regression(n=N, m=M, d=D, noise=0.01, seed=0, heterogeneity=1.0)
+
+
+@pytest.fixture(scope="module")
+def problem8():
+    return make_linear_regression(n=8, m=10, d=6, noise=0.01, seed=1, heterogeneity=1.0)
+
+
+def _grad(problem):
+    return lambda x, _s: problem.grad(x)
+
+
+def _tree_equal(a, b) -> bool:
+    return all(
+        bool(jnp.all(x == y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True)
+    )
+
+
+# ---------------------------------------------------------------------------
+# The oracle remains the oracle (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", TOPOLOGIES)
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_event_engine_matches_oracle(problem, algorithm, topology):
+    """Homogeneous speeds, no events, zero delay == run_stacked bit-exactly."""
+    opt = make_optimizer(OptimizerConfig(algorithm=algorithm, momentum=0.8))
+    x0 = jnp.zeros((N, D), jnp.float32)
+    p_ref, s_ref, _ = run_stacked(
+        opt, build_topology(topology, N), x0, _grad(problem), lr=1e-2, n_steps=4
+    )
+    res = simulate(
+        opt, topology, N, x0, _grad(problem), lr=1e-2, n_steps=4,
+        scenario="homogeneous",
+    )
+    assert (res.steps == 4).all()
+    assert _tree_equal(res.params, p_ref)
+    assert _tree_equal(res.opt_state, s_ref)
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_delayed_engine_zero_delay_matches_oracle(problem, algorithm):
+    opt = make_optimizer(OptimizerConfig(algorithm=algorithm, momentum=0.8))
+    x0 = jnp.zeros((N, D), jnp.float32)
+    topo = build_topology("ring", N)
+    p_ref, s_ref, _ = run_stacked(opt, topo, x0, _grad(problem), lr=1e-2, n_steps=4)
+    p, s, _ = run_delayed(
+        opt, topo, x0, _grad(problem), delay=0, lr=1e-2, n_steps=4
+    )
+    assert _tree_equal(p, p_ref)
+    assert _tree_equal(s, s_ref)
+
+
+# ---------------------------------------------------------------------------
+# Delayed gossip semantics
+# ---------------------------------------------------------------------------
+
+
+def test_delay_matrix_normalization():
+    Dm = delay_matrix(3, 2)
+    assert Dm.shape == (3, 3) and (np.diag(Dm) == 0).all() and Dm[0, 1] == 2
+    with pytest.raises(AssertionError):
+        delay_matrix(3, -1)
+
+
+@pytest.mark.parametrize("delay", [1, 2, "per-edge"])
+def test_delayed_gossip_matches_manual_model(delay):
+    """mixed_t == sum_d W_d @ P_{t - min(d, t)} for distinct payloads P_t."""
+    n, d = 4, 3
+    topo = build_topology("ring", n)
+    W = topo.W(0)
+    if delay == "per-edge":
+        Dm = np.zeros((n, n), int)
+        Dm[0, 1] = Dm[1, 0] = 3
+        Dm[2, 3] = Dm[3, 2] = 1
+    else:
+        Dm = delay_matrix(n, delay)
+    gossip = make_delayed_stacked_gossip(topo, Dm)
+    st = init_delay_state(topo, Dm, jnp.zeros((n, d), jnp.float32))
+    P = [
+        np.float32(np.random.default_rng(t).standard_normal((n, d)))
+        for t in range(6)
+    ]
+    for t in range(6):
+        mixed, st = gossip(jnp.asarray(P[t]), jnp.int32(t), st)
+        expected = np.zeros((n, d), np.float32)
+        for dd in np.unique(Dm):
+            Wd = np.where(Dm == dd, W, 0.0)
+            expected += (Wd @ P[t - min(int(dd), t)]).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(mixed), expected, atol=1e-5)
+
+
+def test_delayed_gossip_slot_rotation_keeps_histories_independent():
+    """Two gossip calls per step (da-dmsgd style) must not share buffers."""
+    n, d, k = 4, 3, 1
+    topo = build_topology("ring", n)
+    W = topo.W(0)
+    Dm = delay_matrix(n, k)
+    gossip = make_delayed_stacked_gossip(topo, k)
+    st = init_delay_state(topo, k, jnp.zeros((n, d), jnp.float32), n_slots=2)
+    rng = np.random.default_rng(0)
+    A = [np.float32(rng.standard_normal((n, d))) for _ in range(4)]
+    B = [np.float32(rng.standard_normal((n, d))) for _ in range(4)]
+    W0 = np.where(Dm == 0, W, 0.0)
+    W1 = np.where(Dm == 1, W, 0.0)
+    for t in range(4):
+        mixed_a, st = gossip(jnp.asarray(A[t]), jnp.int32(t), st)
+        mixed_b, st = gossip(jnp.asarray(B[t]), jnp.int32(t), st)
+        exp_a = W0 @ A[t] + W1 @ A[max(t - 1, 0)]
+        exp_b = W0 @ B[t] + W1 @ B[max(t - 1, 0)]
+        np.testing.assert_allclose(np.asarray(mixed_a), exp_a.astype(np.float32), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(mixed_b), exp_b.astype(np.float32), atol=1e-5)
+
+
+def test_delayed_gossip_time_varying_topology(problem):
+    """One-peer-exp cycles phases under lax.switch with history threading."""
+    opt = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
+    x0 = jnp.zeros((N, D), jnp.float32)
+    topo = build_topology("one-peer-exp", N)
+    p, _, _ = run_delayed(opt, topo, x0, _grad(problem), delay=2, lr=1e-2, n_steps=6)
+    assert bool(jnp.all(jnp.isfinite(p)))
+
+
+# ---------------------------------------------------------------------------
+# Clocks + queue
+# ---------------------------------------------------------------------------
+
+
+def test_event_queue_fifo_on_ties():
+    q = EventQueue()
+    q.push(1.0, 3)
+    q.push(1.0, 1, tag=7)
+    q.push(0.5, 2)
+    assert [q.pop() for _ in range(3)] == [(0.5, 2, 0), (1.0, 3, 0), (1.0, 1, 7)]
+
+
+def test_duration_models():
+    rng = np.random.default_rng(0)
+    assert ConstantDuration(2.0)(0, 0, rng) == 2.0
+    model = PeriodicStragglerDuration(base=1.0, factor=3.0, period=4)
+    pattern = [model(0, s, rng) for s in range(8)]
+    assert pattern == [3.0, 1.0, 1.0, 1.0, 3.0, 1.0, 1.0, 1.0]
+    # lognormal: deterministic per seeded stream, mean approx `mean`
+    draws1 = [LognormalDuration(2.0, 0.3)(0, s, np.random.default_rng([7, 0])) for s in range(200)]
+    draws2 = [LognormalDuration(2.0, 0.3)(0, s, np.random.default_rng([7, 0])) for s in range(200)]
+    assert draws1 == draws2
+    assert abs(np.mean(draws1) - 2.0) < 0.2
+
+
+def test_node_rngs_independent_streams():
+    a, b = node_rngs(0, 2)
+    assert a.standard_normal() != b.standard_normal()
+    a2, _ = node_rngs(0, 2)
+    assert a2.standard_normal() == node_rngs(0, 2)[0].standard_normal()
+
+
+# ---------------------------------------------------------------------------
+# Scenarios: determinism, staleness bound, BSP quality
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_deterministic_from_seed(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    kw = dict(lr=1e-2, n_steps=20, scenario="straggler_1slow", seed=5)
+    r1 = simulate(opt, "ring", 8, x0, _grad(problem8), **kw)
+    r2 = simulate(opt, "ring", 8, x0, _grad(problem8), **kw)
+    assert (r1.steps == r2.steps).all()
+    assert r1.sim_time == r2.sim_time
+    assert _tree_equal(r1.params, r2.params)
+    r3 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+                  scenario="straggler_1slow", seed=6)
+    assert r3.sim_time != r1.sim_time  # different draws actually happened
+
+
+def test_straggler_ssp_neighbor_gap_bounded(problem8):
+    scenario = get_scenario("straggler_1slow_async", 8, 30)
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=30,
+                 scenario=scenario, seed=0)
+    topo = build_topology("ring", 8)
+    W = topo.W(0)
+    for i in range(8):
+        for j in np.nonzero(W[i])[0]:
+            assert abs(int(r.steps[i]) - int(r.steps[j])) <= scenario.max_staleness
+    # the straggler forces everyone else to stall under the SSP bound
+    assert r.stall_time.sum() > 0
+    assert r.steps.min() >= 30
+
+
+def test_straggler_bsp_preserves_quality(problem8):
+    """max_staleness=1 is version-synchronous: the straggler costs stall
+    time, not quality — per-node updates are the lockstep updates."""
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
+    r_h = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=60,
+                   scenario="homogeneous", metric_fn=metric)
+    r_s = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=60,
+                   scenario="straggler_1slow", seed=0, metric_fn=metric)
+    assert r_s.stall_time.sum() > 0 and r_s.sim_time > r_h.sim_time
+    assert r_s.final_metric == pytest.approx(r_h.final_metric, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Failures: reroute, rescale, churn
+# ---------------------------------------------------------------------------
+
+
+def _restrict_for(problem):
+    def restrict(idx):
+        sel = np.asarray(idx)
+        sub = dataclasses.replace(problem, A=problem.A[sel], b=problem.b[sel])
+        return lambda x, _s: sub.grad(x)
+
+    return restrict
+
+
+def test_failstop_within_budget_reroutes(problem8):
+    # n=8 with 1 dead == n//8: reroute (the plan_recovery boundary)
+    sc = Scenario(name="fs1", events=(FailStop(at_step=4, nodes=(3,)),))
+    opt = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12, scenario=sc)
+    assert r.recovery_mode == "reroute"
+    assert r.n_nodes == 8 and r.dead == (3,)
+    assert r.steps[3] <= 5  # frozen at failure
+    alive = [i for i in range(8) if i != 3]
+    assert (r.steps[alive] >= 12).all()
+    assert effective_batch_fraction(r) < 1.0
+
+
+def test_failstop_quarter_rescales(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
+                 scenario="failstop_quarter", metric_fn=metric,
+                 restrict=_restrict_for(problem8))
+    assert r.recovery_mode == "rescale"
+    assert r.n_nodes == 4 and r.n_start == 8
+    assert r.kept == (2, 3, 4, 5)  # first pow2-sized batch of survivors
+    assert jax.tree.leaves(r.params)[0].shape[0] == 4
+    assert (r.steps >= 15).all()
+    assert np.isfinite(r.final_metric)
+    # deterministic end to end
+    r2 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
+                  scenario="failstop_quarter", metric_fn=metric,
+                  restrict=_restrict_for(problem8))
+    assert _tree_equal(r.params, r2.params) and r.final_metric == r2.final_metric
+
+
+def test_rescale_without_restrict_raises(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    with pytest.raises(ValueError, match="restrict"):
+        simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
+                 scenario="failstop_quarter")
+
+
+def test_churn_rejoin_recovers(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=24,
+                 scenario="churn", seed=1)
+    kinds = [e["event"] for e in r.events_log]
+    assert any(k.startswith("failstop") for k in kinds)
+    assert any(k.startswith("rejoin") for k in kinds)
+    assert any(k.startswith("slowdown") for k in kinds)
+    assert r.dead == ()  # everyone is back
+    assert (r.steps >= 24).all()
+    assert bool(jnp.all(jnp.isfinite(r.params)))
+
+
+def test_rejoin_does_not_double_schedule(problem8):
+    """A node that fails and rejoins while its pre-failure completion event
+    is still queued must not end up with two live events (it would then
+    permanently step at ~2x rate)."""
+    from repro.sim import Rejoin
+
+    sc = Scenario(
+        name="flap",
+        events=(FailStop(at_step=5, nodes=(1,)), Rejoin(at_step=5, nodes=(1,))),
+    )
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20, scenario=sc)
+    assert r.dead == ()
+    # the flapping node runs at the same rate as everyone else afterwards
+    assert int(r.steps[1]) <= int(r.steps.max()) + 1
+    assert int(r.steps[1]) - int(r.steps.min()) <= 2
+
+
+def test_trace_has_no_duplicate_final_tick(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12,
+                 scenario="homogeneous", record_dt=4.0)
+    ticks = [e["t"] for e in r.trace]
+    assert len(ticks) == len(set(ticks))
+    assert r.trace[-1]["min_step"] == 12
+
+
+def test_trace_recording(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12,
+                 scenario="homogeneous", record_dt=4.0, metric_fn=metric)
+    assert len(r.trace) >= 3
+    for e in r.trace:
+        assert {"t", "min_step", "max_step", "consensus", "metric"} <= set(e)
+    assert r.trace[-1]["min_step"] == 12
+    # homogeneous bookkeeping
+    assert r.sim_time == pytest.approx(12.0)
+    assert r.stall_time.sum() == 0.0
+    assert effective_batch_fraction(r) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock projection
+# ---------------------------------------------------------------------------
+
+
+def test_wallclock_projection_orders_scenarios(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    topo = build_topology("ring", 8)
+    r_h = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+                   scenario="homogeneous")
+    r_s = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+                   scenario="straggler_1slow", seed=0)
+    p_h = project_wallclock(r_h, topo, opt=opt, grad_fn=_grad(problem8))
+    p_s = project_wallclock(r_s, topo, opt=opt, grad_fn=_grad(problem8))
+    for key in ("step_time_s", "wallclock_s", "steps_per_s", "dominant",
+                "compute_s", "memory_s", "collective_s", "stall_s"):
+        assert key in p_h
+    assert p_h["step_time_s"] > 0
+    assert p_s["wallclock_s"] > p_h["wallclock_s"]  # straggler costs time
+    assert p_s["steps_per_s"] < p_h["steps_per_s"]
+    assert p_h["stall_s"] == 0.0 and p_s["stall_s"] > 0.0
+
+
+def test_scenario_registry_contents():
+    for name in ("homogeneous", "straggler_1slow", "failstop_quarter", "churn",
+                 "stale_gossip_k1", "stale_gossip_k2", "stale_gossip_k4"):
+        sc = get_scenario(name, 8, 100)
+        assert sc.name == name
+        assert len(sc.duration_models(8)) == 8
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nope", 8, 100)

@@ -52,6 +52,50 @@ def test_random_match_seeded_deterministic():
         np.testing.assert_array_equal(a.W(s), b.W(s))
 
 
+@pytest.mark.parametrize("name", ["one-peer-exp", "random-match"])
+def test_exclude_time_varying_per_phase(name):
+    """Excluding nodes from a time-varying topology must hold per *phase*:
+    every cycled W stays symmetric doubly stochastic, with zero weight to and
+    from the dead nodes and the dead diagonal pinned at 1."""
+    t = build_topology(name, 8)
+    assert t.period > 1  # premise: actually time-varying
+    dead = (2, 5)
+    t2 = t.exclude(dead)
+    assert t2.period == t.period  # the cycle structure survives exclusion
+    t2.validate()  # symmetry + row stochasticity + classes == W, every phase
+    alive = [i for i in range(8) if i not in dead]
+    for phase in range(t2.period):
+        W = t2.W(phase)
+        np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)  # columns
+        np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)  # rows
+        for d in dead:
+            assert W[d, d] == 1.0
+            assert np.count_nonzero(W[d, :]) == 1  # sends nothing
+            assert np.count_nonzero(W[:, d]) == 1  # receives nothing
+        # survivor block is itself doubly stochastic per phase
+        Ws = W[np.ix_(alive, alive)]
+        np.testing.assert_allclose(Ws.sum(axis=1), 1.0, atol=1e-12)
+        np.testing.assert_allclose(Ws.sum(axis=0), 1.0, atol=1e-12)
+    # averaged over the period the survivors still mix
+    Wbar = sum(t2.W(p) for p in range(t2.period)) / t2.period
+    assert rho(Wbar[np.ix_(alive, alive)]) < 1.0
+
+
+def test_exclude_time_varying_edge_classes_route_around_dead():
+    """A dead node's partner in a matching phase falls back to self-weight 1
+    (its payload has nowhere to go that phase)."""
+    t = build_topology("one-peer-exp", 8)
+    t2 = t.exclude([0])
+    for phase in range(t2.period):
+        W = t.W(phase)
+        partner = int(np.nonzero(W[0])[0][np.nonzero(W[0])[0] != 0][0])
+        W2 = t2.W(phase)
+        assert W2[partner, partner] == 1.0  # widowed for this phase
+        for c in t2.edge_classes(phase):
+            assert c.recv_weight[0] == 0.0
+            assert all(0 not in (src, dst) for src, dst in c.pairs)
+
+
 def test_exclude_reroutes_and_stays_doubly_stochastic():
     t = build_topology("exp", 16)
     t2 = t.exclude([3, 7])
