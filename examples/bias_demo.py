@@ -8,7 +8,12 @@ cluster via the discrete-event simulator (repro.sim) — e.g.::
     PYTHONPATH=src python examples/bias_demo.py --scenario straggler_1slow
     PYTHONPATH=src python examples/bias_demo.py --scenario stale_gossip_k2
 
-Default (no scenario) is the idealized synchronous lockstep of
+``--gossip-delay K --compression C`` instead swaps the transport under the
+synchronous harness: a ``DelayedStackedChannel`` (the GossipChannel API)
+mixes iterates K rounds old, optionally through a message compressor —
+the mesh-free way to sweep compression x staleness.
+
+Default (no scenario, delay 0) is the idealized synchronous lockstep of
 ``run_stacked``, exactly as before.
 """
 
@@ -18,6 +23,7 @@ import functools
 import jax.numpy as jnp
 
 from repro.core import (
+    DelayedStackedChannel,
     bias_to_optimum,
     build_topology,
     make_linear_regression,
@@ -37,7 +43,20 @@ def main() -> None:
         "default: idealized synchronous lockstep",
     )
     parser.add_argument("--seed", type=int, default=0, help="scenario clock seed")
+    parser.add_argument(
+        "--gossip-delay", dest="gossip_delay", type=int, default=0,
+        help="mix iterates K rounds old via a DelayedStackedChannel "
+        "(synchronous harness; mutually exclusive with --scenario)",
+    )
+    parser.add_argument(
+        "--compression", default=None,
+        help="message compressor for the channel (bf16 | int8 | topk:R)",
+    )
     args = parser.parse_args()
+    if args.scenario is not None and (args.gossip_delay or args.compression):
+        parser.error("--gossip-delay/--compression drive the synchronous "
+                     "channel path and would be ignored by the simulator; "
+                     "use stale_gossip_k* scenarios for simulated staleness")
 
     prob = make_linear_regression(n=8, m=50, d=30, noise=0.01, seed=0)
     topo = build_topology("torus", 8)
@@ -45,10 +64,18 @@ def main() -> None:
     print(f"8-node mesh topology, rho = {topo.rho():.3f}, b^2 = {prob.b_sq:.1f}")
 
     if args.scenario is None:
+        channel = None
+        if args.gossip_delay or args.compression:
+            channel = DelayedStackedChannel(
+                topo, args.gossip_delay, compression=args.compression
+            )
+            print(f"transport: {channel.name} channel, delay="
+                  f"{args.gossip_delay}, compression={args.compression}")
         print()
         traces = {
             a: run_bias_experiment(a, prob, topo, lr=lr, momentum=momentum,
-                                   n_steps=n_steps, record_every=record)
+                                   n_steps=n_steps, record_every=record,
+                                   channel=channel)
             for a in ALGOS
         }
         label = {a: [float(v) for v in traces[a]] for a in ALGOS}

@@ -4,6 +4,12 @@ Trains a tiny LM with both algorithms on heterogeneous synthetic shards and
 prints the loss + consensus distance — DecentLaM reaches a lower loss floor
 because its inconsistency bias is not momentum-amplified (paper Prop. 2-3).
 
+Communication goes through the ``GossipChannel`` transport API: the train
+step gossips via an edge-class ppermute channel whose state (compression
+error feedback, delay buffers, telemetry) lives in the TrainState's
+``"channel"`` bucket, and the channel's introspection prices the wire
+traffic (``bytes_per_step``).
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -36,9 +42,16 @@ for algo in ("dmsgd", "decentlam"):
         track_consensus=True,
     )
     opt = make_optimizer(tcfg.opt_config())
-    step_fn, _, bspecs = build_train_step(cfg, tcfg, mesh, node_axes=("data",))
+    step_fn, _, bspecs, channel = build_train_step(
+        cfg, tcfg, mesh, node_axes=("data",)
+    )
     state = init_train_state(jax.random.key(0), cfg, opt, N_NODES, TP,
-                             mesh=mesh, node_axes=("data",))
+                             mesh=mesh, node_axes=("data",), channel=channel)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"])) // N_NODES
+    comm = channel.bytes_per_step(4.0 * n_params)
+    print(f"{algo}: {channel.name} channel on {channel.topology.name}, "
+          f"{comm['egress_bytes'] / 2**20:.1f} MiB egress/node/step "
+          f"over {comm['hops']:.0f} hops")
     data = SyntheticLM(SyntheticLMConfig(
         vocab_size=cfg.vocab_size, seq_len=SEQ, per_node_batch=4,
         n_nodes=N_NODES, heterogeneity=0.5))
@@ -51,4 +64,6 @@ for algo in ("dmsgd", "decentlam"):
         if k % 20 == 0 or k == STEPS - 1:
             print(f"{algo:10s} step {k:3d} loss {float(m['loss']):.4f} "
                   f"consensus {float(m['consensus_sq']):.3e}")
-    print()
+    tele = state["channel"]["t"]
+    print(f"{algo:10s} channel telemetry: {int(tele['rounds'][0])} gossip "
+          f"rounds, {float(tele['bytes'][0]) / 2**20:.1f} MiB egress/node\n")

@@ -5,6 +5,14 @@ The paper's contribution lives here.  See DESIGN.md §1-§5.
 
 from .compression import Compressor, get_compressor, wire_bytes
 from .gossip import (
+    AllgatherChannel,
+    DelayedPpermuteChannel,
+    DelayedStackedChannel,
+    GossipChannel,
+    PpermuteChannel,
+    StackedChannel,
+    build_channel,
+    delay_matrix,
     gossip_bytes_per_step,
     init_compression_state,
     make_allgather_gossip,
@@ -40,8 +48,14 @@ from .topology import (
 
 __all__ = [
     "ALGORITHMS",
+    "AllgatherChannel",
     "Compressor",
+    "DelayedPpermuteChannel",
+    "DelayedStackedChannel",
     "EdgeClass",
+    "GossipChannel",
+    "PpermuteChannel",
+    "StackedChannel",
     "LinearRegressionProblem",
     "Optimizer",
     "OptimizerConfig",
@@ -49,9 +63,11 @@ __all__ = [
     "TOPOLOGIES",
     "Topology",
     "bias_to_optimum",
+    "build_channel",
     "build_schedule",
     "build_topology",
     "consensus_distance",
+    "delay_matrix",
     "get_compressor",
     "gossip_bytes_per_step",
     "init_compression_state",

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .gossip import make_stacked_gossip, make_stacked_mean
+from .gossip import GossipChannel, StackedChannel, make_stacked_mean
 from .optimizers import Optimizer, OptimizerConfig, make_optimizer
 from .topology import Topology
 
@@ -44,38 +44,46 @@ def run_stacked(
     n_steps: int,
     record_every: int = 0,
     metric_fn: Callable[[Tree], jax.Array] | None = None,
+    channel: GossipChannel | None = None,
 ):
     """Iterate ``opt`` with stacked-dense gossip.
 
     ``params0`` leaves are ``(n, ...)`` (one replica per node); ``grad_fn``
     maps stacked params + step to stacked grads (already per-node).  ``lr``
-    may be a float or a ``step -> lr`` schedule.  Returns final params,
-    optimizer state, and (optionally) a metric trace.
+    may be a float or a ``step -> lr`` schedule.  ``channel`` is any
+    stacked-layout :class:`~repro.core.gossip.GossipChannel` (default: the
+    plain dense-W :class:`~repro.core.gossip.StackedChannel`); its state —
+    delay buffers, compression error feedback — is threaded through the
+    jitted step.  Returns final params, optimizer state, and (optionally) a
+    metric trace.
     """
-    gossip = make_stacked_gossip(topology)
+    if channel is None:
+        channel = StackedChannel(topology)
     mean = make_stacked_mean(topology.n)
     lr_fn = lr if callable(lr) else (lambda _s: jnp.float32(lr))
 
     state = opt.init(params0)
+    chstate = channel.init(params0)
 
     @jax.jit
-    def one(params, state, step):
+    def one(params, state, chstate, step):
         grads = grad_fn(params, step)
-        params, state, _ = opt.step(
+        params, state, chstate = opt.step(
             params,
             grads,
             state,
             lr=lr_fn(step),
             step_idx=step,
-            gossip=gossip,
+            gossip=channel,
             mean=mean,
+            comp_state=chstate,
         )
-        return params, state
+        return params, state, chstate
 
     params = params0
     trace: list[float] = []
     for k in range(n_steps):
-        params, state = one(params, state, jnp.int32(k))
+        params, state, chstate = one(params, state, chstate, jnp.int32(k))
         if record_every and (k % record_every == 0 or k == n_steps - 1):
             assert metric_fn is not None
             trace.append(float(metric_fn(params)))
@@ -175,8 +183,13 @@ def run_bias_experiment(
     momentum: float = 0.8,
     n_steps: int = 3000,
     record_every: int = 50,
+    channel: GossipChannel | None = None,
 ):
-    """Full-batch bias trajectory (Figs. 2-3 reproduction)."""
+    """Full-batch bias trajectory (Figs. 2-3 reproduction).
+
+    ``channel`` overrides the transport (e.g. a
+    :class:`~repro.core.gossip.DelayedStackedChannel` to study the bias
+    under stale mixing)."""
     opt = make_optimizer(OptimizerConfig(algorithm=algorithm, momentum=momentum))
     x0 = jnp.zeros((problem.n, problem.dim), jnp.float32)
 
@@ -192,5 +205,6 @@ def run_bias_experiment(
         n_steps=n_steps,
         record_every=record_every,
         metric_fn=lambda x: bias_to_optimum(x, problem.x_star),
+        channel=channel,
     )
     return trace

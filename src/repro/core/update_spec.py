@@ -46,6 +46,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from .gossip import GossipChannel
+
 Tree = Any
 
 __all__ = [
@@ -466,7 +468,12 @@ def run_update(
 
         # --- COMM ----------------------------------------------------------
         if ph.comm == "gossip":
-            mixed, comp_state = gossip(payload, step_idx, comp_state)
+            # ``gossip`` is either a GossipChannel (the transport API) or a
+            # legacy closure ``(tree, step, comp_state) -> (tree, comp_state)``
+            if isinstance(gossip, GossipChannel):
+                comp_state, mixed = gossip.apply(comp_state, payload, step_idx)
+            else:
+                mixed, comp_state = gossip(payload, step_idx, comp_state)
         elif ph.comm == "mean":
             mixed = mean(payload)
         else:

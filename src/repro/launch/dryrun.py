@@ -107,11 +107,11 @@ def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, args):
             fused_update=args.fused_update,
             gossip_serialize=args.gossip_serialize,
         )
-        step, sspecs, bspecs = build_train_step(
+        step, sspecs, bspecs, channel = build_train_step(
             cfg, tcfg, mesh, node_axes=node_axes, model_axis=MODEL_AXIS
         )
         opt = make_optimizer(tcfg.opt_config())
-        state = abstract_train_state(cfg, opt, n_nodes, tp, tcfg.compression)
+        state = abstract_train_state(cfg, opt, n_nodes, tp, channel)
         batch = _abstract_batch(cfg, shape)
         lowered = step.lower(state, batch)
         jx = jax.make_jaxpr(step)(state, batch)

@@ -38,6 +38,9 @@ def _parse():
     p.add_argument("--algorithm", default="decentlam")
     p.add_argument("--topology", default="exp")
     p.add_argument("--gossip-impl", dest="gossip_impl", default="ppermute")
+    p.add_argument("--gossip-delay", dest="gossip_delay", type=int, default=0,
+                   help="hold gossip payloads back k steps on-device "
+                   "(delayed ppermute channel; SSP staleness on a real mesh)")
     p.add_argument("--compression", default=None)
     p.add_argument("--momentum", type=float, default=0.9)
     p.add_argument("--lr", type=float, default=3e-3)
@@ -84,7 +87,7 @@ def main() -> None:
         save_checkpoint,
     )
     from ..train.step import TrainConfig, build_train_step
-    from ..train.train_state import init_train_state
+    from ..train.train_state import ensure_channel_state, init_train_state
 
     n_devices = len(jax.devices())
     tp = args.tp
@@ -105,6 +108,7 @@ def main() -> None:
         algorithm=args.algorithm,
         topology=args.topology,
         gossip_impl=args.gossip_impl,
+        gossip_delay=args.gossip_delay,
         compression=args.compression,
         momentum=args.momentum,
         grad_accum=args.grad_accum,
@@ -119,7 +123,7 @@ def main() -> None:
     )
 
     def build(mesh, n_nodes):
-        step_fn, sspecs, bspecs = build_train_step(
+        step_fn, sspecs, bspecs, channel = build_train_step(
             cfg, tcfg, mesh, node_axes=("data",)
         )
         opt = make_optimizer(tcfg.opt_config())
@@ -127,22 +131,24 @@ def main() -> None:
             lambda s: NamedSharding(mesh, s), bspecs,
             is_leaf=lambda x: isinstance(x, P),
         )
-        return step_fn, opt, bshard
+        return step_fn, opt, channel, bshard
 
-    step_fn, opt, bshard = build(mesh, n_nodes)
+    step_fn, opt, channel, bshard = build(mesh, n_nodes)
 
     if args.resume and args.ckpt_dir:
         host_state, manifest = restore_checkpoint(args.ckpt_dir)
         if jax.tree.leaves(host_state["params"])[0].shape[0] != n_nodes:
             print(f"elastic reshape {manifest.get('n_nodes')} -> {n_nodes}")
             host_state = elastic_reshape(host_state, n_nodes)
-        state = host_state
+        # channel state (delay buffers, error feedback, telemetry) resumes
+        # when shapes match; anything missing/invalidated re-inits to zeros
+        state = ensure_channel_state(host_state, channel, n_nodes)
         start = int(state["step"])
         print(f"resumed from step {start}")
     else:
         state = init_train_state(
             jax.random.key(0), cfg, opt, n_nodes, tp, mesh=mesh,
-            node_axes=("data",), compression=tcfg.compression,
+            node_axes=("data",), channel=channel,
         )
         start = 0
 
@@ -181,8 +187,8 @@ def main() -> None:
             host = elastic_reshape(host, new_n)
             mesh2 = jax.make_mesh((new_n, tp), ("data", "model"),
                                   devices=jax.devices()[: new_n * tp])
-            step_fn, opt, bshard = build(mesh2, new_n)
-            sshard = None
+            step_fn, opt, channel, bshard = build(mesh2, new_n)
+            host = ensure_channel_state(host, channel, new_n)
             state = jax.tree.map(jnp.asarray, host)
             data = SyntheticLM(SyntheticLMConfig(
                 vocab_size=cfg.vocab_size, seq_len=args.seq_len,

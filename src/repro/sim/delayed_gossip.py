@@ -1,34 +1,37 @@
 """Stacked gossip with per-edge delay buffers (bounded staleness).
 
+The implementation moved to :class:`repro.core.gossip.DelayedStackedChannel`
+as part of the GossipChannel transport redesign; this module keeps
+
+* :func:`run_delayed` — the delayed stacked harness (channel-based), and
+* the legacy closure factories :func:`make_delayed_stacked_gossip` /
+  :func:`init_delay_state` as thin **deprecated** wrappers for one release
+  (identical math: they drive the channel through the old
+  ``gossip(tree, step, comp_state)`` signature with tuple-of-slot state).
+
 ``x_i <- w_ii x_i(t) + sum_j w_ij x_j(t - d_ij)``: every edge ``(i, j)``
-carries a fixed integer delay ``d_ij`` and the receiver mixes the sender's
-payload from ``d_ij`` gossip rounds ago — the synchronous model of
-AD-PSGD-style asynchrony (each node mixes its neighbors' last *available*
-iterates).  Self-contributions are always current (``d_ii = 0``), and before
-the buffers warm up every edge uses the oldest payload recorded so far, so
-round 0 is identical to fresh gossip.
-
-At uniform delay 0 this *is* :func:`repro.core.gossip.make_stacked_gossip`
-(the factory returns it directly), so the zero-staleness simulator degrades
-to the lockstep oracle bit-exactly.
-
-The history buffers ride the optimizer's ``comp_state`` channel (the same
-pytree slot the distributed path uses for compression error-feedback).  For
-algorithms with more than one gossip per step (da-dmsgd) the state is a
-tuple of per-call slots rotated structurally on every call, so each gossip
-phase keeps its own independent history.
+carries a fixed integer delay and the receiver mixes the sender's payload
+from ``d_ij`` gossip rounds ago — the synchronous model of AD-PSGD-style
+asynchrony.  At uniform delay 0 the channel runs the exact
+:class:`~repro.core.gossip.StackedChannel` code path, so the zero-staleness
+simulator degrades to the lockstep oracle bit-exactly.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.gossip import GossipFn, make_stacked_gossip, make_stacked_mean
+from ..core.gossip import (
+    DelayedStackedChannel,
+    GossipFn,
+    _warn_deprecated,
+    delay_matrix,
+    make_stacked_mean,
+)
 from ..core.optimizers import Optimizer
 from ..core.topology import Topology
 
@@ -42,106 +45,44 @@ __all__ = [
 ]
 
 
-def delay_matrix(n: int, delay) -> np.ndarray:
-    """Normalize a delay spec (int or ``(n, n)`` array) to an int matrix with
-    a zero diagonal (self-contributions are never stale)."""
-    if np.isscalar(delay):
-        D = np.full((n, n), int(delay), dtype=np.int64)
-    else:
-        D = np.asarray(delay, dtype=np.int64).copy()
-        assert D.shape == (n, n), f"delay matrix must be ({n}, {n})"
-    assert (D >= 0).all(), "delays must be non-negative"
-    np.fill_diagonal(D, 0)
-    return D
-
-
 def make_delayed_stacked_gossip(topology: Topology, delay) -> GossipFn:
-    """Delayed dense gossip over stacked ``(n, ...)`` leaves.
+    """Deprecated: use :class:`repro.core.gossip.DelayedStackedChannel`.
 
-    ``comp_state`` must come from :func:`init_delay_state`; each call
-    consumes the first slot and rotates it to the back.
+    ``comp_state`` must come from :func:`init_delay_state` (a tuple of
+    ring-buffer slots); each call consumes the first slot and rotates it to
+    the back.
     """
-    n = topology.n
-    D = delay_matrix(n, delay)
-    depth = int(D.max())
-    if depth == 0:
-        return make_stacked_gossip(topology)
+    _warn_deprecated("make_delayed_stacked_gossip", "DelayedStackedChannel")
+    ch = DelayedStackedChannel(topology, delay)  # single-slot channel
 
-    uniq = [int(d) for d in np.unique(D)]
-    # per-phase, per-delay weight matrices: W_t masked to edges with delay d
-    Wds: list[list[tuple[int, jnp.ndarray]]] = []
-    for t in range(topology.period):
-        W = topology.W(t)
-        per_t = []
-        for d in uniq:
-            Wd = np.where(D == d, W, 0.0)
-            if (Wd != 0.0).any():
-                per_t.append((d, jnp.asarray(Wd, jnp.float32)))
-        Wds.append(per_t)
+    if ch._depth == 0:
 
-    ring = depth + 1
+        def gossip0(tree, step, comp_state):
+            _, mixed = ch.apply({}, tree, step)
+            return mixed, comp_state
 
-    def apply_phase(t: int, tree: Tree, slot: dict) -> tuple[Tree, dict]:
-        count = slot["count"]
-        pos = count % ring
-
-        def mix_leaf(hist, x):
-            x32 = x.astype(jnp.float32)
-            hist = jax.lax.dynamic_update_index_in_dim(hist, x32, pos, axis=0)
-            out = jnp.zeros_like(x32)
-            for d, Wd in Wds[t]:
-                # before warmup, fall back to the oldest recorded payload
-                d_eff = jnp.minimum(d, count)
-                read = (count - d_eff) % ring
-                stale = jax.lax.dynamic_index_in_dim(hist, read, axis=0, keepdims=False)
-                out = out + jnp.einsum("ij,j...->i...", Wd, stale)
-            return out.astype(x.dtype), hist
-
-        leaves, treedef = jax.tree.flatten(tree)
-        hists = treedef.flatten_up_to(slot["hist"])
-        mixed, new_hists = [], []
-        for x, h in zip(leaves, hists):
-            m, h = mix_leaf(h, x)
-            mixed.append(m)
-            new_hists.append(h)
-        new_slot = {"hist": treedef.unflatten(new_hists), "count": count + 1}
-        return treedef.unflatten(mixed), new_slot
+        return gossip0
 
     def gossip(tree, step, comp_state):
         slots = tuple(comp_state)
-        slot = slots[0]
-        if topology.period == 1:
-            mixed, new_slot = apply_phase(0, tree, slot)
-        else:
-            branches = [functools.partial(apply_phase, t) for t in range(topology.period)]
-            mixed, new_slot = jax.lax.switch(
-                step % topology.period, branches, tree, slot
-            )
-        return mixed, slots[1:] + (new_slot,)
+        st, mixed = ch.apply({"delay": {"s0": slots[0]}}, tree, step)
+        return mixed, slots[1:] + (st["delay"]["s0"],)
 
     return gossip
 
 
 def init_delay_state(topology: Topology, delay, template: Tree, n_slots: int = 1):
-    """History state for :func:`make_delayed_stacked_gossip`.
+    """Deprecated: use ``DelayedStackedChannel(...).init(template)``.
 
-    ``template`` is any stacked ``(n, ...)`` pytree with payload shapes (the
-    initial params work).  Returns ``()`` when the delay is uniformly zero —
-    the factory degrades to plain stacked gossip which ignores comp state.
+    Returns the legacy tuple-of-slots state (``()`` when the delay is
+    uniformly zero — the closure then ignores comp state).
     """
-    D = delay_matrix(topology.n, delay)
-    depth = int(D.max())
-    if depth == 0:
+    _warn_deprecated("init_delay_state", "DelayedStackedChannel")
+    ch = DelayedStackedChannel(topology, delay, calls_per_step=max(1, n_slots))
+    if ch._depth == 0:
         return ()
-    ring = depth + 1
-
-    def slot():
-        hist = jax.tree.map(
-            lambda x: jnp.zeros((ring,) + x.shape, jnp.float32), template
-        )
-        return {"hist": hist, "count": jnp.int32(0)}
-
-    return tuple(slot() for _ in range(max(1, n_slots)))
+    slots = ch.init(template)["delay"]
+    return tuple(slots[f"s{i}"] for i in range(max(1, n_slots)))
 
 
 def run_delayed(
@@ -155,41 +96,45 @@ def run_delayed(
     n_steps: int,
     record_every: int = 0,
     metric_fn: Callable[[Tree], jax.Array] | None = None,
+    compression: str | None = None,
 ):
-    """:func:`repro.core.reference.run_stacked` with delayed gossip.
+    """:func:`repro.core.reference.run_stacked` with a delayed channel.
 
     At uniform delay 0 the computation is identical to ``run_stacked`` (the
-    gossip closure is literally ``make_stacked_gossip``'s and the delay state
-    is empty), so results are bit-exact.  The exact-mean closure (PmSGD /
+    channel runs the plain StackedChannel code path and the delay state is
+    absent), so results are bit-exact.  The exact-mean closure (PmSGD /
     SlowMo outer sync) is *not* delayed: staleness models gossip links, not
     the all-reduce fabric.
     """
-    gossip = make_delayed_stacked_gossip(topology, delay)
+    channel = DelayedStackedChannel(
+        topology, delay, calls_per_step=opt.gossips_per_step,
+        compression=compression,
+    )
     mean = make_stacked_mean(topology.n)
-    comp = init_delay_state(topology, delay, params0, opt.gossips_per_step)
+    chstate = channel.init(params0)
     lr_fn = lr if callable(lr) else (lambda _s: jnp.float32(lr))
 
     state = opt.init(params0)
 
     @jax.jit
-    def one(params, state, comp, step):
+    def one(params, state, chstate, step):
         grads = grad_fn(params, step)
-        params, state, comp = opt.step(
+        params, state, chstate = opt.step(
             params,
             grads,
             state,
             lr=lr_fn(step),
             step_idx=step,
-            gossip=gossip,
+            gossip=channel,
             mean=mean,
-            comp_state=comp,
+            comp_state=chstate,
         )
-        return params, state, comp
+        return params, state, chstate
 
     params = params0
     trace: list[float] = []
     for k in range(n_steps):
-        params, state, comp = one(params, state, comp, jnp.int32(k))
+        params, state, chstate = one(params, state, chstate, jnp.int32(k))
         if record_every and (k % record_every == 0 or k == n_steps - 1):
             assert metric_fn is not None
             trace.append(float(metric_fn(params)))

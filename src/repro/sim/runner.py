@@ -51,13 +51,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.gossip import make_stacked_gossip, make_stacked_mean
+from ..core.gossip import DelayedStackedChannel, StackedChannel, make_stacked_mean
 from ..core.optimizers import Optimizer
 from ..core.reference import consensus_distance
 from ..core.topology import Topology, build_topology
 from ..launch.elastic import plan_recovery
 from .clock import EventQueue, node_rngs
-from .delayed_gossip import init_delay_state, make_delayed_stacked_gossip
 from .events import FailStop, LinkDegrade, Rejoin, Scenario, Slowdown, get_scenario
 from .metrics import SimResult
 
@@ -91,7 +90,7 @@ def _make_step(
     opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn
 ) -> Callable:
     """The jitted stacked one-step — same computation as ``run_stacked``."""
-    gossip = make_stacked_gossip(topology)
+    channel = StackedChannel(topology)
     mean = make_stacked_mean(topology.n)
 
     @jax.jit
@@ -103,7 +102,7 @@ def _make_step(
             state,
             lr=lr_fn(step),
             step_idx=step,
-            gossip=gossip,
+            gossip=channel,
             mean=mean,
         )
         return params, state
@@ -467,34 +466,36 @@ def _run_delayed_engine(
 ) -> SimResult:
     """Synchronous bounded-staleness rounds (``engine="delayed"``)."""
     topology = build_topology(topology_name, n)
-    gossip = make_delayed_stacked_gossip(topology, scenario.gossip_delay)
-    mean = make_stacked_mean(n)
-    comp = init_delay_state(
-        topology, scenario.gossip_delay, params0, opt.gossips_per_step
+    channel = DelayedStackedChannel(
+        topology, scenario.gossip_delay, calls_per_step=opt.gossips_per_step
     )
+    mean = make_stacked_mean(n)
+    chstate = channel.init(params0)
     state = opt.init(params0)
 
     @jax.jit
-    def one(params, state, comp, step):
+    def one(params, state, chstate, step):
         grads = grad_fn(params, step)
-        params, state, comp = opt.step(
+        params, state, chstate = opt.step(
             params, grads, state,
-            lr=lr_fn(step), step_idx=step, gossip=gossip, mean=mean,
-            comp_state=comp,
+            lr=lr_fn(step), step_idx=step, gossip=channel, mean=mean,
+            comp_state=chstate,
         )
-        return params, state, comp
+        return params, state, chstate
 
     trace: list[dict] = []
     every = max(1, int(record_dt)) if record_dt > 0 else 0
     params = params0
     for k in range(n_steps):
-        params, state, comp = one(params, state, comp, jnp.int32(k))
+        params, state, chstate = one(params, state, chstate, jnp.int32(k))
         if every and (k % every == 0 or k == n_steps - 1):
             entry = {
                 "t": float(k + 1),
                 "min_step": k + 1,
                 "max_step": k + 1,
                 "consensus": float(consensus_distance(jax.tree.leaves(params)[0])),
+                # per-edge version gap: a first-class channel observable
+                "max_gap": int(np.max(np.asarray(channel.version_gaps(chstate)))),
             }
             if metric_fn is not None:
                 entry["metric"] = float(metric_fn(params))

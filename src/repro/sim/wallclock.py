@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.gossip import gossip_bytes_per_step, make_stacked_gossip, make_stacked_mean
+from ..core.gossip import StackedChannel, gossip_bytes_per_step, make_stacked_mean
 from ..core.optimizers import Optimizer
 from ..core.topology import Topology
 from ..launch.costmodel import analyze_lowered
@@ -58,14 +58,14 @@ def step_costs(
     """Per-node FLOPs / HBM bytes of one optimizer step, from the jaxpr of
     the same stacked step the simulator executes."""
     mean = make_stacked_mean(topology.n)
-    gossip = make_stacked_gossip(topology)
+    channel = StackedChannel(topology)
     state = opt.init(params0)
 
     def one(params, state):
         grads = grad_fn(params, jnp.int32(0))
         params, state, _ = opt.step(
             params, grads, state,
-            lr=jnp.float32(lr), step_idx=jnp.int32(0), gossip=gossip, mean=mean,
+            lr=jnp.float32(lr), step_idx=jnp.int32(0), gossip=channel, mean=mean,
         )
         return params, state
 

@@ -109,15 +109,22 @@ def restore_checkpoint(directory: str, step: int | None = None) -> tuple[Tree, d
     with np.load(os.path.join(d, "state.npz")) as z:
         flat = {k: z[k] for k in z.files}
     state = _unflatten(flat)
-    state.setdefault("comp", {})  # empty-subtree keys are dropped by savez
+    # pre-channel checkpoints stored compression error-feedback under "comp";
+    # the GossipChannel state bucket nests it as channel["comp"]
+    if "comp" in state:
+        state["channel"] = {"comp": state.pop("comp")}
+    state.setdefault("channel", {})  # empty-subtree keys are dropped by savez
     return state, manifest
 
 
 def elastic_reshape(state: Tree, new_n_nodes: int) -> Tree:
     """Consensus-collapse the stacked replicas and re-broadcast to a new n.
 
-    Works for both shrink (node failure) and grow (scale-out).  Compression
-    error-feedback state is reset (it is node-local by definition).
+    Works for both shrink (node failure) and grow (scale-out).  Channel
+    state — compression error feedback, delay ring buffers, telemetry — is
+    reset to zeros (it is node-local by definition, and buffered payloads
+    from the old cluster shape are meaningless on the new one; the delayed
+    channels re-warm from fresh gossip, which round 0 treats as delay 0).
     """
 
     def collapse(x):
@@ -128,7 +135,7 @@ def elastic_reshape(state: Tree, new_n_nodes: int) -> Tree:
     new = dict(state)
     new["params"] = jax.tree.map(collapse, state["params"])
     new["opt"] = jax.tree.map(collapse, state.get("opt", {}))
-    new["comp"] = jax.tree.map(
-        lambda x: jnp.zeros_like(collapse(x)), state.get("comp", {})
+    new["channel"] = jax.tree.map(
+        lambda x: jnp.zeros_like(collapse(x)), state.get("channel", {})
     )
     return new

@@ -27,11 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import LEGACY_SHARD_MAP, shard_map
 from ..configs.base import ModelConfig
-from ..core.gossip import (
-    make_allgather_gossip,
-    make_ppermute_gossip,
-    make_psum_mean,
-)
+from ..core.gossip import GossipChannel, build_channel, make_psum_mean
 from ..core.optimizers import OptimizerConfig, make_optimizer
 from ..core.schedules import ScheduleConfig, build_schedule
 from ..core.topology import build_topology
@@ -43,7 +39,7 @@ from .train_state import stacked_state_specs
 
 Tree = Any
 
-__all__ = ["TrainConfig", "build_train_step", "batch_specs"]
+__all__ = ["TrainConfig", "build_train_step", "build_gossip_channel", "batch_specs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +47,7 @@ class TrainConfig:
     algorithm: str = "decentlam"
     topology: str = "exp"
     gossip_impl: str = "ppermute"  # ppermute | allgather (naive baseline)
+    gossip_delay: int = 0  # hold payloads back k steps (delayed ppermute channel)
     compression: str | None = None
     momentum: float = 0.9
     weight_decay: float = 0.0
@@ -70,6 +67,33 @@ class TrainConfig:
             weight_decay=self.weight_decay,
             grad_clip=self.grad_clip,
         )
+
+
+def build_gossip_channel(
+    tcfg: "TrainConfig", topology, node_axes, *, gossips_per_step: int | None = None
+) -> GossipChannel:
+    """The transport for a train config: ppermute/allgather, delayed when
+    ``gossip_delay > 0``, telemetry on (per-node rounds/egress-bytes live in
+    the TrainState's ``"channel"`` bucket and checkpoint with it)."""
+    if tcfg.gossip_impl not in ("ppermute", "allgather"):
+        # the stacked channels are the mesh-free oracle layout — inside the
+        # per-node shard_map they would mix garbage shapes
+        raise ValueError(
+            f"gossip_impl={tcfg.gossip_impl!r}; the train step runs inside "
+            "shard_map and needs a distributed transport: ppermute | allgather"
+        )
+    if gossips_per_step is None:
+        gossips_per_step = make_optimizer(tcfg.opt_config()).gossips_per_step
+    return build_channel(
+        tcfg.gossip_impl,
+        topology,
+        node_axes,
+        compression=tcfg.compression,
+        delay=tcfg.gossip_delay,
+        serialize=tcfg.gossip_serialize,
+        calls_per_step=gossips_per_step,
+        telemetry=True,
+    )
 
 
 def batch_specs(cfg: ModelConfig, node_axes) -> Tree:
@@ -100,7 +124,12 @@ def build_train_step(
     node_axes: tuple[str, ...] = ("data",),
     model_axis: str = "model",
 ):
-    """Returns (jitted train_step, state_specs, batch_specs)."""
+    """Returns (jitted train_step, state_specs, batch_specs, channel).
+
+    The returned channel is THE transport the step gossips through — pass it
+    to ``init_train_state`` / ``ensure_channel_state`` so the TrainState's
+    ``"channel"`` bucket matches the step's expectations by construction.
+    """
     n_nodes = 1
     for a in node_axes:
         n_nodes *= mesh.shape[a]
@@ -127,15 +156,9 @@ def build_train_step(
     opt = make_optimizer(tcfg.opt_config())
     lr_fn = build_schedule(tcfg.schedule)
 
-    if tcfg.gossip_impl == "ppermute":
-        gossip = make_ppermute_gossip(
-            topology, node_axes, compression=tcfg.compression,
-            serialize=tcfg.gossip_serialize,
-        )
-    elif tcfg.gossip_impl == "allgather":
-        gossip = make_allgather_gossip(topology, node_axes)
-    else:
-        raise ValueError(tcfg.gossip_impl)
+    gossip = build_gossip_channel(
+        tcfg, topology, node_axes, gossips_per_step=opt.gossips_per_step
+    )
     mean = make_psum_mean(node_axes, n_nodes)
 
     def loss_fn(params, batch):
@@ -211,7 +234,7 @@ def build_train_step(
     def step_fn(state: Tree, batch: Tree):
         params = jax.tree.map(lambda x: x[0], state["params"])
         opt_state = jax.tree.map(lambda x: x[0], state["opt"])
-        comp_state = jax.tree.map(lambda x: x[0], state["comp"])
+        comp_state = jax.tree.map(lambda x: x[0], state["channel"])
         step_idx = state["step"]
         lr = lr_fn(step_idx)
 
@@ -263,13 +286,11 @@ def build_train_step(
             "step": step_idx + 1,
             "params": jax.tree.map(lambda x: x[None], new_params),
             "opt": jax.tree.map(lambda x: x[None], new_opt),
-            "comp": jax.tree.map(lambda x: x[None], comp_state),
+            "channel": jax.tree.map(lambda x: x[None], comp_state),
         }
         return new_state, out_metrics
 
-    sspecs = stacked_state_specs(
-        cfg, opt, tp, node_axes, model_axis, tcfg.compression
-    )
+    sspecs = stacked_state_specs(cfg, opt, tp, node_axes, model_axis, gossip)
     bspecs = batch_specs(cfg, node_axes)
     mspecs = {"loss": P(), "lr": P(), "xent": P(),
               "moe_load_balance": P(), "moe_router_z": P()}
@@ -284,4 +305,4 @@ def build_train_step(
         out_specs=(sspecs, mspecs),
         axis_names=all_axes,
     )
-    return jax.jit(step_sm, donate_argnums=(0,)), sspecs, bspecs
+    return jax.jit(step_sm, donate_argnums=(0,)), sspecs, bspecs, gossip

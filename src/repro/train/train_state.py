@@ -1,10 +1,14 @@
-"""TrainState: stacked per-node parameters + optimizer state.
+"""TrainState: stacked per-node parameters + optimizer + channel state.
 
 Every leaf carries a leading *node* axis of size ``n_nodes`` — one model
-replica per decentralized node (DESIGN.md §4).  ``init_train_state`` builds
-it on-device through jit-with-out-shardings so each device only ever
-materializes its own shard (mandatory at 8B x 32 replicas); the dry-run uses
-``abstract_train_state`` (eval_shape, zero allocation).
+replica per decentralized node (DESIGN.md §4).  The ``"channel"`` bucket is
+the gossip transport's state (:class:`repro.core.gossip.GossipChannel`):
+compression error-feedback, delay ring buffers, telemetry — one
+checkpointable node whose structure/specs come from the channel itself.
+``init_train_state`` builds it on-device through jit-with-out-shardings so
+each device only ever materializes its own shard (mandatory at 8B x 32
+replicas); the dry-run uses ``abstract_train_state`` (eval_shape, zero
+allocation).
 """
 
 from __future__ import annotations
@@ -16,8 +20,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig
-from ..core.gossip import init_compression_state
-from ..core.compression import get_compressor
+from ..core.gossip import GossipChannel
 from ..core.optimizers import Optimizer
 from ..models import transformer as T
 
@@ -29,6 +32,7 @@ __all__ = [
     "make_train_state_fn",
     "init_train_state",
     "abstract_train_state",
+    "ensure_channel_state",
 ]
 
 
@@ -44,21 +48,20 @@ def stacked_param_specs(cfg: ModelConfig, tp: int, node_axes, model_axis="model"
 
 def stacked_state_specs(
     cfg: ModelConfig, opt: Optimizer, tp: int, node_axes, model_axis="model",
-    compression: str | None = None,
+    channel: GossipChannel | None = None,
 ) -> Tree:
-    """Specs for the full TrainState pytree (params + opt state + step)."""
+    """Specs for the full TrainState pytree (params + opt + channel state)."""
     from ..core.optimizers import state_keys
 
     pspec = T.param_specs(cfg, tp, model_axis)
     # every optimizer state bucket mirrors the param tree
     opt_state_spec: Tree = {k: pspec for k in state_keys(opt.config)}
-    compressor = get_compressor(compression)
-    has_comp_state = compressor.name.startswith("topk")
+    channel_spec = channel.state_specs(pspec) if channel is not None else {}
     return {
         "step": P(),
         "params": _prepend_axis(pspec, node_axes),
         "opt": _prepend_axis(opt_state_spec, node_axes),
-        "comp": _prepend_axis(pspec, node_axes) if has_comp_state else {},
+        "channel": _prepend_axis(channel_spec, node_axes),
     }
 
 
@@ -67,11 +70,9 @@ def make_train_state_fn(
     opt: Optimizer,
     n_nodes: int,
     tp: int,
-    compression: str | None = None,
+    channel: GossipChannel | None = None,
 ):
     """Pure init function (jit-able with out_shardings)."""
-    compressor = get_compressor(compression)
-    has_comp_state = compressor.name.startswith("topk")
 
     def init_fn(key):
         params = T.init_params(key, cfg, tp)
@@ -81,16 +82,16 @@ def make_train_state_fn(
 
         sp = jax.tree.map(stack, params)
         opt_state = jax.tree.map(stack, opt.init(params))
-        comp = (
-            jax.tree.map(stack, init_compression_state(compressor, params))
-            if has_comp_state
+        chan = (
+            jax.tree.map(stack, channel.init(params))
+            if channel is not None
             else {}
         )
         return {
             "step": jnp.zeros((), jnp.int32),
             "params": sp,
             "opt": opt_state,
-            "comp": comp,
+            "channel": chan,
         }
 
     return init_fn
@@ -106,22 +107,96 @@ def init_train_state(
     mesh=None,
     node_axes=None,
     model_axis: str = "model",
-    compression: str | None = None,
+    channel: GossipChannel | None = None,
 ):
-    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, compression)
+    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, channel)
     if mesh is None:
         return init_fn(key)
-    specs = stacked_state_specs(cfg, opt, tp, node_axes, model_axis, compression)
+    specs = stacked_state_specs(cfg, opt, tp, node_axes, model_axis, channel)
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
     )
     return jax.jit(init_fn, out_shardings=shardings)(key)
 
 
+def _merge_channel(abstract: Tree, old: Tree) -> Tree:
+    """Prefer restored leaves whose shape/dtype match the abstract spec;
+    materialize zeros for anything missing or reshaped (channel state is
+    zero-initialized by construction, so zeros == ``channel.init``)."""
+    if isinstance(abstract, dict):
+        if not isinstance(old, dict):
+            old = {}
+        return {k: _merge_channel(v, old.get(k)) for k, v in abstract.items()}
+    if old is not None:
+        old = jnp.asarray(old)
+        if old.shape == abstract.shape and old.dtype == abstract.dtype:
+            return old
+    return jnp.zeros(abstract.shape, abstract.dtype)
+
+
+def _subtree_matches(abstract: Tree, old: Tree) -> bool:
+    if old is None or jax.tree.structure(abstract) != jax.tree.structure(old):
+        return False
+    return all(
+        jnp.asarray(o).shape == a.shape and jnp.asarray(o).dtype == a.dtype
+        for a, o in zip(jax.tree.leaves(abstract), jax.tree.leaves(old))
+    )
+
+
+def ensure_channel_state(state: Tree, channel: GossipChannel | None, n_nodes: int) -> Tree:
+    """Reconcile a restored TrainState's ``"channel"`` bucket with the
+    current channel's structure.
+
+    Matching sub-nodes survive (compression error feedback and delay
+    buffers resume bit-exactly on a same-shape restart); anything missing —
+    pre-channel checkpoints, a newly enabled delay or telemetry, an elastic
+    reshape that invalidated the buffers — is zero-initialized.  The
+    expected structure comes from ``jax.eval_shape`` (no allocation; only
+    the subtrees that actually re-init materialize zeros — a delayed
+    channel's fresh ring buffers are ``n_nodes x (delay+1) x model`` f32,
+    which must never be built just to be thrown away on a matching resume).
+    Delay ring-buffer slots resume *atomically*: keeping a restored
+    ``count`` while its ``hist`` re-inits (e.g. after a delay change
+    resized the ring) would skip the warmup rule ``min(d, count)`` and mix
+    all-zero payloads with full edge weight.
+    """
+    if channel is None:
+        return {**state, "channel": {}}
+    template = jax.eval_shape(lambda p: jax.tree.map(lambda x: x[0], p), state["params"])
+    abstract = jax.eval_shape(
+        lambda t: jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape),
+            channel.init(t),
+        ),
+        template,
+    )
+    old = state.get("channel", {})
+    if not isinstance(old, dict):
+        old = {}
+    merged: Tree = {}
+    for key, abs_v in abstract.items():
+        old_v = old.get(key)
+        if key == "delay":
+            merged[key] = {
+                slot_key: (
+                    jax.tree.map(jnp.asarray, old_v[slot_key])
+                    if isinstance(old_v, dict)
+                    and _subtree_matches(abs_slot, old_v.get(slot_key))
+                    else jax.tree.map(
+                        lambda a: jnp.zeros(a.shape, a.dtype), abs_slot
+                    )
+                )
+                for slot_key, abs_slot in abs_v.items()
+            }
+        else:
+            merged[key] = _merge_channel(abs_v, old_v)
+    return {**state, "channel": merged}
+
+
 def abstract_train_state(
     cfg: ModelConfig, opt: Optimizer, n_nodes: int, tp: int,
-    compression: str | None = None,
+    channel: GossipChannel | None = None,
 ):
     """ShapeDtypeStruct pytree of the TrainState (dry-run input stand-in)."""
-    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, compression)
+    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, channel)
     return jax.eval_shape(init_fn, jax.random.key(0))

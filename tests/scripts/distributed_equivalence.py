@@ -13,7 +13,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import tiny_lm
-from repro.core import make_optimizer, build_topology, make_stacked_gossip, make_stacked_mean
+from repro.core import (
+    StackedChannel,
+    build_topology,
+    make_optimizer,
+    make_stacked_mean,
+)
 from repro.core.schedules import ScheduleConfig
 from repro.data.synthetic import SyntheticLM, SyntheticLMConfig
 from repro.models import transformer as T
@@ -57,9 +62,9 @@ elif MODE == "fused":
 
 tcfg = TrainConfig(**kwargs)
 opt = make_optimizer(tcfg.opt_config())
-step_fn, _, bspecs = build_train_step(cfg, tcfg, mesh, node_axes=("data",))
+step_fn, _, bspecs, channel = build_train_step(cfg, tcfg, mesh, node_axes=("data",))
 state = init_train_state(jax.random.key(0), cfg, opt, N, TP, mesh=mesh,
-                         node_axes=("data",), compression=tcfg.compression)
+                         node_axes=("data",), channel=channel)
 data = SyntheticLM(SyntheticLMConfig(vocab_size=256, seq_len=S, per_node_batch=2,
                                      n_nodes=N, heterogeneity=0.5))
 bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
@@ -70,11 +75,11 @@ for k in range(3):
     state, metrics = step_fn(state, b)
 assert np.isfinite(float(metrics["loss"]))
 
-# stacked reference with plain (uncompressed, dense-W) gossip
+# stacked reference with plain (uncompressed, dense-W) channel
 rt = tcfg.runtime
 tp1 = TPContext(size=1)
 topo = build_topology(kwargs["topology"], N)
-g_ref, m_ref = make_stacked_gossip(topo), make_stacked_mean(N)
+g_ref, m_ref = StackedChannel(topo), make_stacked_mean(N)
 params0 = T.init_params(jax.random.key(0), cfg, tp=TP)
 ref_p = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), params0)
 ref_o = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (N,) + x.shape),
@@ -111,6 +116,10 @@ errs = jax.tree.leaves(jax.tree.map(
 maxerr = max(errs)
 assert maxerr < tol, f"{MODE}: {maxerr}"
 if MODE == "topk":
-    ef = [np.abs(np.asarray(x)).sum() for x in jax.tree.leaves(state["comp"])]
+    ef = [np.abs(np.asarray(x)).sum()
+          for x in jax.tree.leaves(state["channel"]["comp"])]
     assert sum(ef) > 0.0, "error-feedback residuals never populated"
+tele = state["channel"]["t"]
+assert int(tele["rounds"][0]) == 3 * opt.gossips_per_step, tele
+assert float(tele["bytes"][0]) > 0.0
 print(f"{MODE}: OK maxerr={maxerr:.2e}")

@@ -1,18 +1,25 @@
-"""Checkpoint/restart + elastic rescale tests."""
+"""Checkpoint/restart + elastic rescale tests (incl. channel-state resume)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import tiny_lm
-from repro.core import OptimizerConfig, make_optimizer
+from repro.core import (
+    DelayedStackedChannel,
+    OptimizerConfig,
+    build_topology,
+    make_linear_regression,
+    make_optimizer,
+    make_stacked_mean,
+)
 from repro.train.checkpoint import (
     elastic_reshape,
     latest_step,
     restore_checkpoint,
     save_checkpoint,
 )
-from repro.train.train_state import init_train_state
+from repro.train.train_state import ensure_channel_state, init_train_state
 
 
 def _state(n_nodes=4, step=7):
@@ -79,3 +86,143 @@ def test_elastic_then_restart_roundtrip(tmp_path):
     save_checkpoint(str(tmp_path / "c2"), resized)
     again, _ = restore_checkpoint(str(tmp_path / "c2"))
     assert jax.tree.leaves(again["params"])[0].shape[0] == 8
+
+
+# ---------------------------------------------------------------------------
+# GossipChannel state: save/restore round-trip + resume equality
+# ---------------------------------------------------------------------------
+
+
+def _delayed_run(n_steps, state=None):
+    """A stacked DmSGD run whose channel carries BOTH state kinds: delay
+    ring buffers (delay=2) and top-k error feedback, plus telemetry."""
+    n = 4
+    prob = make_linear_regression(n=n, m=6, d=5, noise=0.01, seed=2)
+    topo = build_topology("ring", n)
+    opt = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
+    channel = DelayedStackedChannel(
+        topo, 2, compression="topk:0.5", telemetry=True
+    )
+    mean = make_stacked_mean(n)
+
+    @jax.jit
+    def one(params, opt_state, chstate, k):
+        grads = prob.grad(params)
+        return opt.step(
+            params, grads, opt_state, lr=jnp.float32(1e-2), step_idx=k,
+            gossip=channel, mean=mean, comp_state=chstate,
+        )
+
+    if state is None:
+        params = jnp.zeros((n, prob.dim), jnp.float32)
+        opt_state = opt.init(params)
+        chstate = channel.init(params)
+        start = 0
+    else:
+        params, opt_state, chstate = (
+            state["params"], state["opt"], state["channel"],
+        )
+        start = int(state["step"])
+    for k in range(start, start + n_steps):
+        params, opt_state, chstate = one(params, opt_state, chstate, jnp.int32(k))
+    return {
+        "step": jnp.int32(start + n_steps),
+        "params": params,
+        "opt": opt_state,
+        "channel": chstate,
+    }
+
+
+def test_channel_state_roundtrip_bit_exact(tmp_path):
+    st = _delayed_run(3)
+    assert set(st["channel"]) == {"t", "comp", "delay"}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, st)
+    restored, _ = restore_checkpoint(d)
+    assert jax.tree.structure(restored["channel"]) == jax.tree.structure(
+        st["channel"]
+    )
+    for a, b in zip(jax.tree.leaves(st["channel"]), jax.tree.leaves(restored["channel"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_channel_state_resume_equality(tmp_path):
+    """Resume from a checkpoint mid-run == the uninterrupted run, bit-exact
+    — delay ring buffers and error-feedback residuals survive the restart."""
+    st3 = _delayed_run(3)
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, st3)
+    restored, _ = restore_checkpoint(d)
+    resumed = _delayed_run(3, state=restored)
+    straight = _delayed_run(6)
+    for a, b in zip(jax.tree.leaves(resumed), jax.tree.leaves(straight)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ensure_channel_state_reconciles_legacy_and_fresh():
+    """Resume reconciliation for the distributed TrainState layout: old
+    checkpoints (no/partial channel bucket) zero-init cleanly, matching
+    leaves are preserved, reshaped ones re-init."""
+    from repro.core import DelayedPpermuteChannel, PpermuteChannel
+
+    n, d = 4, 5
+    topo = build_topology("ring", n)
+    params = {"w": jnp.zeros((n, d), jnp.float32)}
+    channel = PpermuteChannel(
+        topo, ("data",), compression="topk:0.5", telemetry=True
+    )
+    fixed = ensure_channel_state({"params": params, "channel": {}}, channel, n)
+    assert set(fixed["channel"]) == {"t", "comp"}
+    assert fixed["channel"]["comp"]["w"].shape == (n, d)
+    assert fixed["channel"]["t"]["rounds"].shape == (n,)
+
+    # a populated matching bucket survives reconciliation untouched
+    populated = {
+        "t": {
+            "rounds": jnp.arange(n, dtype=jnp.int32),
+            "bytes": jnp.ones((n,), jnp.float32),
+        },
+        "comp": {"w": jnp.ones((n, d), jnp.float32)},
+    }
+    kept = ensure_channel_state(
+        {"params": params, "channel": populated}, channel, n
+    )
+    for a, b in zip(jax.tree.leaves(populated), jax.tree.leaves(kept["channel"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # switching on a delay re-inits the (new) ring buffers but keeps nothing
+    # stale: the delayed channel has fresh zeroed history + counts
+    delayed = DelayedPpermuteChannel(topo, ("data",), 2, telemetry=True)
+    fixed2 = ensure_channel_state(
+        {"params": params, "channel": populated}, delayed, n
+    )
+    assert set(fixed2["channel"]) == {"t", "delay"}
+    assert fixed2["channel"]["delay"]["s0"]["hist"]["w"].shape == (n, 3, d)
+    assert int(np.max(np.asarray(fixed2["channel"]["delay"]["s0"]["count"]))) == 0
+
+    # delay slots resume ATOMICALLY: a checkpoint from --gossip-delay 2
+    # restored under --gossip-delay 3 must not keep the old count while the
+    # resized hist re-inits (that would skip warmup and mix zero payloads)
+    old_slot = {
+        "delay": {
+            "s0": {
+                "hist": {"w": jnp.ones((n, 3, d), jnp.float32)},
+                "count": jnp.full((n,), 7, jnp.int32),
+            }
+        }
+    }
+    delayed3 = DelayedPpermuteChannel(topo, ("data",), 3, telemetry=True)
+    fixed3 = ensure_channel_state(
+        {"params": params, "channel": old_slot}, delayed3, n
+    )
+    slot = fixed3["channel"]["delay"]["s0"]
+    assert slot["hist"]["w"].shape == (n, 4, d)
+    assert int(np.max(np.asarray(slot["count"]))) == 0  # count reset with hist
+    # same-shape slots survive untouched (count AND hist together)
+    fixed2b = ensure_channel_state(
+        {"params": params, "channel": old_slot},
+        DelayedPpermuteChannel(topo, ("data",), 2, telemetry=True), n,
+    )
+    slot2 = fixed2b["channel"]["delay"]["s0"]
+    assert int(np.max(np.asarray(slot2["count"]))) == 7
+    np.testing.assert_array_equal(np.asarray(slot2["hist"]["w"]), 1.0)

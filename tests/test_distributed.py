@@ -36,6 +36,17 @@ def test_distributed_train_equivalence(mode):
     assert "OK" in out
 
 
+def test_delayed_ppermute_channel():
+    """The redesign's headline capability: a stale_gossip_k2 scenario through
+    the shard_map DelayedPpermuteChannel matches the simulator's SSP
+    trajectory (DSGD + DmSGD), and delay-0 channels are bit-exact with the
+    pre-redesign ppermute gossip for all 10 algorithms."""
+    out = _run("distributed_delayed.py")
+    assert "A dsgd: OK" in out and "A dmsgd: OK" in out
+    assert out.count("(bit-exact)") == 10
+    assert "delayed-ppermute: OK (12 cases)" in out
+
+
 def test_distributed_serve_matches_oracle():
     out = _run("distributed_serve.py")
     assert out.count("OK") == 2

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import OptimizerConfig, make_optimizer
-from repro.core.gossip import make_stacked_gossip
+from repro.core.gossip import StackedChannel
 from repro.launch.elastic import apply_recovery, plan_recovery
 from repro.models.resnet_cifar import resnet20_apply, resnet20_init, resnet20_loss
 from repro.train.train_state import init_train_state
@@ -85,11 +85,11 @@ def test_apply_recovery_rescale_collapses_replicas():
 def test_training_continues_after_reroute():
     """Gossip on the rerouted topology still mixes the survivors."""
     plan = plan_recovery("exp", 8, dead=[3])
-    g = make_stacked_gossip(plan.topology)
+    ch = StackedChannel(plan.topology)
     x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 5)), jnp.float32)
     y = x
     for k in range(40):
-        y, _ = g(y, jnp.int32(k), ())
+        _, y = ch.apply({}, y, jnp.int32(k))
     alive = [i for i in range(8) if i != 3]
     ya = np.asarray(y)[alive]
     # survivors reach consensus among themselves

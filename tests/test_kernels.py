@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import build_topology, make_stacked_gossip, make_stacked_mean
+from repro.core import StackedChannel, build_topology, make_stacked_mean
 from repro.core.optimizers import ALGORITHMS, OptimizerConfig, make_optimizer
 from repro.core.update_spec import run_update, update_spec
 from repro.kernels.fused_update import decentlam_update, make_stage
@@ -170,7 +170,7 @@ def _fused_vs_reference(cfg: OptimizerConfig, dt, *, steps=1, lr=0.01):
     """Run `steps` of the stacked harness via both paths and compare."""
     rng = np.random.default_rng(7)
     topo = build_topology("exp", N_NODES)
-    gossip, mean = make_stacked_gossip(topo), make_stacked_mean(N_NODES)
+    gossip, mean = StackedChannel(topo), make_stacked_mean(N_NODES)
     params = {
         "w": jnp.asarray(rng.standard_normal((N_NODES, 37)), dt),
         "b": jnp.asarray(rng.standard_normal((N_NODES, 5, 3)), dt),

@@ -9,7 +9,7 @@ from repro.core import (
     build_topology,
     make_linear_regression,
     make_optimizer,
-    make_stacked_gossip,
+    StackedChannel,
     make_stacked_mean,
     run_stacked,
 )
@@ -91,7 +91,7 @@ def test_grad_clip_bounds_update():
     cfg = OptimizerConfig(algorithm="dsgd", grad_clip=0.5)
     opt = make_optimizer(cfg)
     topo = build_topology("full", 2)
-    gossip = make_stacked_gossip(topo)
+    gossip = StackedChannel(topo)
     mean = make_stacked_mean(2)
     x = jnp.zeros((2, 10), jnp.float32)
     big = 100.0 * jnp.ones((2, 10), jnp.float32)
@@ -106,7 +106,7 @@ def test_lars_trust_ratio_scaling():
     cfg = OptimizerConfig(algorithm="pmsgd-lars", momentum=0.0, lars_trust=0.01)
     opt = make_optimizer(cfg)
     topo = build_topology("full", 2)
-    gossip = make_stacked_gossip(topo)
+    gossip = StackedChannel(topo)
     mean = make_stacked_mean(2)
     x = {"w": jnp.ones((2, 4), jnp.float32)}
     g = {"w": 1000.0 * jnp.ones((2, 4), jnp.float32)}
@@ -123,7 +123,7 @@ def test_weight_decay_shrinks_params():
     cfg = OptimizerConfig(algorithm="dmsgd", momentum=0.0, weight_decay=0.1)
     opt = make_optimizer(cfg)
     topo = build_topology("full", 2)
-    gossip, mean = make_stacked_gossip(topo), make_stacked_mean(2)
+    gossip, mean = StackedChannel(topo), make_stacked_mean(2)
     x = jnp.ones((2, 4), jnp.float32)
     g = jnp.zeros((2, 4), jnp.float32)
     x2, _, _ = opt.step(
@@ -151,7 +151,7 @@ def test_nesterov_matches_closed_form():
     cfg = OptimizerConfig(algorithm="dmsgd", momentum=0.9, nesterov=True)
     opt = make_optimizer(cfg)
     topo = build_topology("none", 2)  # identity gossip isolates the update
-    gossip, mean = make_stacked_gossip(topo), make_stacked_mean(2)
+    gossip, mean = StackedChannel(topo), make_stacked_mean(2)
     x = jnp.zeros((2, 4), jnp.float32)
     g = jnp.ones((2, 4), jnp.float32)
     x2, st, _ = opt.step(

@@ -13,7 +13,12 @@ pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.topology import metropolis_weights, rho, _classes_from_W  # noqa: E402
-from repro.core import build_topology, make_stacked_gossip, consensus_distance  # noqa: E402
+from repro.core import (  # noqa: E402
+    DelayedStackedChannel,
+    StackedChannel,
+    build_topology,
+    consensus_distance,
+)
 from repro.kernels.fused_update import decentlam_update  # noqa: E402
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
 from repro.kernels.flash_attention.ref import reference_attention  # noqa: E402
@@ -71,14 +76,53 @@ def test_edge_class_decomposition_reconstructs_W(adj):
 )
 def test_gossip_mean_preservation_any_step(name, step):
     topo = build_topology(name, 8)
-    g = make_stacked_gossip(topo)
+    ch = StackedChannel(topo)
     rng = np.random.default_rng(step)
     x = jnp.asarray(rng.standard_normal((8, 7)), jnp.float32)
-    y, _ = g(x, jnp.int32(step), ())
+    _, y = ch.apply({}, x, jnp.int32(step))
     np.testing.assert_allclose(
         np.asarray(jnp.mean(y, 0)), np.asarray(jnp.mean(x, 0)), atol=1e-5
     )
     assert float(consensus_distance(y)) <= float(consensus_distance(x)) + 1e-6
+
+
+@SET
+@given(
+    st.sampled_from(["ring", "torus", "exp", "one-peer-exp", "full"]),
+    st.sampled_from([None, "bf16", "int8", "topk:0.3"]),
+    st.integers(1, 4),
+    st.integers(1, 4),
+)
+def test_delayed_channel_delay0_bitexact_and_gap_capped(name, comp, delay, steps):
+    """For every topology x compressor: the delayed channel at delay=0 is
+    bit-exact with the plain channel, and at delay=k the per-edge version
+    gaps never exceed the configured cap (and warm up as min(k, rounds))."""
+    topo = build_topology(name, 8)
+    plain = StackedChannel(topo, compression=comp)
+    delayed0 = DelayedStackedChannel(topo, 0, compression=comp)
+    xs = [
+        jnp.asarray(
+            np.random.default_rng(1000 * delay + t).standard_normal((8, 5)),
+            jnp.float32,
+        )
+        for t in range(steps)
+    ]
+    st_p, st_0 = plain.init(xs[0]), delayed0.init(xs[0])
+    for t, x in enumerate(xs):
+        st_p, y_p = plain.apply(st_p, x, jnp.int32(t))
+        st_0, y_0 = delayed0.apply(st_0, x, jnp.int32(t))
+        np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_0))
+
+    delayed = DelayedStackedChannel(topo, delay, compression=comp)
+    st_d = delayed.init(xs[0])
+    assert int(np.max(np.asarray(delayed.version_gaps(st_d)))) == 0
+    for t, x in enumerate(xs):
+        st_d, _ = delayed.apply(st_d, x, jnp.int32(t))
+        gaps = np.asarray(delayed.version_gaps(st_d))
+        assert gaps.max() <= delay
+        # round t mixed payloads exactly min(delay, t) rounds old (warmup)
+        assert gaps.max() == min(delay, t)
+        assert gaps.min() >= 0
 
 
 @SET

@@ -20,6 +20,7 @@ import pytest
 
 from repro.core import (
     ALGORITHMS,
+    DelayedStackedChannel,
     OptimizerConfig,
     bias_to_optimum,
     build_topology,
@@ -37,8 +38,6 @@ from repro.sim import (
     delay_matrix,
     effective_batch_fraction,
     get_scenario,
-    init_delay_state,
-    make_delayed_stacked_gossip,
     node_rngs,
     project_wallclock,
     run_delayed,
@@ -130,14 +129,14 @@ def test_delayed_gossip_matches_manual_model(delay):
         Dm[2, 3] = Dm[3, 2] = 1
     else:
         Dm = delay_matrix(n, delay)
-    gossip = make_delayed_stacked_gossip(topo, Dm)
-    st = init_delay_state(topo, Dm, jnp.zeros((n, d), jnp.float32))
+    ch = DelayedStackedChannel(topo, Dm)
+    st = ch.init(jnp.zeros((n, d), jnp.float32))
     P = [
         np.float32(np.random.default_rng(t).standard_normal((n, d)))
         for t in range(6)
     ]
     for t in range(6):
-        mixed, st = gossip(jnp.asarray(P[t]), jnp.int32(t), st)
+        st, mixed = ch.apply(st, jnp.asarray(P[t]), jnp.int32(t))
         expected = np.zeros((n, d), np.float32)
         for dd in np.unique(Dm):
             Wd = np.where(Dm == dd, W, 0.0)
@@ -151,16 +150,16 @@ def test_delayed_gossip_slot_rotation_keeps_histories_independent():
     topo = build_topology("ring", n)
     W = topo.W(0)
     Dm = delay_matrix(n, k)
-    gossip = make_delayed_stacked_gossip(topo, k)
-    st = init_delay_state(topo, k, jnp.zeros((n, d), jnp.float32), n_slots=2)
+    ch = DelayedStackedChannel(topo, k, calls_per_step=2)
+    st = ch.init(jnp.zeros((n, d), jnp.float32))
     rng = np.random.default_rng(0)
     A = [np.float32(rng.standard_normal((n, d))) for _ in range(4)]
     B = [np.float32(rng.standard_normal((n, d))) for _ in range(4)]
     W0 = np.where(Dm == 0, W, 0.0)
     W1 = np.where(Dm == 1, W, 0.0)
     for t in range(4):
-        mixed_a, st = gossip(jnp.asarray(A[t]), jnp.int32(t), st)
-        mixed_b, st = gossip(jnp.asarray(B[t]), jnp.int32(t), st)
+        st, mixed_a = ch.apply(st, jnp.asarray(A[t]), jnp.int32(t))
+        st, mixed_b = ch.apply(st, jnp.asarray(B[t]), jnp.int32(t))
         exp_a = W0 @ A[t] + W1 @ A[max(t - 1, 0)]
         exp_b = W0 @ B[t] + W1 @ B[max(t - 1, 0)]
         np.testing.assert_allclose(np.asarray(mixed_a), exp_a.astype(np.float32), atol=1e-5)
@@ -174,6 +173,43 @@ def test_delayed_gossip_time_varying_topology(problem):
     topo = build_topology("one-peer-exp", N)
     p, _, _ = run_delayed(opt, topo, x0, _grad(problem), delay=2, lr=1e-2, n_steps=6)
     assert bool(jnp.all(jnp.isfinite(p)))
+
+
+def test_legacy_delayed_factories_deprecated_but_equivalent():
+    """The one-release shims (tuple-of-slots state) warn and reproduce the
+    DelayedStackedChannel bit-exactly."""
+    from repro.sim import init_delay_state, make_delayed_stacked_gossip
+
+    n, d, k = 4, 3, 2
+    topo = build_topology("ring", n)
+    with pytest.deprecated_call():
+        gossip = make_delayed_stacked_gossip(topo, k)
+    with pytest.deprecated_call():
+        st_legacy = init_delay_state(topo, k, jnp.zeros((n, d), jnp.float32))
+    ch = DelayedStackedChannel(topo, k)
+    st = ch.init(jnp.zeros((n, d), jnp.float32))
+    for t in range(5):
+        x = jnp.asarray(
+            np.float32(np.random.default_rng(t).standard_normal((n, d)))
+        )
+        y_legacy, st_legacy = gossip(x, jnp.int32(t), st_legacy)
+        st, y = ch.apply(st, x, jnp.int32(t))
+        np.testing.assert_array_equal(np.asarray(y_legacy), np.asarray(y))
+
+
+def test_delayed_engine_reports_version_gaps(problem):
+    """The delayed engine's trace exposes the per-edge version gap — capped
+    at the scenario's configured gossip delay."""
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((N, D), jnp.float32)
+    r = simulate(
+        opt, "ring", N, x0, _grad(problem), lr=1e-2, n_steps=6,
+        scenario="stale_gossip_k2", record_dt=2.0,
+    )
+    gaps = [e["max_gap"] for e in r.trace]
+    assert gaps[-1] == 2
+    assert gaps[0] == 0  # round 0 mixes fresh payloads (warmup rule)
+    assert all(0 <= g <= 2 for g in gaps)
 
 
 # ---------------------------------------------------------------------------
