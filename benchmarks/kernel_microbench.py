@@ -83,6 +83,10 @@ _qg_m = jax.jit(
 )
 _d2_z = jax.jit(lambda x, xp, m, mp, lr: 2.0 * x - xp - lr * (m - mp))
 _lars_scale = jax.jit(lambda r, g: r * g)
+_sa_blend = jax.jit(lambda sg, gt, g: sg * gt + (1.0 - sg) * g)
+_sa_apply = jax.jit(
+    lambda x, lr, sg, b, m, gt: x - lr * (sg * b * m + gt)
+)
 
 
 def _unfused_tail_fns(algo):
@@ -99,6 +103,10 @@ def _unfused_tail_fns(algo):
     qg_m = (lambda e: _qg_m(e["beta"], e["m"], e["x"], e["mix"], e["lr"]), 4)
     d2_z = (lambda e: _d2_z(e["x"], e["xp"], e["m"], e["mp"], e["lr"]), 5)
     lars = (lambda e: _lars_scale(e["lr"], e["g"]), 2)  # r*g; norms excluded both ways
+    # gt stands in via a distinct buffer (mix): aliasing g would let XLA
+    # load it once and undercount the unfused baseline's memory traffic
+    sa_blend = (lambda e: _sa_blend(e["sg"], e["mix"], e["g"]), 3)
+    sa_apply = (lambda e: _sa_apply(e["x"], e["lr"], e["sg"], e["beta"], e["m"], e["g"]), 4)
     return {
         "pmsgd": [wd, mom, step_m],
         "pmsgd-lars": [wd, lars, mom, step_m],
@@ -110,6 +118,9 @@ def _unfused_tail_fns(algo):
         "qg-dmsgd": [wd, mom, step_m, qg_m],
         "d2-dmsgd": [wd, mom, d2_z],
         "decentlam": [wd, step_g, gt, mom, step_m],
+        # + per-gap damping: blend the momentum estimator, damp the applied
+        # momentum (two extra dispatches the fused stage absorbs)
+        "decentlam-sa": [wd, step_g, gt, sa_blend, mom, sa_apply],
     }[algo]
 
 
@@ -147,6 +158,7 @@ def bench_optimizer_tails(n=N_TAIL, iters=5):
         "x": arr(), "g": arr(), "m": arr(), "mix": arr(),
         "xp": arr(), "mp": arr(), "x_prev": None, "m_prev": None,
         "lr": jnp.float32(LR), "beta": jnp.float32(BETA), "wd": jnp.float32(WD),
+        "sg": jnp.float32(0.5),
     }
     env["x_prev"], env["m_prev"] = env["xp"], env["mp"]
 

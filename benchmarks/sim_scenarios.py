@@ -20,8 +20,16 @@ version-synchronous (homogeneous, straggler_1slow, failstop_quarter,
 churn).  Under genuinely *stale* mixing (stale_gossip_k*,
 straggler_1slow_async) DecentLaM's ``(x - G(x - lr g)) / lr`` estimator
 feeds staleness back through momentum and diverges — recorded here as
-``diverged: true`` — while DSGD/DmSGD merely degrade: the boundary of the
+``diverged: true`` with the quality metrics nulled (a diverged run has no
+rankable bias) — while DSGD/DmSGD merely degrade: the boundary of the
 paper's synchronous-gossip assumption, found by this simulator.
+
+``decentlam-sa`` is the staleness-aware repair: it damps both momentum
+couplings of the implicit gradient by ``sa_damping**gap`` using the
+per-node version gaps the channel (or the event engine) observes, and must
+converge on every stale scenario at bias no worse than DmSGD while matching
+``decentlam`` bit-exactly at gap 0 (the ``sa_claims`` block below, gated in
+CI).
 
 ``run(json_path=...)`` writes BENCH_sim.json (machine-readable, gated by
 tests/ci/check_bench_sim.py next to BENCH_kernels.json).
@@ -45,6 +53,7 @@ from repro.core import (
     make_optimizer,
 )
 from repro.sim import SCENARIOS, effective_batch_fraction, project_wallclock, simulate
+from repro.sim.metrics import is_diverged
 
 CONFIG = {
     "n": 8,
@@ -58,7 +67,13 @@ CONFIG = {
     "n_steps": 300,
     "seed": 0,
 }
-ALGORITHMS = ("dsgd", "dmsgd", "decentlam")
+ALGORITHMS = ("dsgd", "dmsgd", "decentlam", "decentlam-sa")
+# scenarios with genuinely stale mixing: decentlam is expected to diverge
+# there (the recorded boundary), decentlam-sa must not
+STALE_SCENARIOS = (
+    "stale_gossip_k1", "stale_gossip_k2", "stale_gossip_k4",
+    "straggler_1slow_async",
+)
 
 
 def _cluster_optimum(problem, indices) -> jnp.ndarray:
@@ -122,15 +137,13 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
             proj = project_wallclock(res, build_topology(cfg["topology"], res.n_nodes))
             # relative bias >> 1 means the iterates left the basin entirely;
             # flag it as divergence even when overflow hasn't hit inf yet
-            diverged = not (
-                math.isfinite(res.final_metric)
-                and math.isfinite(bias_cluster)
-                and bias_cluster < 1e6
-            )
+            diverged = is_diverged(res.final_metric, bias_cluster)
             entry = {
-                "bias_vs_x_star": _finite(res.final_metric),
-                "bias_vs_cluster_opt": _finite(bias_cluster),
-                "consensus": _finite(res.final_consensus),
+                # a diverged run has no rankable quality: null the metrics
+                # so downstream comparisons cannot silently order it
+                "bias_vs_x_star": None if diverged else _finite(res.final_metric),
+                "bias_vs_cluster_opt": None if diverged else _finite(bias_cluster),
+                "consensus": None if diverged else _finite(res.final_consensus),
                 "diverged": diverged,
                 # alive rows only: a rerouted-around dead node's frozen
                 # counter must not masquerade as missed progress
@@ -167,6 +180,25 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
             "decentlam_no_worse": dl is not None and dm is not None and dl <= dm * 1.05,
         }
 
+    # the staleness-aware repair's contract: decentlam-sa converges under
+    # every stale-mixing scenario at bias no worse than DmSGD's
+    sa_claims = {}
+    for scenario in STALE_SCENARIOS:
+        sa = results[scenario]["decentlam-sa"]
+        dm = results[scenario]["dmsgd"]
+        bias_sa = sa["bias_vs_x_star"]
+        bias_dm = dm["bias_vs_x_star"]
+        sa_claims[scenario] = {
+            "decentlam_sa_bias": bias_sa,
+            "dmsgd_bias": bias_dm,
+            "decentlam_sa_converges": not sa["diverged"],
+            "decentlam_diverges": results[scenario]["decentlam"]["diverged"],
+            "decentlam_sa_no_worse": (
+                bias_sa is not None and bias_dm is not None
+                and bias_sa <= bias_dm * 1.05
+            ),
+        }
+
     payload = {
         "bench": "sim_scenarios",
         "config": CONFIG,
@@ -175,6 +207,7 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
         "b_sq": round(problem.b_sq, 2),
         "scenarios": results,
         "claims": claims,
+        "sa_claims": sa_claims,
     }
     if json_path:
         with open(json_path, "w") as f:

@@ -14,11 +14,7 @@ from .gossip import (
     build_channel,
     delay_matrix,
     gossip_bytes_per_step,
-    init_compression_state,
-    make_allgather_gossip,
-    make_ppermute_gossip,
     make_psum_mean,
-    make_stacked_gossip,
     make_stacked_mean,
 )
 from .optimizers import ALGORITHMS, Optimizer, OptimizerConfig, make_optimizer
@@ -70,14 +66,10 @@ __all__ = [
     "delay_matrix",
     "get_compressor",
     "gossip_bytes_per_step",
-    "init_compression_state",
     "linear_scaled_lr",
-    "make_allgather_gossip",
     "make_linear_regression",
     "make_optimizer",
-    "make_ppermute_gossip",
     "make_psum_mean",
-    "make_stacked_gossip",
     "make_stacked_mean",
     "metropolis_weights",
     "rho",

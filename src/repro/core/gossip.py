@@ -33,11 +33,11 @@ Implementations:
   GSPMD would do): all-gather the payload, reduce with this node's W row.
   O(n) bandwidth instead of O(degree); kept as the §Perf baseline.
 
-The pre-redesign closure factories (``make_*_gossip``, signature
-``gossip(tree, step, comp_state) -> (tree, comp_state)``) remain as thin
-deprecated wrappers for one release; CI errors on any *internal* caller
-(pyproject ``filterwarnings``: ``error::DeprecationWarning`` scoped to
-``repro.*`` modules).
+The pre-redesign closure *protocol* (``gossip(tree, step, comp_state) ->
+(tree, comp_state)``) is still accepted by ``run_update`` for ad-hoc
+transports (test oracles); the deprecated factory shims that produced such
+closures (``make_*_gossip``, ``init_compression_state``) were removed after
+their one-release grace period — construct a channel instead.
 
 Time-varying topologies (one-peer exponential, bipartite random match) cycle
 through their period with ``lax.switch`` so the step stays a single jitted
@@ -47,7 +47,6 @@ computation.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -72,11 +71,6 @@ __all__ = [
     "make_stacked_mean",
     "make_psum_mean",
     "gossip_bytes_per_step",
-    # deprecated closure factories (one-release compatibility shims)
-    "make_stacked_gossip",
-    "make_ppermute_gossip",
-    "make_allgather_gossip",
-    "init_compression_state",
 ]
 
 
@@ -234,6 +228,28 @@ class GossipChannel:
         payloads by the warmup rule).  Zero off the gossip support, for
         undelayed channels, and before the first round."""
         return jnp.zeros((self.topology.n, self.topology.n), jnp.int32)
+
+    def node_gaps(self, state: Tree) -> jax.Array:
+        """Per-node view of :meth:`version_gaps` — the worst version gap on
+        any edge *incident* to the node, in either direction: payloads it
+        consumed stale (row) AND the age at which its own payloads reach
+        its readers (column).  The out-direction matters: the momentum
+        feedback a staleness-aware algorithm damps runs through the round
+        trip my payload -> neighbor's stale mix -> neighbor's payload -> my
+        mix, so a node whose *readers* lag (or lead) is as exposed as one
+        whose inputs do.  Delayed stacked channels return ``(n,)``; delayed
+        distributed channels (which only ever run inside shard_map) return
+        *this* node's scalar, indexed by the mesh axis; staleness-free
+        transports return scalar 0.  This is what staleness-aware
+        algorithms fold into their update
+        (:func:`repro.core.update_spec.staleness_damping`)."""
+        if getattr(self, "_depth", 0) == 0:
+            return jnp.int32(0)
+        gaps = self.version_gaps(state)
+        incident = jnp.maximum(jnp.max(gaps, axis=1), jnp.max(gaps, axis=0))
+        if self._stacked_layout:
+            return incident
+        return incident[jax.lax.axis_index(self.node_axes)]
 
     def state_specs(self, param_specs: Tree) -> Tree:
         """Per-node PartitionSpec tree matching :meth:`init`'s structure
@@ -875,70 +891,3 @@ def gossip_bytes_per_step(
     return {"egress_bytes": float(sends) * per_payload, "hops": float(sends)}
 
 
-# ---------------------------------------------------------------------------
-# Deprecated closure factories — one-release compatibility shims.
-# gossip(tree, step, comp_state) -> (tree, comp_state)
-# ---------------------------------------------------------------------------
-
-
-def _warn_deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated; construct a repro.core.gossip.{new} and use "
-        "channel.init/channel.apply (removed next release)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def make_stacked_gossip(topology: Topology) -> GossipFn:
-    """Deprecated: use :class:`StackedChannel`."""
-    _warn_deprecated("make_stacked_gossip", "StackedChannel")
-    ch = StackedChannel(topology)
-
-    def gossip(tree, step, comp_state):
-        _, mixed = ch.apply({}, tree, step)
-        return mixed, comp_state
-
-    return gossip
-
-
-def make_ppermute_gossip(
-    topology: Topology,
-    node_axes: str | tuple[str, ...],
-    *,
-    compression: str | None = None,
-    serialize: bool = True,
-) -> GossipFn:
-    """Deprecated: use :class:`PpermuteChannel`."""
-    _warn_deprecated("make_ppermute_gossip", "PpermuteChannel")
-    ch = PpermuteChannel(
-        topology, node_axes, compression=compression, serialize=serialize
-    )
-
-    def gossip(tree, step, comp_state):
-        stateless = not jax.tree.leaves(comp_state)
-        st = {} if stateless else {"comp": comp_state}
-        st, mixed = ch.apply(st, tree, step)
-        return mixed, (comp_state if stateless else st["comp"])
-
-    return gossip
-
-
-def make_allgather_gossip(
-    topology: Topology, node_axes: str | tuple[str, ...]
-) -> GossipFn:
-    """Deprecated: use :class:`AllgatherChannel`."""
-    _warn_deprecated("make_allgather_gossip", "AllgatherChannel")
-    ch = AllgatherChannel(topology, node_axes)
-
-    def gossip(tree, step, comp_state):
-        _, mixed = ch.apply({}, tree, step)
-        return mixed, comp_state
-
-    return gossip
-
-
-def init_compression_state(compressor: Compressor, tree: Tree) -> Tree:
-    """Deprecated: use ``channel.init(template)`` (the ``"comp"`` node)."""
-    _warn_deprecated("init_compression_state", "GossipChannel.init")
-    return jax.tree.map(compressor.init, tree)

@@ -30,6 +30,15 @@ d2-dmsgd     D^2 [Tang et al. 2018] in the [Yuan et al. 2020] form with
              momentum on the local update
 decentlam    **Alg. 2 / eq. (17)**:
              g~ = (x - G(x - lr g)) / lr;  m <- b m + g~;  x <- x - lr m
+decentlam-sa staleness-aware DecentLaM: under stale mixing the implicit
+             gradient g~ carries a drift ~gap x momentum that compounds
+             through b (the sim's stale_gossip_k* divergence).  The fix
+             damps the drift *entering the momentum* by the observed
+             per-node version gap — m <- b m + (sg g~ + (1-sg) g) with
+             sg = sa_damping^gap — while the parameter update keeps the
+             full g~, so consensus still mixes at channel strength:
+             x <- x - lr (b m + g~).  gap 0 (any delay-0 transport)
+             reduces to decentlam bit-exactly.
 ===========  ================================================================
 
 The DecentLaM step sends exactly one gossip payload per iteration —
@@ -77,6 +86,7 @@ ALGORITHMS = (
     "qg-dmsgd",
     "d2-dmsgd",
     "decentlam",
+    "decentlam-sa",
 )
 
 
@@ -96,6 +106,14 @@ class OptimizerConfig:
     slowmo_period: int = 12
     slowmo_momentum: float = 0.5
     slowmo_lr: float = 1.0
+    # DecentLaM-SA gap-damping schedule: the momentum estimator's implicit-
+    # gradient weight is max(sa_damping**gap, sa_floor) per node.  The
+    # default 0.5 stabilizes ring/torus meshes up to gap ~8; sa_damping ==
+    # momentum (the naive beta^gap of Momentum-Tracking-style corrections)
+    # still diverges for beta > ~0.5 — the drift feedback gain scales with
+    # gap x (1 - self-weight), not with beta (see BENCH_sim.json).
+    sa_damping: float = 0.5
+    sa_floor: float = 0.0
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
@@ -103,6 +121,8 @@ class OptimizerConfig:
                 f"unknown algorithm {self.algorithm!r}; one of {ALGORITHMS}"
             )
         assert 0.0 <= self.momentum < 1.0
+        assert 0.0 < self.sa_damping <= 1.0, "sa_damping is a decay base"
+        assert 0.0 <= self.sa_floor <= 1.0
 
 
 def state_keys(cfg: "OptimizerConfig") -> tuple[str, ...]:
@@ -121,8 +141,11 @@ class Optimizer(NamedTuple):
     config: OptimizerConfig
     init: Callable[[Tree], Tree]
     step: Callable[..., tuple[Tree, Tree]]
-    # step(params, grads, state, *, lr, step_idx, gossip, mean)
-    #   -> (params, state)
+    # step(params, grads, state, *, lr, step_idx, gossip, mean,
+    #      comp_state=(), node_gaps=None) -> (params, state, comp_state)
+    # node_gaps: per-node gossip version gaps for staleness-aware
+    # algorithms ((n,) stacked / scalar inside shard_map); None derives
+    # them from the channel state after each gossip round.
     gossips_per_step: int  # payload sends per iteration (comm accounting)
 
 
@@ -214,7 +237,10 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
         return st
 
     # ---------------- step ----------------
-    def step(params, grads, state, *, lr, step_idx, gossip, mean, comp_state=no_comp):
+    def step(
+        params, grads, state, *, lr, step_idx, gossip, mean,
+        comp_state=no_comp, node_gaps=None,
+    ):
         x, new_state, comp_state = run_update(
             spec,
             cfg,
@@ -227,6 +253,7 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
             mean=mean,
             comp_state=comp_state,
             stage=reference_stage,
+            node_gaps=node_gaps,
         )
         out = jax.tree.map(lambda p, nx: nx.astype(p.dtype), params, x)
         return out, new_state, comp_state

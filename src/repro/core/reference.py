@@ -54,8 +54,11 @@ def run_stacked(
     stacked-layout :class:`~repro.core.gossip.GossipChannel` (default: the
     plain dense-W :class:`~repro.core.gossip.StackedChannel`); its state —
     delay buffers, compression error feedback — is threaded through the
-    jitted step.  Returns final params, optimizer state, and (optionally) a
-    metric trace.
+    jitted step.  Staleness-aware algorithms (``decentlam-sa``) read their
+    per-node version gaps from the channel state after each round
+    (``channel.node_gaps``), so a delayed channel is all it takes to study
+    the staleness correction here.  Returns final params, optimizer state,
+    and (optionally) a metric trace.
     """
     if channel is None:
         channel = StackedChannel(topology)

@@ -35,7 +35,16 @@ slowmo         momentum_payload  -> gossip -> assign_x  (+ outer sync)
 qg-dmsgd       qg_payload        -> gossip -> qg_post
 d2-dmsgd       d2_payload        -> gossip -> assign_x  (+ prev-state shift)
 decentlam      grad_step         -> gossip -> decentlam_post
+decentlam-sa   grad_step         -> gossip -> decentlam_sa_post
 =============  ============================================================
+
+Staleness-aware phases (``UpdateSpec.staleness_aware``) additionally consume
+the per-node gossip version gap observed by the round that produced their
+``mix``: after the gossip comm, :func:`run_update` derives the gap from the
+channel state (:meth:`repro.core.gossip.GossipChannel.node_gaps`) — or takes
+an explicit ``node_gaps`` override from engines that know staleness out of
+band (the discrete-event simulator's snapshot versions) — and folds the
+damping factor :func:`staleness_damping` into the stage scalars as ``sg``.
 """
 
 from __future__ import annotations
@@ -65,6 +74,7 @@ __all__ = [
     "post_io",
     "pre_math",
     "post_math",
+    "staleness_damping",
     "reference_stage",
     "run_update",
 ]
@@ -89,6 +99,7 @@ class UpdateSpec:
     nesterov_ok: bool = False  # whether cfg.nesterov applies to this tail
     slowmo_outer: bool = False  # periodic exact-average outer step
     d2_state: bool = False  # carries (x_prev, m_prev)
+    staleness_aware: bool = False  # post stages consume the "sg" gap damping
 
     @property
     def gossips_per_step(self) -> int:
@@ -135,6 +146,12 @@ _SPEC_TABLE: dict[str, UpdateSpec] = {
         "decentlam",
         (Phase("grad_step", "gossip", "decentlam_post"),),
         nesterov_ok=True,
+    ),
+    "decentlam-sa": UpdateSpec(
+        "decentlam-sa",
+        (Phase("grad_step", "gossip", "decentlam_sa_post"),),
+        nesterov_ok=True,
+        staleness_aware=True,
     ),
 }
 
@@ -232,6 +249,10 @@ _POST_IO: dict[str, tuple[tuple[str, ...], tuple[str, ...]]] = {
     "momentum_step": (("x", "mix", "m"), ("x", "m")),
     "qg_post": (("x", "mix", "m"), ("x", "m")),
     "decentlam_post": (("x", "mix", "m"), ("x", "m")),
+    # needs the raw gradient: the damped momentum estimator blends the
+    # implicit gradient with g_eff (recomputed from the same scalars the
+    # payload stage folded in)
+    "decentlam_sa_post": (("x", "mix", "m", "g"), ("x", "m")),
 }
 
 
@@ -270,6 +291,37 @@ def _decay(ctx: MathCtx, lr, x_new):
     if ctx.decoupled_wd:
         return x_new - lr * ctx.wd * x_new
     return x_new
+
+
+def staleness_damping(cfg, gap):
+    """Per-gap damping factor of the staleness-aware estimator.
+
+    ``gamma = max(sa_damping ** gap, sa_floor)`` — monotone non-increasing in
+    the observed gap, exactly 1 at gap 0 (so a fresh round reduces
+    ``decentlam-sa`` to ``decentlam`` bit-for-bit).  ``gap`` is the per-node
+    version gap: ``(n,)`` in the stacked layout, a scalar per node inside
+    shard_map, or ``None`` when the transport cannot observe staleness
+    (legacy closures) — treated as fresh.
+    """
+    if gap is None:
+        return jnp.float32(1.0)
+    gap = jnp.asarray(gap).astype(jnp.float32)
+    base = jnp.float32(getattr(cfg, "sa_damping", 0.5))
+    floor = jnp.float32(getattr(cfg, "sa_floor", 0.0))
+    return jnp.maximum(jnp.power(base, gap), floor)
+
+
+def _sg_of(s, like):
+    """The stage's damping factor, broadcast against a leaf value: scalar in
+    the per-node (shard_map / Pallas) layout, ``(n,)`` reshaped to
+    ``(n, 1, ...)`` in the stacked layout."""
+    sg = s.get("sg")
+    if sg is None:
+        return jnp.float32(1.0)
+    sg = jnp.asarray(sg)
+    if sg.ndim:
+        sg = sg.reshape(sg.shape + (1,) * (like.ndim - sg.ndim))
+    return sg
 
 
 def pre_math(op: str, ctx: MathCtx, s, **v):
@@ -324,6 +376,28 @@ def post_math(op: str, ctx: MathCtx, s, **v):
         g_tilde = (v["x"] - v["mix"]) / safe_lr
         m = ctx.beta * v["m"] + g_tilde
         x = v["x"] - lr * _with_nesterov(ctx, m, g_tilde)
+        return {"x": _decay(ctx, lr, x), "m": m}
+    if op == "decentlam_sa_post":
+        # Staleness-aware DecentLaM, a gap-scheduled decentlam -> dsgd
+        # interpolation.  Under stale mixing the implicit gradient carries a
+        # drift ~ gap x update-magnitude that compounds through beta (the
+        # sim's stale_gossip_k* divergence), so both momentum couplings are
+        # damped by sg = sa_damping**gap while the mixing itself stays at
+        # full channel strength:
+        #     m <- beta m + (sg drift + (1 - sg) g_eff)   [damped estimator]
+        #     x <- x - lr (sg beta m + drift)             [= mix - sg lr beta m]
+        # sg == 1 (gap 0) is decentlam_post exactly (1*a == a, +0 absorbed);
+        # sg -> 0 is ATC DSGD with a local-gradient momentum bank, the
+        # configuration that is provably stable under arbitrary staleness.
+        sg = _sg_of(s, v["x"])
+        drift = (v["x"] - v["mix"]) / safe_lr
+        g_eff = _g_eff(ctx, s, v["x"], v["g"])
+        m = ctx.beta * v["m"] + (sg * drift + (1.0 - sg) * g_eff)
+        if ctx.nesterov:
+            applied = sg * (ctx.beta * m) + drift
+        else:
+            applied = sg * (ctx.beta * v["m"]) + drift
+        x = v["x"] - lr * applied
         return {"x": _decay(ctx, lr, x), "m": m}
     raise ValueError(f"unknown post op {op!r}")
 
@@ -383,7 +457,8 @@ def _f32_tree(tree: Tree) -> Tree:
 
 
 def _leaf_scalars(scalars, treedef, ctx: MathCtx):
-    """Per-leaf (lr, gs, r) triples; r may be a tree of scalars (LARS)."""
+    """Per-leaf (lr, gs, r, sg) tuples; r may be a tree of scalars (LARS),
+    sg is the staleness damping (scalar, or (n,) in the stacked layout)."""
     n = treedef.num_leaves
     r = scalars.get("r")
     if ctx.lars and r is not None and jax.tree.structure(r) == treedef:
@@ -393,7 +468,12 @@ def _leaf_scalars(scalars, treedef, ctx: MathCtx):
     gs = scalars.get("gs")
     if gs is None:
         gs = jnp.float32(1.0)
-    return [{"lr": scalars["lr"], "gs": gs, "r": rs[i]} for i in range(n)]
+    sg = scalars.get("sg")
+    if sg is None:
+        sg = jnp.float32(1.0)
+    return [
+        {"lr": scalars["lr"], "gs": gs, "r": rs[i], "sg": sg} for i in range(n)
+    ]
 
 
 def reference_stage(kind, op, ctx, operands, scalars, like_x):
@@ -433,6 +513,7 @@ def run_update(
     mean,
     comp_state: Tree,
     stage: StageFn = reference_stage,
+    node_gaps=None,
 ):
     """Walk the spec's phases; returns ``(x, new_state, comp_state)``.
 
@@ -440,6 +521,13 @@ def run_update(
     parameter output back); ``g`` and the state buckets are f32.  ``stage``
     selects the executor: :func:`reference_stage` or the Pallas engine's
     (see ``repro.kernels.fused_update.make_stage``).
+
+    ``node_gaps`` overrides the per-node gossip version gaps a
+    staleness-aware spec folds into its stages (``(n,)`` stacked / scalar
+    per node inside shard_map).  Default: derived from the channel's own
+    state after each gossip round (:meth:`GossipChannel.node_gaps`); engines
+    that know staleness out of band — the discrete-event simulator reading
+    snapshot versions — pass it explicitly.  Ignored by the other specs.
     """
     lr = jnp.asarray(lr, jnp.float32)
     safe_lr = jnp.maximum(lr, 1e-12)
@@ -474,6 +562,14 @@ def run_update(
                 comp_state, mixed = gossip.apply(comp_state, payload, step_idx)
             else:
                 mixed, comp_state = gossip(payload, step_idx, comp_state)
+            if spec.staleness_aware:
+                # the gap the round just executed actually used (post-apply
+                # state carries the warmup-aware count), unless the engine
+                # observed staleness out of band and told us
+                gaps = node_gaps
+                if gaps is None and isinstance(gossip, GossipChannel):
+                    gaps = gossip.node_gaps(comp_state)
+                scalars["sg"] = staleness_damping(cfg, gaps)
         elif ph.comm == "mean":
             mixed = mean(payload)
         else:

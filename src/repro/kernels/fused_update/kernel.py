@@ -7,9 +7,9 @@ kernel — one read of the operands, one write of the outputs, per leaf.
 
 Tensors are flattened and tiled (rows, 1024) with (block_rows, 1024) VMEM
 blocks — lane-dim 1024 = 8 x 128 keeps the VPU fully fed.  The traced
-scalars (lr, clip scale, LARS trust ratio) arrive as a single (3,) f32
-vector in SMEM; all other constants (beta, weight decay, nesterov, the op
-itself) are baked into the kernel.
+scalars (lr, clip scale, LARS trust ratio, staleness damping) arrive as a
+single (4,) f32 vector in SMEM; all other constants (beta, weight decay,
+nesterov, the op itself) are baked into the kernel.
 
 The kernel body calls the *same* ``pre_math``/``post_math`` the pure-JAX
 reference path uses, so parity with the stacked oracle holds by
@@ -35,7 +35,7 @@ _SDS_HAS_VMA = "vma" in inspect.signature(jax.ShapeDtypeStruct.__init__).paramet
 
 def _stage_body(s_ref, *refs, kind: str, op: str, ctx: MathCtx, names_in, names_out):
     ins, outs = refs[: len(names_in)], refs[len(names_in) :]
-    s = {"lr": s_ref[0], "gs": s_ref[1], "r": s_ref[2]}
+    s = {"lr": s_ref[0], "gs": s_ref[1], "r": s_ref[2], "sg": s_ref[3]}
     vals = {n: r[...].astype(jnp.float32) for n, r in zip(names_in, ins)}
     math = pre_math if kind == "pre" else post_math
     res = math(op, ctx, s, **vals)
@@ -57,7 +57,7 @@ def fused_stage_kernel(
     kind: str,
     op: str,
     ctx: MathCtx,
-    scalars: jax.Array,  # (3,) f32 in SMEM: lr, clip scale, LARS ratio
+    scalars: jax.Array,  # (4,) f32 in SMEM: lr, clip scale, LARS ratio, sg
     inputs: dict[str, jax.Array],  # each (rows, LANES)
     out_dtypes: dict[str, jnp.dtype],
     *,

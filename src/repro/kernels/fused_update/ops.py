@@ -4,7 +4,7 @@
 ``update_spec.reference_stage`` but backed by the generic Pallas stage
 kernel: every leaf is flattened, tiled to (rows, 1024), and updated in a
 single HBM pass.  Feed it to ``update_spec.run_update`` to run *any* of the
-ten algorithms' update tails fused::
+eleven algorithms' update tails fused::
 
     from repro.core.update_spec import run_update, update_spec
     from repro.kernels.fused_update import make_stage
@@ -84,8 +84,15 @@ def fused_stage(kind, op, ctx, operands, scalars, like_x, *, interpret=False):
             n: (likes[i].dtype if n == "x" else jnp.float32) for n in names_out
         }
         s = per_leaf_s[i]
+        sg = jnp.asarray(s.get("sg", 1.0))
+        if sg.ndim:
+            raise NotImplementedError(
+                "the fused stage takes a scalar staleness damping factor "
+                "(per-node, as inside shard_map); stacked-layout "
+                "staleness-aware runs use the reference stage"
+            )
         svec = jnp.stack(
-            [jnp.asarray(s["lr"]), jnp.asarray(s["gs"]), jnp.asarray(s["r"])]
+            [jnp.asarray(s["lr"]), jnp.asarray(s["gs"]), jnp.asarray(s["r"]), sg]
         ).astype(jnp.float32)
         res = _leaf_call(
             kind, op, ctx, leaf_ins, svec, out_dtypes, interpret=interpret

@@ -43,6 +43,12 @@ def _parse():
                    "(delayed ppermute channel; SSP staleness on a real mesh)")
     p.add_argument("--compression", default=None)
     p.add_argument("--momentum", type=float, default=0.9)
+    p.add_argument("--sa-damping", dest="sa_damping", type=float, default=0.5,
+                   help="decentlam-sa: base of the per-gap momentum damping "
+                   "(gamma = sa_damping**version_gap, read off the delayed "
+                   "gossip channel)")
+    p.add_argument("--sa-floor", dest="sa_floor", type=float, default=0.0,
+                   help="decentlam-sa: lower bound on the damping factor")
     p.add_argument("--lr", type=float, default=3e-3)
     p.add_argument("--warmup", type=int, default=20)
     p.add_argument("--seq-len", dest="seq_len", type=int, default=128)
@@ -111,6 +117,8 @@ def main() -> None:
         gossip_delay=args.gossip_delay,
         compression=args.compression,
         momentum=args.momentum,
+        sa_damping=args.sa_damping,
+        sa_floor=args.sa_floor,
         grad_accum=args.grad_accum,
         schedule=ScheduleConfig(
             kind="warmup_cosine", peak_lr=args.lr,

@@ -16,12 +16,7 @@ from .clock import (
     PeriodicStragglerDuration,
     node_rngs,
 )
-from .delayed_gossip import (
-    delay_matrix,
-    init_delay_state,
-    make_delayed_stacked_gossip,
-    run_delayed,
-)
+from .delayed_gossip import delay_matrix, run_delayed
 from .events import (
     SCENARIOS,
     FailStop,
@@ -31,11 +26,18 @@ from .events import (
     Slowdown,
     get_scenario,
 )
-from .metrics import SimResult, effective_batch_fraction
+from .metrics import SimResult, effective_batch_fraction, is_diverged
 from .runner import simulate
-from .wallclock import payload_bytes, project_wallclock, step_costs, step_time_seconds
+from .wallclock import (
+    MIN_STEP_S,
+    payload_bytes,
+    project_wallclock,
+    step_costs,
+    step_time_seconds,
+)
 
 __all__ = [
+    "MIN_STEP_S",
     "ConstantDuration",
     "EventQueue",
     "FailStop",
@@ -50,8 +52,7 @@ __all__ = [
     "delay_matrix",
     "effective_batch_fraction",
     "get_scenario",
-    "init_delay_state",
-    "make_delayed_stacked_gossip",
+    "is_diverged",
     "node_rngs",
     "payload_bytes",
     "project_wallclock",

@@ -1,13 +1,9 @@
 """Stacked gossip with per-edge delay buffers (bounded staleness).
 
-The implementation moved to :class:`repro.core.gossip.DelayedStackedChannel`
-as part of the GossipChannel transport redesign; this module keeps
-
-* :func:`run_delayed` — the delayed stacked harness (channel-based), and
-* the legacy closure factories :func:`make_delayed_stacked_gossip` /
-  :func:`init_delay_state` as thin **deprecated** wrappers for one release
-  (identical math: they drive the channel through the old
-  ``gossip(tree, step, comp_state)`` signature with tuple-of-slot state).
+The implementation lives in :class:`repro.core.gossip.DelayedStackedChannel`
+(the GossipChannel transport redesign); this module keeps
+:func:`run_delayed` — the delayed stacked harness the simulator's
+``stale_gossip_k*`` scenarios and the bias experiments drive.
 
 ``x_i <- w_ii x_i(t) + sum_j w_ij x_j(t - d_ij)``: every edge ``(i, j)``
 carries a fixed integer delay and the receiver mixes the sender's payload
@@ -15,6 +11,11 @@ from ``d_ij`` gossip rounds ago — the synchronous model of AD-PSGD-style
 asynchrony.  At uniform delay 0 the channel runs the exact
 :class:`~repro.core.gossip.StackedChannel` code path, so the zero-staleness
 simulator degrades to the lockstep oracle bit-exactly.
+
+(The pre-redesign closure shims ``make_delayed_stacked_gossip`` /
+``init_delay_state`` were removed after their one-release grace period;
+construct a :class:`~repro.core.gossip.DelayedStackedChannel` and use
+``channel.init`` / ``channel.apply``.)
 """
 
 from __future__ import annotations
@@ -25,13 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.gossip import (
-    DelayedStackedChannel,
-    GossipFn,
-    _warn_deprecated,
-    delay_matrix,
-    make_stacked_mean,
-)
+from ..core.gossip import DelayedStackedChannel, delay_matrix, make_stacked_mean
 from ..core.optimizers import Optimizer
 from ..core.topology import Topology
 
@@ -39,50 +34,8 @@ Tree = Any
 
 __all__ = [
     "delay_matrix",
-    "make_delayed_stacked_gossip",
-    "init_delay_state",
     "run_delayed",
 ]
-
-
-def make_delayed_stacked_gossip(topology: Topology, delay) -> GossipFn:
-    """Deprecated: use :class:`repro.core.gossip.DelayedStackedChannel`.
-
-    ``comp_state`` must come from :func:`init_delay_state` (a tuple of
-    ring-buffer slots); each call consumes the first slot and rotates it to
-    the back.
-    """
-    _warn_deprecated("make_delayed_stacked_gossip", "DelayedStackedChannel")
-    ch = DelayedStackedChannel(topology, delay)  # single-slot channel
-
-    if ch._depth == 0:
-
-        def gossip0(tree, step, comp_state):
-            _, mixed = ch.apply({}, tree, step)
-            return mixed, comp_state
-
-        return gossip0
-
-    def gossip(tree, step, comp_state):
-        slots = tuple(comp_state)
-        st, mixed = ch.apply({"delay": {"s0": slots[0]}}, tree, step)
-        return mixed, slots[1:] + (st["delay"]["s0"],)
-
-    return gossip
-
-
-def init_delay_state(topology: Topology, delay, template: Tree, n_slots: int = 1):
-    """Deprecated: use ``DelayedStackedChannel(...).init(template)``.
-
-    Returns the legacy tuple-of-slots state (``()`` when the delay is
-    uniformly zero — the closure then ignores comp state).
-    """
-    _warn_deprecated("init_delay_state", "DelayedStackedChannel")
-    ch = DelayedStackedChannel(topology, delay, calls_per_step=max(1, n_slots))
-    if ch._depth == 0:
-        return ()
-    slots = ch.init(template)["delay"]
-    return tuple(slots[f"s{i}"] for i in range(max(1, n_slots)))
 
 
 def run_delayed(
@@ -104,7 +57,8 @@ def run_delayed(
     channel runs the plain StackedChannel code path and the delay state is
     absent), so results are bit-exact.  The exact-mean closure (PmSGD /
     SlowMo outer sync) is *not* delayed: staleness models gossip links, not
-    the all-reduce fabric.
+    the all-reduce fabric.  Staleness-aware algorithms (``decentlam-sa``)
+    read their per-node version gaps straight from the channel state.
     """
     channel = DelayedStackedChannel(
         topology, delay, calls_per_step=opt.gossips_per_step,

@@ -27,7 +27,23 @@ __all__ = [
     "effective_batch_fraction",
     "consensus_distance",
     "bias_to_optimum",
+    "is_diverged",
 ]
+
+# relative bias >> 1 means the iterates left the basin entirely — treat it
+# as divergence even when overflow hasn't hit inf yet
+DIVERGENCE_BIAS = 1e6
+
+
+def is_diverged(*biases: float | None) -> bool:
+    """Whether any of the given relative-bias values marks a diverged run:
+    non-finite, missing, or past :data:`DIVERGENCE_BIAS`.  Diverged runs
+    must not report rankable quality metrics (the scenario benchmark nulls
+    them, ``tests/ci/check_bench_sim.py`` enforces it)."""
+    for b in biases:
+        if b is None or not np.isfinite(b) or b >= DIVERGENCE_BIAS:
+            return True
+    return False
 
 
 @dataclasses.dataclass

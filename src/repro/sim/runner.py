@@ -89,12 +89,19 @@ def _mean_rows(tree: Tree, idx: list[int]) -> Tree:
 def _make_step(
     opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn
 ) -> Callable:
-    """The jitted stacked one-step — same computation as ``run_stacked``."""
+    """The jitted stacked one-step — same computation as ``run_stacked``.
+
+    ``node_gaps`` is the per-node snapshot-version staleness of the virtual
+    stacked state (zeros under lockstep): the event engine observes
+    staleness out of band (mailbox versions), so it hands the gaps to the
+    step explicitly rather than through a delayed channel — staleness-aware
+    algorithms (``decentlam-sa``) damp on it, everything else ignores it.
+    """
     channel = StackedChannel(topology)
     mean = make_stacked_mean(topology.n)
 
     @jax.jit
-    def one(params, state, step):
+    def one(params, state, step, node_gaps):
         grads = grad_fn(params, step)
         params, state, _ = opt.step(
             params,
@@ -104,6 +111,7 @@ def _make_step(
             step_idx=step,
             gossip=channel,
             mean=mean,
+            node_gaps=node_gaps,
         )
         return params, state
 
@@ -400,18 +408,39 @@ def simulate(
         # assemble the virtual stacked state as seen from node i
         st = start_time[i]
         rows_x, rows_s = [], []
+        vers = np.zeros(n_cur, dtype=np.int64)
         for j in range(n_cur):
             if j == i:
                 rows_x.append(_row(x, i))
                 rows_s.append(_row(state, i))
+                vers[j] = steps[i]
             else:
                 snap = visible(j, st - link_delay[j, i], int(steps[i]))
                 rows_x.append(snap[2])
                 rows_s.append(snap[3])
+                vers[j] = snap[0]
         xv = _stack_rows(rows_x)
         sv = _stack_rows(rows_s)
 
-        pv, nv = one(xv, sv, jnp.int32(int(steps[i])))
+        # per-node version gap of this virtual state: the worst incident-
+        # edge gap, both directions — snapshots this row consumed stale
+        # (vers[r] - vers[j]) AND how stale the node's readers consumed it
+        # (a reader at step count s last read under version cap s - 1, so
+        # steps[j] - 1 - vers[r] lower-bounds that read's age; exactly 0 in
+        # lockstep for any queue pop order).  The out-direction is what
+        # catches a slow node whose version-capped *reads* look fresh while
+        # the whole cluster consumes it 8 versions late — exactly the node
+        # whose momentum explodes first under async staleness.  Only row i
+        # survives, but every row gets its consistent view.
+        gaps = np.zeros(n_cur, dtype=np.int64)
+        for r in range(n_cur):
+            for j in nbrs[r]:
+                if j < n_cur and j not in dead:
+                    gaps[r] = max(
+                        gaps[r], vers[r] - vers[j], int(steps[j]) - 1 - vers[r]
+                    )
+
+        pv, nv = one(xv, sv, jnp.int32(int(steps[i])), jnp.asarray(gaps, jnp.int32))
         x = _set_row(x, i, _row(pv, i))
         state = _set_row(state, i, _row(nv, i))
         steps[i] += 1
@@ -428,6 +457,15 @@ def simulate(
             # a rescale barrier (n shrinks) already rescheduled every node
             schedule(i, t)
         release_waiting(t)
+
+    # nodes still SSP-blocked when the run terminates have been stalling
+    # since they last became ready — flush that tail into the accounting
+    # (without this, a synchronous barrier behind a straggler under-reports
+    # stall by up to one slow-step per fast node)
+    for w, since in waiting.items():
+        if w not in dead:
+            stall[w] += t - since
+    waiting.clear()
 
     alive = alive_nodes()
     final_metric = None

@@ -18,6 +18,13 @@ gossip fabric overlap) and scale the simulated duration:
 
     wallclock_s = sim_time * step_time_s
     throughput  = total completed steps / wallclock_s
+
+The roofline terms are *work* prices; a real step also pays a
+work-independent floor (kernel launches, collective setup, host dispatch
+latency), so the combined price is clamped below by ``min_step_s`` (default
+1 ms).  Without the clamp, pricing the simulator's 30-dim quadratic toy
+projects ~1e9 steps/s — physically meaningless numbers that leaked into
+``BENCH_sim.json`` as ``wallclock_s: 1.44e-06`` for a 300-step run.
 """
 
 from __future__ import annotations
@@ -37,7 +44,18 @@ from .metrics import SimResult
 
 Tree = Any
 
-__all__ = ["payload_bytes", "step_costs", "step_time_seconds", "project_wallclock"]
+__all__ = [
+    "MIN_STEP_S",
+    "payload_bytes",
+    "step_costs",
+    "step_time_seconds",
+    "project_wallclock",
+]
+
+# Work-independent per-step latency floor (kernel launch + collective setup
+# + host dispatch).  ~1 ms is optimistic for a real accelerator step; it
+# exists so roofline prices of toy problems stay physically plausible.
+MIN_STEP_S = 1e-3
 
 
 def payload_bytes(params: Tree) -> float:
@@ -86,8 +104,16 @@ def step_time_seconds(
     gossips_per_step: int = 1,
     compression: str | None = None,
     hw: HW = HW(),
+    min_step_s: float = MIN_STEP_S,
 ) -> dict[str, float]:
-    """Roofline price of one nominal step (seconds) + its terms."""
+    """Roofline price of one nominal step (seconds) + its terms.
+
+    The combined price is ``max(compute, memory, collective, min_step_s)``:
+    the roofline terms price the *work*, ``min_step_s`` the
+    work-independent launch/dispatch floor — a 30-dim toy must not project
+    a nanosecond step.  ``dominant`` reports ``"latency"`` when the floor
+    binds.  Pass ``min_step_s=0`` for the raw roofline bound.
+    """
     comm = gossip_bytes_per_step(
         topology, payload, impl="ppermute", compression=compression
     )
@@ -97,12 +123,14 @@ def step_time_seconds(
         collective_egress=comm["egress_bytes"] * max(1, gossips_per_step),
         hw=hw,
     )
+    roofline_s = terms["step_time_lower_bound_s"]
     return {
-        "step_time_s": terms["step_time_lower_bound_s"],
+        "step_time_s": max(roofline_s, min_step_s),
+        "roofline_s": roofline_s,
         "compute_s": terms["compute_s"],
         "memory_s": terms["memory_s"],
         "collective_s": terms["collective_s"],
-        "dominant": terms["dominant"],
+        "dominant": terms["dominant"] if roofline_s >= min_step_s else "latency",
         "gossip_egress_bytes": comm["egress_bytes"] * max(1, gossips_per_step),
     }
 
@@ -115,12 +143,14 @@ def project_wallclock(
     grad_fn: Callable | None = None,
     compression: str | None = None,
     hw: HW = HW(),
+    min_step_s: float = MIN_STEP_S,
 ) -> dict[str, float]:
     """Quality-AND-speed report for a finished scenario run.
 
     When ``opt``/``grad_fn`` are given, compute/memory terms come from the
     jaxpr cost model; otherwise the step is priced on gossip bandwidth
-    alone (payload from the result's parameter shapes).
+    alone (payload from the result's parameter shapes).  ``min_step_s``
+    floors the per-step price (see :func:`step_time_seconds`).
     """
     payload = payload_bytes(result.params)
     kw: dict[str, float] = {}
@@ -135,7 +165,8 @@ def project_wallclock(
             }
     price = step_time_seconds(
         topology, payload,
-        gossips_per_step=gossips, compression=compression, hw=hw, **kw,
+        gossips_per_step=gossips, compression=compression, hw=hw,
+        min_step_s=min_step_s, **kw,
     )
     total_steps = int(result.steps[result.alive].sum())
     wallclock_s = result.sim_time * price["step_time_s"]

@@ -52,6 +52,10 @@ class TrainConfig:
     momentum: float = 0.9
     weight_decay: float = 0.0
     grad_clip: float = 0.0
+    # decentlam-sa gap-damping schedule (read off the delayed channel's
+    # version gaps; inert for the other algorithms)
+    sa_damping: float = 0.5
+    sa_floor: float = 0.0
     grad_accum: int = 1
     schedule: ScheduleConfig = ScheduleConfig()
     runtime: T.RuntimeConfig = T.RuntimeConfig()
@@ -66,6 +70,8 @@ class TrainConfig:
             momentum=self.momentum,
             weight_decay=self.weight_decay,
             grad_clip=self.grad_clip,
+            sa_damping=self.sa_damping,
+            sa_floor=self.sa_floor,
         )
 
 

@@ -5,17 +5,27 @@ Usage::
     python tests/ci/check_bench_sim.py BENCH_sim.json
 
 Validates the machine-readable invariants the simulator subsystem promises
-(ISSUE 2 acceptance criteria):
+(ISSUE 2 + ISSUE 4 acceptance criteria):
 
 * every registry scenario ran for every benchmarked algorithm;
-* the version-synchronous scenarios (homogeneous, straggler_1slow,
-  failstop_quarter, churn) completed without divergence for all algorithms;
+* the *synchronous, delay-0* scenarios (homogeneous, straggler_1slow,
+  failstop_quarter, churn) completed without divergence for all
+  algorithms — in particular DecentLaM must never diverge under
+  version-synchronous gossip (that would be a regression of the paper's
+  own setting, not a staleness artifact);
 * DecentLaM's bias-to-optimum is no worse than DmSGD's under each of those
   scenarios (<= 1.05x, measured against the final cluster's own optimum so
   rescale data-loss doesn't mask algorithmic bias) — the paper's claim
   restated under realistic clusters;
+* the staleness-aware repair holds: ``decentlam-sa`` runs every
+  stale-mixing scenario (stale_gossip_k1/k2/k4, straggler_1slow_async)
+  without divergence at ``bias_vs_x_star`` no worse than DmSGD's (<= 1.05x);
+* diverged runs carry no rankable metrics: ``bias_vs_*``/``consensus``
+  must be null when ``diverged`` is true;
 * the straggler costs throughput, not quality: nonzero stall time and a
-  longer simulated horizon than homogeneous.
+  longer simulated horizon than homogeneous;
+* projected throughput is physically plausible: the wall-clock price of a
+  step is floored (no 1e9-steps/s toy-problem projections).
 
 Exit code 1 on any violation.
 """
@@ -28,6 +38,7 @@ import sys
 REQUIRED_SCENARIOS = (
     "homogeneous",
     "straggler_1slow",
+    "straggler_1slow_async",
     "failstop_quarter",
     "churn",
     "stale_gossip_k1",
@@ -35,7 +46,18 @@ REQUIRED_SCENARIOS = (
     "stale_gossip_k4",
 )
 SYNC_SCENARIOS = ("homogeneous", "straggler_1slow", "failstop_quarter", "churn")
-ALGORITHMS = ("dsgd", "dmsgd", "decentlam")
+STALE_SCENARIOS = (
+    "stale_gossip_k1",
+    "stale_gossip_k2",
+    "stale_gossip_k4",
+    "straggler_1slow_async",
+)
+ALGORITHMS = ("dsgd", "dmsgd", "decentlam", "decentlam-sa")
+
+# a physically plausible per-node step rate ceiling: the wallclock model
+# floors the step price at ~1 ms, so > ~1k steps/s/node means the floor
+# regressed and the bench is projecting roofline prices of a toy problem
+MAX_STEPS_PER_S_PER_NODE = 2e3
 
 
 def main() -> int:
@@ -61,15 +83,52 @@ def main() -> int:
             if entry is None:
                 continue
             if entry.get("diverged"):
-                errors.append(f"{name}/{algo}: diverged under synchronous gossip")
+                errors.append(f"{name}/{algo}: diverged under synchronous delay-0 gossip")
             if entry.get("steps_min", 0) < bench["config"]["n_steps"]:
                 errors.append(f"{name}/{algo}: did not reach the target step count")
+
+    # diverged runs must not carry finite-looking quality metrics
+    for name, algos in scenarios.items():
+        for algo, entry in algos.items():
+            if not entry.get("diverged"):
+                continue
+            for key in ("bias_vs_x_star", "bias_vs_cluster_opt", "consensus"):
+                if entry.get(key) is not None:
+                    errors.append(
+                        f"{name}/{algo}: diverged but reports {key}="
+                        f"{entry[key]} (must be null)"
+                    )
+
+    # the staleness-aware repair: converges on every stale scenario, bias
+    # no worse than DmSGD's
+    for name in STALE_SCENARIOS:
+        sa = scenarios.get(name, {}).get("decentlam-sa")
+        dm = scenarios.get(name, {}).get("dmsgd")
+        if sa is None or dm is None:
+            continue
+        if sa.get("diverged"):
+            errors.append(f"{name}/decentlam-sa: diverged (the repair regressed)")
+            continue
+        bias_sa, bias_dm = sa.get("bias_vs_x_star"), dm.get("bias_vs_x_star")
+        if bias_sa is None or bias_dm is None or bias_sa > bias_dm * 1.05:
+            errors.append(
+                f"{name}: decentlam-sa bias {bias_sa} worse than DmSGD {bias_dm}"
+            )
 
     for name, claim in bench.get("claims", {}).items():
         if not claim.get("decentlam_no_worse"):
             errors.append(
                 f"{name}: DecentLaM bias {claim.get('decentlam_bias')} worse "
                 f"than DmSGD {claim.get('dmsgd_bias')}"
+            )
+    for name, claim in bench.get("sa_claims", {}).items():
+        if not claim.get("decentlam_sa_converges"):
+            errors.append(f"sa_claims/{name}: decentlam-sa did not converge")
+        if not claim.get("decentlam_sa_no_worse"):
+            errors.append(
+                f"sa_claims/{name}: decentlam-sa bias "
+                f"{claim.get('decentlam_sa_bias')} worse than DmSGD "
+                f"{claim.get('dmsgd_bias')}"
             )
 
     hom = scenarios.get("homogeneous", {}).get("decentlam", {})
@@ -80,12 +139,22 @@ def main() -> int:
         if not strag.get("sim_time", 0) > hom.get("sim_time", 0):
             errors.append("straggler_1slow: expected longer horizon than homogeneous")
 
+    n_nodes = bench.get("config", {}).get("n", 0)
+    for name, algos in scenarios.items():
+        for algo, entry in algos.items():
+            sps = entry.get("steps_per_s")
+            if sps is not None and sps > MAX_STEPS_PER_S_PER_NODE * max(1, n_nodes):
+                errors.append(
+                    f"{name}/{algo}: implausible projected throughput "
+                    f"{sps:.3g} steps/s (wallclock floor regressed?)"
+                )
+
     if errors:
         print(f"SIM BENCH GATE: {len(errors)} violation(s):")
         for e in errors:
             print(f"  {e}")
         return 1
-    n_claims = len(bench.get("claims", {}))
+    n_claims = len(bench.get("claims", {})) + len(bench.get("sa_claims", {}))
     print(f"SIM BENCH GATE: ok ({len(scenarios)} scenarios, {n_claims} claims hold)")
     return 0
 

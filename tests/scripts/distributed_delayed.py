@@ -5,12 +5,17 @@ Two contracts of the GossipChannel redesign's headline capability:
 A. ``stale_gossip_k2`` on a real mesh: a shard_map run whose transport is
    :class:`DelayedPpermuteChannel` (payloads held back 2 steps in device
    memory) matches the cluster simulator's SSP trajectory (the delayed
-   stacked engine) for DSGD and DmSGD (allclose).
+   stacked engine) for DSGD, DmSGD and the staleness-aware DecentLaM
+   (allclose) — for ``decentlam-sa`` this also pins that the distributed
+   channel's per-node ``node_gaps`` scalar drives the same damping the
+   stacked channel's ``(n,)`` gap vector does.
 
 B. Delay-0 channels are **bit-exact** with the pre-redesign ppermute gossip
-   for all 10 algorithms.  The old closure is inlined below as a frozen
-   regression oracle (the shipped ``make_ppermute_gossip`` is now a wrapper
-   over the channel, so comparing against it would be vacuous).
+   for all 11 algorithms (``decentlam-sa`` sees gap 0 from both transports
+   — the channel's and the closure's unobservable staleness — so it must
+   match too).  The old closure is inlined below as a frozen regression
+   oracle (the shipped ``make_ppermute_gossip`` shim was removed after its
+   grace period, so this inline copy is the only remaining reference).
 """
 
 import jax
@@ -146,7 +151,7 @@ def grad_fn(x, _s):
 # --- A: stale_gossip_k2 matches the simulator's SSP trajectory -------------
 
 STEPS_A = 8
-for algorithm in ("dsgd", "dmsgd"):
+for algorithm in ("dsgd", "dmsgd", "decentlam-sa"):
     opt = make_optimizer(OptimizerConfig(algorithm=algorithm, momentum=0.8))
     channel = DelayedPpermuteChannel(
         topo, ("data",), 2, calls_per_step=opt.gossips_per_step
@@ -178,4 +183,4 @@ for algorithm in ALGORITHMS:
         algorithm, float(np.max(np.abs(got - ref))))
     print(f"B {algorithm}: OK (bit-exact)")
 
-print(f"delayed-ppermute: OK ({2 + len(ALGORITHMS)} cases)")
+print(f"delayed-ppermute: OK ({3 + len(ALGORITHMS)} cases)")

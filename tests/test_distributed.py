@@ -39,12 +39,16 @@ def test_distributed_train_equivalence(mode):
 def test_delayed_ppermute_channel():
     """The redesign's headline capability: a stale_gossip_k2 scenario through
     the shard_map DelayedPpermuteChannel matches the simulator's SSP
-    trajectory (DSGD + DmSGD), and delay-0 channels are bit-exact with the
-    pre-redesign ppermute gossip for all 10 algorithms."""
+    trajectory (DSGD + DmSGD + staleness-aware DecentLaM), and delay-0
+    channels are bit-exact with the pre-redesign ppermute gossip for all 11
+    algorithms."""
     out = _run("distributed_delayed.py")
     assert "A dsgd: OK" in out and "A dmsgd: OK" in out
-    assert out.count("(bit-exact)") == 10
-    assert "delayed-ppermute: OK (12 cases)" in out
+    assert "A decentlam-sa: OK" in out
+    from repro.core.optimizers import ALGORITHMS
+
+    assert out.count("(bit-exact)") == len(ALGORITHMS)
+    assert f"delayed-ppermute: OK ({3 + len(ALGORITHMS)} cases)" in out
 
 
 def test_distributed_serve_matches_oracle():

@@ -16,7 +16,6 @@ from repro.core import (
     consensus_distance,
     get_compressor,
     gossip_bytes_per_step,
-    make_stacked_gossip,
     wire_bytes,
 )
 
@@ -172,34 +171,21 @@ def _x(n=8, d=7, seed=0):
     )
 
 
-def test_internal_deprecation_gate_is_enforced():
-    """pyproject's filterwarnings turns DeprecationWarnings raised *from
-    repro.** modules into errors, so any internal caller that regresses onto
-    a legacy make_*_gossip wrapper fails the suite (while tests/examples,
-    whose module names don't match, may still exercise the shims)."""
-    import types
+def test_legacy_closure_protocol_still_accepted_but_factories_removed():
+    """The deprecated factory shims are gone (one-release grace period
+    over); ad-hoc closures with the legacy signature still work as the
+    ``gossip`` callback (test oracles rely on this)."""
+    import repro.core as core
+    import repro.core.gossip as gossip_mod
 
-    from repro.core import make_stacked_gossip as _factory  # noqa: F401
+    for name in ("make_stacked_gossip", "make_ppermute_gossip",
+                 "make_allgather_gossip", "init_compression_state"):
+        assert not hasattr(core, name), name
+        assert not hasattr(gossip_mod, name), name
+    from repro.sim import delayed_gossip
 
-    mod = types.ModuleType("repro._deprecation_gate_probe")
-    src = (
-        "from repro.core.gossip import make_stacked_gossip\n"
-        "def call(t): return make_stacked_gossip(t)\n"
-    )
-    exec(compile(src, "<gate-probe>", "exec"), mod.__dict__)
-    with pytest.raises(DeprecationWarning):
-        mod.call(build_topology("ring", 4))
-
-
-def test_legacy_factory_deprecated_but_equivalent():
-    """The one-release shims warn and reproduce the channel's output."""
-    topo = build_topology("exp", 8)
-    x = _x()
-    with pytest.deprecated_call():
-        g = make_stacked_gossip(topo)
-    y_legacy, _ = g(x, jnp.int32(0), ())
-    _, y = StackedChannel(topo).apply({}, x, jnp.int32(0))
-    np.testing.assert_array_equal(np.asarray(y_legacy), np.asarray(y))
+    for name in ("make_delayed_stacked_gossip", "init_delay_state"):
+        assert not hasattr(delayed_gossip, name), name
 
 
 def test_stacked_channel_compression_matches_manual_model():
@@ -256,6 +242,31 @@ def test_delayed_channel_version_gaps_warmup_and_cap():
         # round t read hist[count - min(d, t)] — exactly min(3, t) rounds old
         assert gaps.max() == min(3, t)
         assert (gaps[W_off == 0] == 0).all()
+
+
+def test_node_gaps_incident_edge_semantics():
+    """node_gaps is the worst version gap on any *incident* edge, both
+    directions: with an asymmetric delay matrix, a node whose own reads are
+    fresh but whose readers consume it stale still reports the gap (the
+    momentum feedback staleness-aware algorithms damp runs through the
+    round trip).  Staleness-free channels report scalar 0."""
+    topo = build_topology("ring", 4)
+    Dm = np.zeros((4, 4), int)
+    Dm[1, 0] = 3  # node 1 reads node 0's payload 3 rounds stale
+    ch = DelayedStackedChannel(topo, Dm)
+    x = _x(4, 5)
+    st = ch.init(x)
+    for t in range(5):
+        st, _ = ch.apply(st, x, jnp.int32(t))
+    gaps = np.asarray(ch.node_gaps(st))
+    assert gaps.shape == (4,)
+    assert gaps[1] == 3  # stale reader
+    assert gaps[0] == 3  # fresh reads, but its payloads are consumed stale
+    assert gaps[2] == 0 and gaps[3] == 0
+    # staleness-free transports: scalar 0 (broadcastable in any layout)
+    st0 = StackedChannel(topo).init(x)
+    assert np.asarray(StackedChannel(topo).node_gaps(st0)).shape == ()
+    assert int(StackedChannel(topo).node_gaps(st0)) == 0
 
 
 def test_channel_telemetry_accounting():

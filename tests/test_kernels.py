@@ -146,6 +146,49 @@ def test_decentlam_update_kernel(shape, dt):
     )
 
 
+@pytest.mark.parametrize("sg", [1.0, 0.37, 0.0])
+def test_decentlam_sa_post_fused_matches_reference(sg):
+    """Fused-vs-reference parity for the staleness-aware op at real damping
+    factors (the fused engine receives sg as the 4th SMEM scalar — the
+    per-node value inside shard_map).  At sg=1 both must also equal the
+    plain decentlam_post (the bit-exactness hinge)."""
+    from repro.core.update_spec import MathCtx, reference_stage
+    from repro.kernels.fused_update import make_stage
+
+    rng = np.random.default_rng(17)
+    ops = {
+        "x": jnp.asarray(rng.standard_normal((9, 33)), jnp.float32),
+        "mix": jnp.asarray(rng.standard_normal((9, 33)), jnp.float32),
+        "m": jnp.asarray(rng.standard_normal((9, 33)), jnp.float32),
+        "g": jnp.asarray(rng.standard_normal((9, 33)), jnp.float32),
+    }
+    scalars = {
+        "lr": jnp.float32(0.02),
+        "gs": jnp.float32(1.0),
+        "r": jnp.float32(1.0),
+        "sg": jnp.float32(sg),
+    }
+    ctx = MathCtx(beta=0.9)
+    ref = reference_stage(
+        "post", "decentlam_sa_post", ctx, ops, scalars, ops["x"]
+    )
+    fus = make_stage("pallas_interpret")(
+        "post", "decentlam_sa_post", ctx, ops, scalars, ops["x"]
+    )
+    for k in ("x", "m"):
+        np.testing.assert_allclose(
+            np.asarray(ref[k]), np.asarray(fus[k]), rtol=1e-5, atol=1e-5,
+            err_msg=k,
+        )
+    if sg == 1.0:
+        plain = reference_stage(
+            "post", "decentlam_post", ctx,
+            {k: ops[k] for k in ("x", "mix", "m")}, scalars, ops["x"],
+        )
+        np.testing.assert_array_equal(np.asarray(ref["x"]), np.asarray(plain["x"]))
+        np.testing.assert_array_equal(np.asarray(ref["m"]), np.asarray(plain["m"]))
+
+
 def test_decentlam_update_semantics():
     """x_new must equal mix - lr*beta*m (algebraic identity of eq. 17 tail)."""
     x = _rand((256,), jnp.float32)

@@ -188,6 +188,98 @@ def test_preprocess_grads_matches_fused_scalar_folding():
         )
 
 
+def test_decentlam_sa_delay0_bit_exact_with_decentlam():
+    """The acceptance pin: over any fresh transport (gap 0) decentlam-sa is
+    decentlam, bit for bit — params AND momentum, multiple steps."""
+    prob = make_linear_regression(n=8, seed=5)
+    topo = build_topology("ring", 8)
+    x0 = jnp.zeros((8, prob.dim), jnp.float32)
+
+    def g(x, s):
+        return prob.grad(x)
+
+    p_sa, s_sa, _ = run_stacked(
+        make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.9)),
+        topo, x0, g, lr=1e-3, n_steps=60,
+    )
+    p_dl, s_dl, _ = run_stacked(
+        make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.9)),
+        topo, x0, g, lr=1e-3, n_steps=60,
+    )
+    np.testing.assert_array_equal(np.asarray(p_sa), np.asarray(p_dl))
+    np.testing.assert_array_equal(np.asarray(s_sa["m"]), np.asarray(s_dl["m"]))
+
+
+def test_decentlam_sa_nesterov_delay0_bit_exact():
+    prob = make_linear_regression(n=4, seed=6)
+    topo = build_topology("full", 4)
+    x0 = jnp.zeros((4, prob.dim), jnp.float32)
+
+    def g(x, s):
+        return prob.grad(x)
+
+    runs = {}
+    for algo in ("decentlam-sa", "decentlam"):
+        runs[algo] = run_stacked(
+            make_optimizer(
+                OptimizerConfig(algorithm=algo, momentum=0.9, nesterov=True)
+            ),
+            topo, x0, g, lr=1e-3, n_steps=30,
+        )[0]
+    np.testing.assert_array_equal(
+        np.asarray(runs["decentlam-sa"]), np.asarray(runs["decentlam"])
+    )
+
+
+def test_decentlam_sa_converges_where_decentlam_diverges():
+    """Stale mixing (delay-2 channel): decentlam's implicit gradient feeds
+    staleness back through momentum and leaves the basin; decentlam-sa
+    stays at baseline bias."""
+    from repro.core.reference import bias_to_optimum
+    from repro.sim import run_delayed
+
+    prob = make_linear_regression(n=8, heterogeneity=1.0, seed=0)
+    topo = build_topology("ring", 8)
+    x0 = jnp.zeros((8, prob.dim), jnp.float32)
+
+    def g(x, s):
+        return prob.grad(x)
+
+    p_dl, _, _ = run_delayed(
+        make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8)),
+        topo, x0, g, delay=2, lr=1e-3, n_steps=200,
+    )
+    bias_dl = float(bias_to_optimum(p_dl, prob.x_star))
+    p_sa, _, _ = run_delayed(
+        make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.8)),
+        topo, x0, g, delay=2, lr=1e-3, n_steps=200,
+    )
+    bias_sa = float(bias_to_optimum(p_sa, prob.x_star))
+    assert not (np.isfinite(bias_dl) and bias_dl < 1e3)  # the recorded failure
+    assert np.isfinite(bias_sa) and bias_sa < 0.05
+
+
+def test_staleness_damping_schedule():
+    """gamma(0) == 1 exactly (the bit-exactness hinge), monotone
+    non-increasing in the gap, floored by sa_floor."""
+    from repro.core.update_spec import staleness_damping
+
+    cfg = OptimizerConfig(algorithm="decentlam-sa", sa_damping=0.5)
+    gaps = jnp.arange(0, 12)
+    f = np.asarray(staleness_damping(cfg, gaps))
+    assert f[0] == 1.0
+    assert (np.diff(f) <= 0).all()
+    np.testing.assert_allclose(f, 0.5 ** np.arange(12), rtol=1e-6)
+    cfg_f = OptimizerConfig(algorithm="decentlam-sa", sa_damping=0.5, sa_floor=0.1)
+    ff = np.asarray(staleness_damping(cfg_f, gaps))
+    assert (ff >= 0.1 - 1e-7).all() and ff[0] == 1.0 and (np.diff(ff) <= 0).all()
+    # no channel / legacy closure: unobservable staleness is treated fresh
+    assert float(staleness_damping(cfg, None)) == 1.0
+    # config validation
+    with pytest.raises(AssertionError):
+        OptimizerConfig(algorithm="decentlam-sa", sa_damping=0.0)
+
+
 def test_nesterov_decentlam_converges():
     prob = make_linear_regression(n=8, seed=4)
     topo = build_topology("exp", 8)

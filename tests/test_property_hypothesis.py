@@ -149,6 +149,56 @@ def test_flash_attention_property(b, s, h, hd, causal, window):
 
 @SET
 @given(
+    st.sampled_from(["ring", "torus", "exp", "one-peer-exp", "full"]),
+    st.sampled_from([0, 1, 2, 4]),
+    st.floats(0.05, 1.0),
+)
+def test_decentlam_sa_gap0_bitexact_and_damping_monotone(name, delay, base):
+    """Across topology x delay k in {0,1,2,4}: at k=0 decentlam-sa is
+    bit-exact with decentlam (params and momentum), at k>0 it stays finite
+    where decentlam's estimator is unstable; and the damping schedule is
+    exactly 1 at gap 0 and monotone non-increasing in the observed gap."""
+    from repro.core import (
+        OptimizerConfig,
+        make_linear_regression,
+        make_optimizer,
+    )
+    from repro.core.update_spec import staleness_damping
+    from repro.sim import run_delayed
+
+    cfg = OptimizerConfig(
+        algorithm="decentlam-sa", momentum=0.8, sa_damping=base
+    )
+    gaps = jnp.arange(0, 9)
+    f = np.asarray(staleness_damping(cfg, gaps))
+    assert f[0] == 1.0
+    assert (np.diff(f) <= 1e-7).all()
+
+    topo = build_topology(name, 8)
+    prob = make_linear_regression(n=8, m=6, d=5, seed=delay)
+    x0 = jnp.zeros((8, 5), jnp.float32)
+
+    def g(x, s):
+        return prob.grad(x)
+
+    p_sa, s_sa, _ = run_delayed(
+        make_optimizer(cfg), topo, x0, g, delay=delay, lr=1e-2, n_steps=4
+    )
+    if delay == 0:
+        p_dl, s_dl, _ = run_delayed(
+            make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8)),
+            topo, x0, g, delay=0, lr=1e-2, n_steps=4,
+        )
+        np.testing.assert_array_equal(np.asarray(p_sa), np.asarray(p_dl))
+        np.testing.assert_array_equal(
+            np.asarray(s_sa["m"]), np.asarray(s_dl["m"])
+        )
+    else:
+        assert np.isfinite(np.asarray(p_sa)).all()
+
+
+@SET
+@given(
     st.integers(1, 2000),  # size
     st.floats(0.0, 0.99),  # beta
     st.floats(1e-6, 0.5),  # lr

@@ -175,28 +175,6 @@ def test_delayed_gossip_time_varying_topology(problem):
     assert bool(jnp.all(jnp.isfinite(p)))
 
 
-def test_legacy_delayed_factories_deprecated_but_equivalent():
-    """The one-release shims (tuple-of-slots state) warn and reproduce the
-    DelayedStackedChannel bit-exactly."""
-    from repro.sim import init_delay_state, make_delayed_stacked_gossip
-
-    n, d, k = 4, 3, 2
-    topo = build_topology("ring", n)
-    with pytest.deprecated_call():
-        gossip = make_delayed_stacked_gossip(topo, k)
-    with pytest.deprecated_call():
-        st_legacy = init_delay_state(topo, k, jnp.zeros((n, d), jnp.float32))
-    ch = DelayedStackedChannel(topo, k)
-    st = ch.init(jnp.zeros((n, d), jnp.float32))
-    for t in range(5):
-        x = jnp.asarray(
-            np.float32(np.random.default_rng(t).standard_normal((n, d)))
-        )
-        y_legacy, st_legacy = gossip(x, jnp.int32(t), st_legacy)
-        st, y = ch.apply(st, x, jnp.int32(t))
-        np.testing.assert_array_equal(np.asarray(y_legacy), np.asarray(y))
-
-
 def test_delayed_engine_reports_version_gaps(problem):
     """The delayed engine's trace exposes the per-edge version gap — capped
     at the scenario's configured gossip delay."""
@@ -292,6 +270,28 @@ def test_straggler_bsp_preserves_quality(problem8):
                    scenario="straggler_1slow", seed=0, metric_fn=metric)
     assert r_s.stall_time.sum() > 0 and r_s.sim_time > r_h.sim_time
     assert r_s.final_metric == pytest.approx(r_h.final_metric, rel=0.05)
+
+
+def test_straggler_stall_accounting_pinned(problem8):
+    """A synchronous barrier behind a 1-slow node must stretch sim time AND
+    accrue stall on the fast nodes — including the terminal tail (nodes
+    still SSP-blocked when the run ends have been stalling since they last
+    became ready; the flush must count it)."""
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    r_h = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+                   scenario="homogeneous")
+    r_s = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+                   scenario="straggler_1slow", seed=0)
+    assert r_s.stall_time.sum() > 0
+    assert r_s.sim_time > r_h.sim_time
+    # the 4x straggler gates every BSP round: each fast node spends the
+    # bulk of the horizon blocked, so total stall must be of the same order
+    # as (n - 1) * sim_time — not just a rounding residue
+    assert r_s.stall_time.sum() > 0.5 * (8 - 1) * r_s.sim_time
+    # every fast node accrued stall; the straggler itself never waits
+    assert (r_s.stall_time[1:] > 0).all()
+    assert r_s.stall_time[0] == 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -431,6 +431,62 @@ def test_wallclock_projection_orders_scenarios(problem8):
     assert p_s["wallclock_s"] > p_h["wallclock_s"]  # straggler costs time
     assert p_s["steps_per_s"] < p_h["steps_per_s"]
     assert p_h["stall_s"] == 0.0 and p_s["stall_s"] > 0.0
+
+
+def test_wallclock_price_floor_is_physically_plausible(problem8):
+    """Pricing the 30-dim toy on raw rooflines projected ~1e9 steps/s into
+    BENCH_sim.json; the per-step price must be floored by the
+    work-independent launch/dispatch latency so projected throughput stays
+    inside physical bounds."""
+    from repro.sim import MIN_STEP_S
+
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    topo = build_topology("ring", 8)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+                 scenario="homogeneous")
+    p = project_wallclock(r, topo, opt=opt, grad_fn=_grad(problem8))
+    assert p["step_time_s"] >= MIN_STEP_S
+    assert p["dominant"] == "latency"  # the toy's roofline is below the floor
+    assert p["roofline_s"] < p["step_time_s"]
+    # n nodes each bounded by 1/MIN_STEP_S steps per second
+    assert 0 < p["steps_per_s"] <= 8 / MIN_STEP_S * (1 + 1e-6)
+    # the raw roofline bound stays available for real model configs
+    from repro.sim import payload_bytes, step_time_seconds
+
+    raw = step_time_seconds(topo, payload_bytes(r.params), min_step_s=0.0)
+    assert raw["step_time_s"] == raw["roofline_s"] < MIN_STEP_S
+
+
+def test_event_engine_decentlam_sa_async_straggler_converges(problem8):
+    """The headline repair: under bounded-staleness asynchrony (SSP-8)
+    decentlam diverges while decentlam-sa — damping on the incident-edge
+    version gaps the engine feeds it — stays at baseline quality."""
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
+    sa = make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.8))
+    r = simulate(sa, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=80,
+                 scenario="straggler_1slow_async", seed=0, metric_fn=metric)
+    assert np.isfinite(r.final_metric) and r.final_metric < 1.0
+    assert np.isfinite(r.final_consensus)
+    dm = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
+    r_dm = simulate(dm, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=80,
+                    scenario="straggler_1slow_async", seed=0, metric_fn=metric)
+    assert r.final_metric <= r_dm.final_metric * 1.5
+
+
+def test_is_diverged_marks_unrankable_runs():
+    """The benchmark nulls quality metrics for diverged runs; the detector
+    must catch non-finite, missing, AND finite-but-left-the-basin biases
+    (the 1.6e26 values BENCH_sim.json used to report as 'quality')."""
+    from repro.sim import is_diverged
+
+    assert is_diverged(float("inf"))
+    assert is_diverged(float("nan"))
+    assert is_diverged(None)
+    assert is_diverged(1.6e26)
+    assert is_diverged(0.001, 2e7)  # any metric past the basin flags the run
+    assert not is_diverged(0.001, 0.9)
 
 
 def test_scenario_registry_contents():
