@@ -75,6 +75,18 @@ STALE_SCENARIOS = (
     "straggler_1slow_async",
 )
 
+# scenario x compression sweep (ROADMAP item): cross the message
+# compressors with a staleness-free baseline, SSP-stale delayed gossip and
+# the async straggler — does error feedback interact with staleness?  Each
+# cell records its bias ratio against the *uncompressed* run of the same
+# (scenario, algorithm) from the main table, so the interaction is read
+# directly: bf16/int8 should be staleness-neutral (ratio ~1 everywhere),
+# while top-k+EF's residual feedback loop compounds with stale mixing
+# (ratio grows with staleness).
+SWEEP_COMPRESSIONS = ("bf16", "int8", "topk:0.1")
+SWEEP_SCENARIOS = ("homogeneous", "stale_gossip_k2", "straggler_1slow_async")
+SWEEP_ALGORITHMS = ("dmsgd", "decentlam-sa")
+
 
 def _cluster_optimum(problem, indices) -> jnp.ndarray:
     """Exact optimum of the quadratic restricted to the listed nodes' data."""
@@ -199,6 +211,83 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
             ),
         }
 
+    # ---- scenario x compression sweep ------------------------------------
+    sweep: dict[str, dict] = {}
+    if csv:
+        print("scenario,algorithm,compression,bias_vs_x_star,"
+              "bias_ratio_vs_uncompressed,diverged")
+    for scenario in SWEEP_SCENARIOS:
+        sweep[scenario] = {}
+        for algorithm in SWEEP_ALGORITHMS:
+            sweep[scenario][algorithm] = {}
+            base_bias = results[scenario][algorithm]["bias_vs_x_star"]
+            for comp in SWEEP_COMPRESSIONS:
+                opt = make_optimizer(
+                    OptimizerConfig(algorithm=algorithm, momentum=cfg["momentum"])
+                )
+                res = simulate(
+                    opt, cfg["topology"], cfg["n"], x0, grad_fn,
+                    lr=cfg["lr"], n_steps=cfg["n_steps"], scenario=scenario,
+                    seed=cfg["seed"], metric_fn=metric, restrict=restrict,
+                    compression=comp,
+                )
+                diverged = is_diverged(res.final_metric)
+                bias = None if diverged else _finite(res.final_metric)
+                ratio = (
+                    round(bias / base_bias, 3)
+                    if bias is not None and base_bias
+                    else None
+                )
+                sweep[scenario][algorithm][comp] = {
+                    "bias_vs_x_star": bias,
+                    "bias_ratio_vs_uncompressed": ratio,
+                    "diverged": diverged,
+                }
+                if csv:
+                    print(f"{scenario},{algorithm},{comp},"
+                          f"{bias if not diverged else 'diverged'},{ratio},"
+                          f"{diverged}")
+
+    # machine-checkable sweep claims:
+    # * every compressor survives every sweep scenario (no divergence);
+    # * bf16 is staleness-neutral (bias within 1.5x of uncompressed in
+    #   every cell); int8 is NOT under async staleness (its quantization
+    #   noise feeds the sa-damping loop — recorded, not gated as neutral);
+    # * for the losslessly-cheap compressors (bf16, int8), compressed
+    #   decentlam-sa still beats *uncompressed* DmSGD on every sweep
+    #   scenario — compression does not spend the staleness-repair margin;
+    # * top-k+EF's error-feedback x staleness interaction is recorded as
+    #   the stale-to-homogeneous bias-ratio growth per algorithm.
+    compression_claims: dict[str, dict] = {}
+    for comp in SWEEP_COMPRESSIONS:
+        entry: dict = {"converges_everywhere": True}
+        neutral = True
+        sa_beats_dmsgd = True
+        for scenario in SWEEP_SCENARIOS:
+            dm_base = results[scenario]["dmsgd"]["bias_vs_x_star"]
+            for algorithm in SWEEP_ALGORITHMS:
+                cell = sweep[scenario][algorithm][comp]
+                if cell["diverged"]:
+                    entry["converges_everywhere"] = False
+                r = cell["bias_ratio_vs_uncompressed"]
+                if r is None or r > 1.5:
+                    neutral = False
+            sa_bias = sweep[scenario]["decentlam-sa"][comp]["bias_vs_x_star"]
+            if sa_bias is None or dm_base is None or sa_bias > dm_base * 1.05:
+                sa_beats_dmsgd = False
+        entry["staleness_neutral"] = neutral
+        entry["sa_no_worse_than_uncompressed_dmsgd"] = sa_beats_dmsgd
+        if comp.startswith("topk"):
+            h = {a: sweep["homogeneous"][a][comp]["bias_vs_x_star"]
+                 for a in SWEEP_ALGORITHMS}
+            s = {a: sweep["stale_gossip_k2"][a][comp]["bias_vs_x_star"]
+                 for a in SWEEP_ALGORITHMS}
+            entry["ef_staleness_interaction"] = {
+                a: (round(s[a] / h[a], 3) if s[a] and h[a] else None)
+                for a in SWEEP_ALGORITHMS
+            }
+        compression_claims[comp] = entry
+
     payload = {
         "bench": "sim_scenarios",
         "config": CONFIG,
@@ -208,6 +297,8 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
         "scenarios": results,
         "claims": claims,
         "sa_claims": sa_claims,
+        "compression_sweep": sweep,
+        "compression_claims": compression_claims,
     }
     if json_path:
         with open(json_path, "w") as f:

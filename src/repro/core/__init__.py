@@ -18,6 +18,7 @@ from .gossip import (
     make_stacked_mean,
 )
 from .optimizers import ALGORITHMS, Optimizer, OptimizerConfig, make_optimizer
+from .planes import PlaneLayout, plane_scalars
 from .reference import (
     LinearRegressionProblem,
     bias_to_optimum,
@@ -55,6 +56,7 @@ __all__ = [
     "LinearRegressionProblem",
     "Optimizer",
     "OptimizerConfig",
+    "PlaneLayout",
     "ScheduleConfig",
     "TOPOLOGIES",
     "Topology",
@@ -72,6 +74,7 @@ __all__ = [
     "make_psum_mean",
     "make_stacked_mean",
     "metropolis_weights",
+    "plane_scalars",
     "rho",
     "run_bias_experiment",
     "run_stacked",

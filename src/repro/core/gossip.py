@@ -39,6 +39,20 @@ transports (test oracles); the deprecated factory shims that produced such
 closures (``make_*_gossip``, ``init_compression_state``) were removed after
 their one-release grace period — construct a channel instead.
 
+**Flat plane payloads.**  Every channel is payload-structure generic, so
+the flat fast path (``TrainConfig(flat_planes=True)``) needs no separate
+transport: hand ``apply`` a :class:`~repro.core.planes.PlaneLayout` payload
+(one contiguous f32 buffer per dtype bucket) and each gossip round issues
+one collective per **bucket** per edge class instead of one per pytree leaf
+— and ``init`` on a plane template moves the delay ring buffers and the
+compression error-feedback residuals into the same contiguous layout (one
+ring / one residual per bucket).  ``collectives_per_round`` is the analytic
+count the benchmarks/CI gate against.  Note that per-tensor compressors
+(int8 absmax, top-k) then operate on the whole bucket rather than per leaf:
+int8 uses one global scale and top-k selects across the entire plane — a
+deliberate semantic change of the packed wire format (error feedback still
+applies, now over plane residuals).
+
 Time-varying topologies (one-peer exponential, bipartite random match) cycle
 through their period with ``lax.switch`` so the step stays a single jitted
 computation.
@@ -220,6 +234,33 @@ class GossipChannel:
             self.topology, payload_bytes, impl=self._impl,
             compression=self.compression,
         )
+
+    def collectives_per_round(self, payload: Tree) -> float:
+        """Collective ops one ``apply`` issues for this payload (period mean).
+
+        The wire path ships one message *component* per payload leaf per
+        edge class (compressors with multi-part messages — int8's
+        ``{q, scale}``, top-k's ``{v, i}`` — permute each part), so the
+        count is ``edge_classes x leaves x parts``.  This is what the flat
+        plane path collapses: a :class:`~repro.core.planes.PlaneLayout`
+        payload has one leaf per dtype bucket, making the count
+        O(buckets x edge-classes) instead of O(leaves x edge-classes) —
+        ``tests/scripts/distributed_equivalence.py`` cross-checks this
+        number against the ppermutes actually present in the lowered
+        jaxpr.  Stacked channels mix with a dense einsum (no collectives).
+        """
+        if self._stacked_layout:
+            return 0.0
+        n_leaves = len(jax.tree.leaves(payload))
+        probe = jax.eval_shape(
+            lambda x: self._compressor.encode(x, self._compressor.init(x))[0],
+            jnp.zeros((2, 2), jnp.float32),
+        )
+        parts = len(jax.tree.leaves(probe))
+        sends = np.mean(
+            [len(self.topology.edge_classes(t)) for t in range(self.topology.period)]
+        )
+        return float(sends) * n_leaves * parts
 
     def version_gaps(self, state: Tree) -> jax.Array:
         """``(n, n)`` int32 of per-edge iterate-version gaps: entry (i, j) is
@@ -769,6 +810,10 @@ class AllgatherChannel(GossipChannel):
             n = self.topology.n
             state = self._tick(state, step, (n - 1) * self._payload_nbytes(tree))
         return state, mixed
+
+    def collectives_per_round(self, payload: Tree) -> float:
+        # one raw-f32 all_gather per payload leaf, whatever the topology
+        return float(len(jax.tree.leaves(payload)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,295 @@
+"""Flat parameter planes: dtype-bucketed contiguous views of a pytree.
+
+The per-leaf hot path pays one kernel launch per pytree leaf per update
+stage and one collective per leaf per gossip edge class — for the model-zoo
+configs that is hundreds of dispatches per step, each with its own padding
+to the ``(rows, 1024)`` tile.  A :class:`PlaneLayout` collapses that: the
+whole tree is packed **once** into one contiguous ``(rows, LANES)`` buffer
+per dtype bucket, with static per-leaf segment metadata (row offsets,
+shapes, sizes) chosen so that
+
+* every leaf starts at a row boundary (``LANES``-element granularity — no
+  leaf straddles a tile row, so a row belongs to exactly one leaf), and
+* every bucket's total row count is a multiple of 64 (the fused-update
+  kernel's block height, itself a multiple of the f32/bf16 min-tile
+  sublane counts 8/16 — exact-grid blocks keep the plane kernel's
+  floating-point contraction identical to the per-leaf kernel's, which is
+  what makes plane-vs-per-leaf parity *bit*-exact rather than
+  ulp-close),
+
+so the fused-update engine runs **one** ``pallas_call`` per stage per
+bucket and the gossip channels ship **one** buffer per bucket per edge
+class.  Padding is zero-filled; all the engine's elementwise stage math
+maps zeros to zeros (``safe_lr`` clamps the divisions), so padded rows
+stay inert and :meth:`PlaneLayout.unpack` never reads them.
+
+Per-leaf quantities (the LARS trust ratio) are carried as *row-indexed
+segment scalars*: :meth:`PlaneLayout.row_scalars` scatters a tree of
+per-leaf scalars to a ``(rows, 1)`` column per bucket using the static
+row→segment map, which broadcasts through the same
+``pre_math``/``post_math`` expressions the per-leaf path uses (and rides
+into the Pallas plane kernel as a narrow VMEM operand).
+
+:func:`plane_scalars` computes the gradient-preprocessing scalars on the
+**original trees** with the exact :func:`~repro.core.update_spec.grad_scalars`
+code, then converts only the per-leaf LARS tree to row form — so the
+clip/LARS scalars of the plane path are bit-identical to the per-leaf
+path's by construction (a segment-reduction over planes would change the
+summation order).
+
+Layouts are static (built from shapes/dtypes only, ``jax.eval_shape``
+friendly) and hashable-by-identity; ``pack``/``unpack`` are pure jnp and
+trace under jit.  A ``leading`` axis count supports the stacked ``(n,
+...)`` reference layout: build the layout from the per-node template and
+pack with ``leading=1``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+__all__ = ["LANES", "ROW_MULTIPLE", "Segment", "PlaneLayout", "plane_scalars"]
+
+LANES = 1024  # lane width of the fused-update tile (= 8 x 128 VPU lanes)
+ROW_MULTIPLE = 64  # bucket row totals pad to the kernel block height
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One leaf's slot inside a bucket plane (static metadata)."""
+
+    index: int  # leaf position in the template's flatten order
+    shape: tuple[int, ...]  # per-node leaf shape (leading axes excluded)
+    dtype: Any  # template dtype (unpack's default cast target)
+    row_start: int  # first plane row of this leaf
+    rows: int  # ceil(size / LANES)
+    size: int  # true element count (rows * LANES - size is zero pad)
+
+
+def _bucket_key(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+class PlaneLayout:
+    """Static packing plan for one pytree template (see module docstring)."""
+
+    def __init__(self, treedef, segments: dict[str, tuple[Segment, ...]],
+                 rows: dict[str, int]):
+        self.treedef = treedef
+        self.segments = segments
+        self.rows = rows  # per-bucket row totals (ROW_MULTIPLE aligned)
+        self.n_leaves = treedef.num_leaves
+        # row -> segment position within the bucket; tail-pad rows alias
+        # segment 0 (their data is zero, so any scalar they pick up is inert)
+        self._row_pos: dict[str, np.ndarray] = {}
+        for key, segs in segments.items():
+            pos = np.zeros(rows[key], dtype=np.int32)
+            for p, seg in enumerate(segs):
+                pos[seg.row_start: seg.row_start + seg.rows] = p
+            self._row_pos[key] = pos
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, template: Tree) -> "PlaneLayout":
+        """Plan the packing for ``template`` (arrays or ShapeDtypeStructs;
+        only ``.shape``/``.dtype`` are read)."""
+        leaves, treedef = jax.tree.flatten(template)
+        segs: dict[str, list[Segment]] = {}
+        for i, leaf in enumerate(leaves):
+            key = _bucket_key(leaf.dtype)
+            bucket = segs.setdefault(key, [])
+            start = bucket[-1].row_start + bucket[-1].rows if bucket else 0
+            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            rows = max(1, -(-size // LANES))
+            bucket.append(Segment(i, tuple(leaf.shape), jnp.dtype(leaf.dtype),
+                                  start, rows, size))
+        rows = {
+            key: -(-(b[-1].row_start + b[-1].rows) // ROW_MULTIPLE) * ROW_MULTIPLE
+            for key, b in segs.items()
+        }
+        return cls(treedef, {k: tuple(v) for k, v in segs.items()}, rows)
+
+    @property
+    def buckets(self) -> tuple[str, ...]:
+        """Bucket keys in the planes dict's (sorted) pytree order."""
+        return tuple(sorted(self.segments))
+
+    def plane_shapes(self, dtype=None) -> dict[str, jax.ShapeDtypeStruct]:
+        """Abstract plane buffers (``dtype=None`` keeps each bucket's own)."""
+        return {
+            key: jax.ShapeDtypeStruct(
+                (self.rows[key], LANES),
+                jnp.dtype(dtype) if dtype is not None else jnp.dtype(key),
+            )
+            for key in self.segments
+        }
+
+    # -- pack / unpack ------------------------------------------------------
+
+    def pack(self, tree: Tree, *, dtype=None, leading: int = 0,
+             impl: str | None = None) -> dict:
+        """Pack ``tree`` (structure of the template) into plane buffers.
+
+        ``dtype`` casts every buffer (pass ``jnp.float32`` for gradient /
+        momentum / payload trees whose leaves don't carry the template
+        dtypes); ``leading`` preserves that many leading axes per leaf
+        (the stacked ``(n, ...)`` layout packs with ``leading=1``).
+
+        ``impl`` selects the lowering — both produce identical values:
+
+        * ``"concat"`` — per-leaf zero-pad + one concatenate per bucket.
+          The natural form on accelerators (pure DMA memcpy, no extra
+          constants).
+        * ``"gather"``  — concatenate the *raw* leaves densely (memcpy
+          fast path), then expand to the padded layout with one static
+          gather.  XLA's CPU concatenate emitter falls off a cliff (up to
+          ~10x, erratically across shapes) when zero-pad operands are
+          fused into a many-operand concat; the gather form is uniformly
+          fast there at the cost of an O(elements) int32 index constant.
+
+        Default: ``"gather"`` on the CPU backend, ``"concat"`` elsewhere.
+        """
+        if impl is None:
+            impl = "gather" if jax.default_backend() == "cpu" else "concat"
+        leaves = self.treedef.flatten_up_to(tree)
+        planes: dict[str, jax.Array] = {}
+        for key, segs in self.segments.items():
+            lead = tuple(np.shape(leaves[segs[0].index])[:leading])
+            for seg in segs:
+                assert np.shape(leaves[seg.index])[leading:] == seg.shape, (
+                    np.shape(leaves[seg.index]), seg,
+                )
+            if impl == "gather":
+                dense = jnp.concatenate(
+                    [
+                        jnp.asarray(leaves[s.index]).reshape(lead + (-1,))
+                        for s in segs
+                    ],
+                    axis=leading,
+                )
+                dz = jnp.concatenate(
+                    [dense, jnp.zeros(lead + (1,), dense.dtype)], axis=leading
+                )
+                # NOT indices_are_sorted: pad slots point at the zero slot
+                # *past* the dense end, so the map is non-monotonic between
+                # segments — claiming sortedness would be UB on backends
+                # whose gather emitters exploit it
+                buf = jnp.take(
+                    dz, jnp.asarray(self._gather_idx(key)), axis=leading,
+                    mode="clip",
+                ).reshape(lead + (self.rows[key], LANES))
+            else:
+                parts = []
+                for seg in segs:
+                    flat = jnp.asarray(leaves[seg.index]).reshape(lead + (-1,))
+                    pad = seg.rows * LANES - seg.size
+                    if pad:
+                        flat = jnp.pad(
+                            flat, [(0, 0)] * leading + [(0, pad)]
+                        )
+                    parts.append(flat.reshape(lead + (seg.rows, LANES)))
+                tail = self.rows[key] - (segs[-1].row_start + segs[-1].rows)
+                if tail:
+                    parts.append(jnp.zeros(lead + (tail, LANES), parts[0].dtype))
+                buf = jnp.concatenate(parts, axis=leading)
+            if dtype is not None:
+                buf = buf.astype(dtype)
+            planes[key] = buf
+        return planes
+
+    def _gather_idx(self, key: str) -> np.ndarray:
+        """Static padded-position -> dense-position map of one bucket
+        (pad positions point one past the dense end — a zero slot)."""
+        cache = getattr(self, "_gather_cache", None)
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_gather_cache", cache)
+        if key not in cache:
+            segs = self.segments[key]
+            total = sum(s.size for s in segs)
+            idx = np.full(self.rows[key] * LANES, total, np.int32)
+            off = 0
+            for s in segs:
+                start = s.row_start * LANES
+                idx[start: start + s.size] = np.arange(
+                    off, off + s.size, dtype=np.int32
+                )
+                off += s.size
+            cache[key] = idx
+        return cache[key]
+
+    def unpack(self, planes: dict, *, like: Tree | None = None,
+               dtype=None, leading: int = 0) -> Tree:
+        """Slice the plane buffers back into the template structure.
+
+        Each leaf casts to ``dtype`` when given, else to ``like``'s leaf
+        dtype, else to the template dtype recorded in its segment.
+        """
+        like_leaves = (
+            self.treedef.flatten_up_to(like) if like is not None else None
+        )
+        out: list = [None] * self.n_leaves
+        for key, segs in self.segments.items():
+            buf = planes[key]
+            lead = buf.shape[:leading]
+            for seg in segs:
+                sl = jax.lax.slice_in_dim(
+                    buf, seg.row_start, seg.row_start + seg.rows, axis=leading
+                )
+                flat = sl.reshape(lead + (-1,))[..., : seg.size]
+                if dtype is not None:
+                    dt = dtype
+                elif like_leaves is not None:
+                    dt = like_leaves[seg.index].dtype
+                else:
+                    dt = seg.dtype
+                out[seg.index] = flat.reshape(lead + seg.shape).astype(dt)
+        return self.treedef.unflatten(out)
+
+    # -- per-leaf scalars as row-indexed segment scalars --------------------
+
+    def row_scalars(self, scalar_tree: Tree) -> dict:
+        """A tree of per-leaf scalars -> ``{bucket: (rows, 1) f32}`` columns.
+
+        The static row→segment map scatters each leaf's scalar across its
+        rows; broadcasting ``(rows, 1) * (rows, LANES)`` then applies it
+        elementwise exactly like the per-leaf path's scalar multiply.
+        """
+        vals = self.treedef.flatten_up_to(scalar_tree)
+        out = {}
+        for key, segs in self.segments.items():
+            col = jnp.stack(
+                [jnp.asarray(vals[s.index], jnp.float32).reshape(()) for s in segs]
+            )
+            out[key] = col[self._row_pos[key]][:, None]
+        return out
+
+
+def plane_scalars(cfg, layout: PlaneLayout, x: Tree, g: Tree) -> dict:
+    """Gradient-preprocessing scalars for the plane path.
+
+    Runs the exact per-leaf :func:`~repro.core.update_spec.grad_scalars`
+    on the *original* trees (so ``gs`` and the LARS ratios are
+    bit-identical to the per-leaf path), then converts the per-leaf LARS
+    tree to row-indexed columns that broadcast over the plane buffers.
+    Feed the result to ``run_update(..., scalars=...)`` together with
+    plane-packed operands.
+    """
+    from .update_spec import grad_scalars
+
+    s = dict(grad_scalars(cfg, x, g))
+    # grad_scalars returns "r" as a per-leaf tree exactly when the LARS
+    # family is active (structural check, so the gating predicate stays in
+    # one place — update_spec); scalars pass through untouched
+    r = s.get("r")
+    if r is not None and jax.tree.structure(r) == layout.treedef:
+        s["r"] = layout.row_scalars(r)
+    return s

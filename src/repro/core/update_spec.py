@@ -514,6 +514,7 @@ def run_update(
     comp_state: Tree,
     stage: StageFn = reference_stage,
     node_gaps=None,
+    scalars: dict | None = None,
 ):
     """Walk the spec's phases; returns ``(x, new_state, comp_state)``.
 
@@ -528,10 +529,17 @@ def run_update(
     state after each gossip round (:meth:`GossipChannel.node_gaps`); engines
     that know staleness out of band — the discrete-event simulator reading
     snapshot versions — pass it explicitly.  Ignored by the other specs.
+
+    ``scalars`` overrides the gradient-preprocessing scalars (``gs``, ``r``)
+    normally derived here by :func:`grad_scalars`.  The flat-plane path uses
+    it: per-leaf norms cannot be read off the packed buffers, so
+    :func:`repro.core.planes.plane_scalars` computes them on the original
+    trees (bit-identical to this default) and hands them in with the LARS
+    tree already converted to row-indexed columns.
     """
     lr = jnp.asarray(lr, jnp.float32)
     safe_lr = jnp.maximum(lr, 1e-12)
-    scalars = dict(grad_scalars(cfg, x, g))
+    scalars = dict(grad_scalars(cfg, x, g)) if scalars is None else dict(scalars)
     scalars["lr"] = lr
 
     env: dict[str, Tree] = {"x": x, "g": g}

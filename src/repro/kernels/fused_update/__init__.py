@@ -1,3 +1,17 @@
-from .ops import LANES, decentlam_update, fused_stage, make_stage
+from .ops import (
+    LANES,
+    decentlam_update,
+    fused_plane_stage,
+    fused_stage,
+    make_plane_stage,
+    make_stage,
+)
 
-__all__ = ["LANES", "decentlam_update", "fused_stage", "make_stage"]
+__all__ = [
+    "LANES",
+    "decentlam_update",
+    "fused_plane_stage",
+    "fused_stage",
+    "make_plane_stage",
+    "make_stage",
+]

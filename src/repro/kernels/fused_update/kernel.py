@@ -29,13 +29,23 @@ from jax.experimental.pallas import tpu as pltpu
 from ...core.update_spec import MathCtx, post_math, pre_math
 
 LANES = 1024
+ROW_COLS = 128  # lane width of a row-scalar operand (one VMEM tile column)
 
 _SDS_HAS_VMA = "vma" in inspect.signature(jax.ShapeDtypeStruct.__init__).parameters
 
 
-def _stage_body(s_ref, *refs, kind: str, op: str, ctx: MathCtx, names_in, names_out):
-    ins, outs = refs[: len(names_in)], refs[len(names_in) :]
+def _stage_body(
+    s_ref, *refs, kind: str, op: str, ctx: MathCtx, names_in, names_out, names_row=()
+):
+    nrow = len(names_row)
+    rows, ins = refs[:nrow], refs[nrow: nrow + len(names_in)]
+    outs = refs[nrow + len(names_in):]
     s = {"lr": s_ref[0], "gs": s_ref[1], "r": s_ref[2], "sg": s_ref[3]}
+    # row-indexed segment scalars (plane layout): a (block_rows, 1) column
+    # overrides the SMEM scalar and broadcasts across the lanes, giving each
+    # leaf's rows their own value inside the single whole-plane launch
+    for n, rref in zip(names_row, rows):
+        s[n] = rref[...][:, :1].astype(jnp.float32)
     vals = {n: r[...].astype(jnp.float32) for n, r in zip(names_in, ins)}
     math = pre_math if kind == "pre" else post_math
     res = math(op, ctx, s, **vals)
@@ -63,15 +73,28 @@ def fused_stage_kernel(
     *,
     block_rows: int = 64,
     interpret: bool = False,
+    row_scalars: dict[str, jax.Array] | None = None,  # each (rows, ROW_COLS)
 ):
-    """One fused elementwise stage over pre-tiled operands."""
+    """One fused elementwise stage over pre-tiled operands.
+
+    ``row_scalars`` carries per-row overrides of the SMEM stage scalars
+    (the plane layout's row-indexed segment scalars, e.g. the per-leaf
+    LARS trust ratio ``r``) as narrow ``(rows, ROW_COLS)`` f32 operands —
+    one VMEM tile column, ~1/8 of an operand's bandwidth, only present
+    when the feature needs it.
+    """
     names_in = tuple(inputs)
     names_out = tuple(out_dtypes)
+    row_scalars = row_scalars or {}
+    names_row = tuple(row_scalars)
     first = inputs[names_in[0]]
     rows = first.shape[0]
-    assert rows % block_rows == 0, (rows, block_rows)
-    grid = (rows // block_rows,)
+    # blocks need not divide the rows: Pallas masks the boundary block
+    # (plane buffers carry no tail padding; the per-leaf path still
+    # pre-pads each leaf so its grid is exact)
+    grid = (-(-rows // block_rows),)
     bs = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    bs_row = pl.BlockSpec((block_rows, ROW_COLS), lambda i: (i, 0))
 
     # inside a check_vma shard_map (newer jax) the outputs must declare their
     # varying axes; they inherit the inputs' (elementwise kernel), and every
@@ -87,6 +110,7 @@ def fused_stage_kernel(
 
         scalars = _promote(scalars)
         inputs = {n: _promote(a) for n, a in inputs.items()}
+        row_scalars = {n: _promote(a) for n, a in row_scalars.items()}
 
     if _SDS_HAS_VMA:
         out_shape = [
@@ -99,14 +123,17 @@ def fused_stage_kernel(
         ]
 
     kern = functools.partial(
-        _stage_body, kind=kind, op=op, ctx=ctx, names_in=names_in, names_out=names_out
+        _stage_body, kind=kind, op=op, ctx=ctx, names_in=names_in,
+        names_out=names_out, names_row=names_row,
     )
     outs = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)] + [bs] * len(names_in),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        + [bs_row] * len(names_row)
+        + [bs] * len(names_in),
         out_specs=[bs] * len(names_out),
         out_shape=out_shape,
         interpret=interpret,
-    )(scalars, *inputs.values())
+    )(scalars, *row_scalars.values(), *inputs.values())
     return dict(zip(names_out, outs))

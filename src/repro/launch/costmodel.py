@@ -167,6 +167,27 @@ def _sub_jaxprs(eqn):
     return out
 
 
+def count_primitive(jaxpr, name: str) -> int:
+    """Static occurrence count of primitive ``name`` in a (closed) jaxpr.
+
+    Walks nested call / control-flow jaxprs via :func:`_sub_jaxprs`; every
+    ``cond``/``switch`` branch is counted, so for programs with divergent
+    branches the result is an upper bound per executed step (the launch /
+    collective accounting in benchmarks uses period-1 topologies where the
+    count is exact).  This is how the flat-plane claims are *measured*:
+    ``pallas_call`` occurrences = kernel launches per step, ``ppermute``
+    occurrences = collectives per step.
+    """
+    j = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0
+    for eqn in j.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        for sub, _ in _sub_jaxprs(eqn):
+            total += count_primitive(sub, name)
+    return total
+
+
 def analyze_jaxpr(jaxpr, axis_sizes: dict[str, int]) -> Costs:
     total = Costs()
     for eqn in jaxpr.eqns:

@@ -56,6 +56,15 @@ def _parse():
     p.add_argument("--heterogeneity", type=float, default=0.2)
     p.add_argument("--grad-accum", dest="grad_accum", type=int, default=1)
     p.add_argument("--fused-update", dest="fused_update", action="store_true")
+    p.add_argument("--flat-planes", dest="flat_planes", action="store_true",
+                   help="pack the update tail + gossip into dtype-bucketed "
+                   "plane buffers (one launch per stage, one collective per "
+                   "bucket per edge class); requires --tp 1")
+    p.add_argument("--fused-impl", dest="fused_impl", default="ref",
+                   choices=["ref", "pallas", "pallas_interpret"])
+    p.add_argument("--measure-json", dest="measure_json", default=None,
+                   help="write {'measured_step_s': ...} after the run — the "
+                   "calibration input of sim.wallclock.calibrate_from_dryrun")
     p.add_argument("--ckpt-dir", dest="ckpt_dir", default=None)
     p.add_argument("--ckpt-every", dest="ckpt_every", type=int, default=100)
     p.add_argument("--resume", action="store_true")
@@ -93,7 +102,12 @@ def main() -> None:
         save_checkpoint,
     )
     from ..train.step import TrainConfig, build_train_step
-    from ..train.train_state import ensure_channel_state, init_train_state
+    from ..train.train_state import (
+        ensure_channel_state,
+        init_train_state,
+        model_plane_layout,
+        reconcile_plane_state,
+    )
 
     n_devices = len(jax.devices())
     tp = args.tp
@@ -127,6 +141,8 @@ def main() -> None:
         ),
         runtime=RuntimeConfig(dtype=args.dtype, remat=False),
         fused_update=args.fused_update,
+        fused_impl=args.fused_impl,
+        flat_planes=args.flat_planes,
         track_consensus=args.track_consensus,
     )
 
@@ -142,21 +158,29 @@ def main() -> None:
         return step_fn, opt, channel, bshard
 
     step_fn, opt, channel, bshard = build(mesh, n_nodes)
+    layout = model_plane_layout(cfg, tp) if args.flat_planes else None
 
     if args.resume and args.ckpt_dir:
         host_state, manifest = restore_checkpoint(args.ckpt_dir)
         if jax.tree.leaves(host_state["params"])[0].shape[0] != n_nodes:
             print(f"elastic reshape {manifest.get('n_nodes')} -> {n_nodes}")
             host_state = elastic_reshape(host_state, n_nodes)
+        # checkpoints are interchangeable across --flat-planes: opt state
+        # packs/unpacks to match the step's layout (tp == 1 only)
+        if tp == 1:
+            host_state = reconcile_plane_state(
+                host_state, layout or model_plane_layout(cfg, tp),
+                args.flat_planes,
+            )
         # channel state (delay buffers, error feedback, telemetry) resumes
         # when shapes match; anything missing/invalidated re-inits to zeros
-        state = ensure_channel_state(host_state, channel, n_nodes)
+        state = ensure_channel_state(host_state, channel, n_nodes, layout)
         start = int(state["step"])
         print(f"resumed from step {start}")
     else:
         state = init_train_state(
             jax.random.key(0), cfg, opt, n_nodes, tp, mesh=mesh,
-            node_axes=("data",), channel=channel,
+            node_axes=("data",), channel=channel, plane_layout=layout,
         )
         start = 0
 
@@ -173,10 +197,14 @@ def main() -> None:
     import time
 
     t0 = time.time()
+    t_warm = None  # set after step 0 so measured_step_s excludes XLA compile
     it = prefetch_to_device(batch_fn, bshard, args.steps - start)
     for k, batch in enumerate(it):
         step = start + k
         state, metrics = step_fn(state, batch)
+        if k == 0:
+            jax.block_until_ready(metrics["loss"])
+            t_warm = time.time()
         if step % args.log_every == 0 or step == args.steps - 1:
             msg = (f"step {step:5d} loss {float(metrics['loss']):.4f} "
                    f"lr {float(metrics['lr']):.2e}")
@@ -196,7 +224,7 @@ def main() -> None:
             mesh2 = jax.make_mesh((new_n, tp), ("data", "model"),
                                   devices=jax.devices()[: new_n * tp])
             step_fn, opt, channel, bshard = build(mesh2, new_n)
-            host = ensure_channel_state(host, channel, new_n)
+            host = ensure_channel_state(host, channel, new_n, layout)
             state = jax.tree.map(jnp.asarray, host)
             data = SyntheticLM(SyntheticLMConfig(
                 vocab_size=cfg.vocab_size, seq_len=args.seq_len,
@@ -221,6 +249,25 @@ def main() -> None:
     dt = time.time() - t0
     print(f"done: {args.steps - start} steps in {dt:.1f}s "
           f"({(args.steps - start) / dt:.2f} steps/s)")
+    if args.measure_json:
+        import json
+        n_steps = args.steps - start
+        if t_warm is not None and n_steps > 1:
+            # steady-state price: exclude step 0 (XLA compile dominates it)
+            measured = (time.time() - t_warm) / (n_steps - 1)
+            warm_steps = n_steps - 1
+        else:
+            measured = dt / max(1, n_steps)
+            warm_steps = n_steps
+        with open(args.measure_json, "w") as f:
+            json.dump({
+                "measured_step_s": measured,
+                "steps": warm_steps,
+                "n_nodes": n_nodes,
+                "algorithm": args.algorithm,
+                "arch": args.arch or args.preset,
+            }, f, indent=2)
+        print(f"wrote {args.measure_json} (measured_step_s={measured:.4g})")
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, jax.device_get(state),
                         metadata={"n_nodes": n_nodes,

@@ -30,6 +30,7 @@ from .metrics import SimResult, effective_batch_fraction, is_diverged
 from .runner import simulate
 from .wallclock import (
     MIN_STEP_S,
+    calibrate_from_dryrun,
     payload_bytes,
     project_wallclock,
     step_costs,
@@ -49,6 +50,7 @@ __all__ = [
     "Scenario",
     "SimResult",
     "Slowdown",
+    "calibrate_from_dryrun",
     "delay_matrix",
     "effective_batch_fraction",
     "get_scenario",

@@ -87,7 +87,8 @@ def _mean_rows(tree: Tree, idx: list[int]) -> Tree:
 
 
 def _make_step(
-    opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn
+    opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn,
+    compression: str | None = None,
 ) -> Callable:
     """The jitted stacked one-step — same computation as ``run_stacked``.
 
@@ -96,14 +97,21 @@ def _make_step(
     staleness out of band (mailbox versions), so it hands the gaps to the
     step explicitly rather than through a delayed channel — staleness-aware
     algorithms (``decentlam-sa``) damp on it, everything else ignores it.
+
+    ``compression`` encodes/decodes every node's payload around the mix
+    (the stacked analogue of wire compression); the channel state —
+    error-feedback residuals for top-k — is threaded per node exactly like
+    the optimizer state, so EF x staleness interactions are simulated
+    faithfully.  ``None`` keeps the channel stateless and the signature's
+    ``chstate`` an empty dict (bit-exact with the pre-compression engine).
     """
-    channel = StackedChannel(topology)
+    channel = StackedChannel(topology, compression=compression)
     mean = make_stacked_mean(topology.n)
 
     @jax.jit
-    def one(params, state, step, node_gaps):
+    def one(params, state, chstate, step, node_gaps):
         grads = grad_fn(params, step)
-        params, state, _ = opt.step(
+        params, state, chstate = opt.step(
             params,
             grads,
             state,
@@ -111,11 +119,12 @@ def _make_step(
             step_idx=step,
             gossip=channel,
             mean=mean,
+            comp_state=chstate,
             node_gaps=node_gaps,
         )
-        return params, state
+        return params, state, chstate
 
-    return one
+    return one, channel
 
 
 def _in_neighbors(topology: Topology) -> list[set[int]]:
@@ -144,6 +153,7 @@ def simulate(
     record_dt: float = 0.0,
     metric_fn: Callable[[Tree], Any] | None = None,
     restrict: Callable[[tuple[int, ...]], GradFn] | None = None,
+    compression: str | None = None,
 ) -> SimResult:
     """Run one scenario; terminates when every alive node has completed
     ``n_steps`` steps (fast nodes may have done more).
@@ -153,6 +163,14 @@ def simulate(
     whose failures exceed the reroute budget.  ``record_dt`` > 0 records a
     trace entry (time, step range, consensus, metric) each time simulated
     time crosses a multiple of it.
+
+    ``compression`` applies a message compressor (``bf16`` / ``int8`` /
+    ``topk:<rate>``) to every gossip payload in either engine — the
+    scenario x compression sweep of ``benchmarks/sim_scenarios.py``.  For
+    top-k the error-feedback residuals are per-node channel state, carried
+    in the virtual stacked step and snapshotted through the mailboxes like
+    the optimizer state.  Fail-stop recovery and rejoin zero the residuals
+    of the affected nodes (checkpoint-restore semantics).
     """
     if scenario is None:
         scenario = get_scenario("homogeneous", n, n_steps)
@@ -165,15 +183,17 @@ def simulate(
         return _run_delayed_engine(
             opt, topology_name, n, params0, grad_fn, lr_fn, scenario,
             n_steps=n_steps, record_dt=record_dt, metric_fn=metric_fn,
+            compression=compression,
         )
 
     base_topology = build_topology(topology_name, n)
     topo = base_topology
-    one = _make_step(opt, topo, grad_fn, lr_fn)
+    one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
     nbrs = _in_neighbors(topo)
 
     x = params0
     state = opt.init(params0)
+    chstate = channel.init(params0)  # {} unless the compressor is stateful
     n_cur = n
     steps = np.zeros(n, dtype=np.int64)
     stall = np.zeros(n, dtype=np.float64)
@@ -186,7 +206,8 @@ def simulate(
     recovery_mode = "none"
     rescaled = False
 
-    # mailbox[j]: list of (step, pub_time, x_row, state_row), oldest first
+    # mailbox[j]: list of (step, pub_time, x_row, state_row, chstate_row),
+    # oldest first
     depth = scenario.max_staleness + 4
     mailbox: list[list] = [[] for _ in range(n)]
     events_log: list[dict] = []
@@ -194,7 +215,9 @@ def simulate(
     next_record = record_dt if record_dt > 0 else None
 
     def publish(i: int, t: float) -> None:
-        mailbox[i].append((int(steps[i]), t, _row(x, i), _row(state, i)))
+        mailbox[i].append(
+            (int(steps[i]), t, _row(x, i), _row(state, i), _row(chstate, i))
+        )
         if len(mailbox[i]) > depth:
             mailbox[i].pop(0)
 
@@ -269,8 +292,8 @@ def simulate(
     ev_ptr = 0
 
     def apply_events(t: float) -> None:
-        nonlocal ev_ptr, topo, one, nbrs, dead, recovery_mode, rescaled
-        nonlocal x, state, n_cur, steps, stall, speed_scale, link_delay
+        nonlocal ev_ptr, topo, one, channel, nbrs, dead, recovery_mode, rescaled
+        nonlocal x, state, chstate, n_cur, steps, stall, speed_scale, link_delay
         nonlocal rngs, durations, mailbox, grad_fn
         while ev_ptr < len(pending):
             ev = pending[ev_ptr]
@@ -306,7 +329,7 @@ def simulate(
                 )
                 if plan.mode == "reroute":
                     topo = plan.topology
-                    one = _make_step(opt, topo, grad_fn, lr_fn)
+                    one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
                     nbrs = _in_neighbors(topo)
                 else:
                     _rescale(plan, t)
@@ -323,20 +346,27 @@ def simulate(
                     dead.discard(i)
                     x = _set_row(x, i, xbar)
                     state = _set_row(state, i, sbar)
+                    # error-feedback residuals do not survive re-entry: the
+                    # rejoining node starts from the consensus average with
+                    # a fresh (zero) channel row
+                    chstate = _set_row(
+                        chstate, i, jax.tree.map(jnp.zeros_like, _row(chstate, i))
+                    )
                     steps[i] = sync_step
                     # backfill the consensus row under every version a lagging
                     # reader may request, so the version cap never has to fall
                     # back to a future snapshot (the SSP read invariant holds
                     # across re-entry)
                     row_x, row_s = _row(x, i), _row(state, i)
+                    row_c = _row(chstate, i)
                     mailbox[i] = [
-                        (v, t, row_x, row_s)
+                        (v, t, row_x, row_s, row_c)
                         for v in range(max(0, min(min_alive, sync_step)), sync_step + 1)
                     ]
                 plan = plan_recovery(topology_name, n_cur, sorted(dead)) if dead else None
                 topo = plan.topology if plan else base_topology
                 recovery_mode = plan.mode if plan else "reroute"
-                one = _make_step(opt, topo, grad_fn, lr_fn)
+                one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
                 nbrs = _in_neighbors(topo)
                 events_log.append({"t": t, "event": f"rejoin{tuple(back)}"})
                 for i in back:
@@ -344,9 +374,9 @@ def simulate(
             release_waiting(t)
 
     def _rescale(plan, t: float) -> None:
-        nonlocal topo, one, nbrs, dead, rescaled, x, state, n_cur, steps
-        nonlocal stall, speed_scale, link_delay, rngs, durations, mailbox, grad_fn
-        nonlocal kept_indices
+        nonlocal topo, one, channel, nbrs, dead, rescaled, x, state, chstate
+        nonlocal n_cur, steps, stall, speed_scale, link_delay, rngs, durations
+        nonlocal mailbox, grad_fn, kept_indices
         if restrict is None:
             raise ValueError(
                 f"scenario requires a rescale to n={plan.n_nodes} but no "
@@ -361,6 +391,11 @@ def simulate(
         sbar = _mean_rows(state, survivors)
         x = _stack_rows([xbar] * new_n)
         state = _stack_rows([sbar] * new_n)
+        # checkpoint-restore semantics: fresh (zero) channel state for the
+        # restarted cluster — buffered residuals are node-local and stale
+        chstate = jax.tree.map(
+            lambda a: jnp.zeros((new_n,) + a.shape[1:], a.dtype), chstate
+        )
         sync_step = int(steps[survivors].max())
         steps = np.full(new_n, sync_step, dtype=np.int64)
         stall = stall[kept].copy()
@@ -375,7 +410,7 @@ def simulate(
         kept_indices = tuple(kept_indices[i] for i in kept)
         grad_fn = restrict(kept_indices)
         topo = plan.topology
-        one = _make_step(opt, topo, grad_fn, lr_fn)
+        one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
         nbrs = _in_neighbors(topo)
         mailbox[:] = [[] for _ in range(new_n)]
         waiting.clear()
@@ -407,20 +442,23 @@ def simulate(
 
         # assemble the virtual stacked state as seen from node i
         st = start_time[i]
-        rows_x, rows_s = [], []
+        rows_x, rows_s, rows_c = [], [], []
         vers = np.zeros(n_cur, dtype=np.int64)
         for j in range(n_cur):
             if j == i:
                 rows_x.append(_row(x, i))
                 rows_s.append(_row(state, i))
+                rows_c.append(_row(chstate, i))
                 vers[j] = steps[i]
             else:
                 snap = visible(j, st - link_delay[j, i], int(steps[i]))
                 rows_x.append(snap[2])
                 rows_s.append(snap[3])
+                rows_c.append(snap[4])
                 vers[j] = snap[0]
         xv = _stack_rows(rows_x)
         sv = _stack_rows(rows_s)
+        cv = _stack_rows(rows_c)
 
         # per-node version gap of this virtual state: the worst incident-
         # edge gap, both directions — snapshots this row consumed stale
@@ -440,9 +478,12 @@ def simulate(
                         gaps[r], vers[r] - vers[j], int(steps[j]) - 1 - vers[r]
                     )
 
-        pv, nv = one(xv, sv, jnp.int32(int(steps[i])), jnp.asarray(gaps, jnp.int32))
+        pv, nv, ncv = one(
+            xv, sv, cv, jnp.int32(int(steps[i])), jnp.asarray(gaps, jnp.int32)
+        )
         x = _set_row(x, i, _row(pv, i))
         state = _set_row(state, i, _row(nv, i))
+        chstate = _set_row(chstate, i, _row(ncv, i))
         steps[i] += 1
         publish(i, t)
 
@@ -500,12 +541,13 @@ def simulate(
 
 def _run_delayed_engine(
     opt, topology_name, n, params0, grad_fn, lr_fn, scenario,
-    *, n_steps, record_dt, metric_fn,
+    *, n_steps, record_dt, metric_fn, compression=None,
 ) -> SimResult:
     """Synchronous bounded-staleness rounds (``engine="delayed"``)."""
     topology = build_topology(topology_name, n)
     channel = DelayedStackedChannel(
-        topology, scenario.gossip_delay, calls_per_step=opt.gossips_per_step
+        topology, scenario.gossip_delay, calls_per_step=opt.gossips_per_step,
+        compression=compression,
     )
     mean = make_stacked_mean(n)
     chstate = channel.init(params0)

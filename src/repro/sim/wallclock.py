@@ -49,6 +49,7 @@ __all__ = [
     "payload_bytes",
     "step_costs",
     "step_time_seconds",
+    "calibrate_from_dryrun",
     "project_wallclock",
 ]
 
@@ -135,6 +136,40 @@ def step_time_seconds(
     }
 
 
+def calibrate_from_dryrun(measured) -> float:
+    """Per-step seconds measured by a real ``launch.train`` run.
+
+    Accepts, in order of convenience:
+
+    * a float — seconds per step, straight from a stopwatch;
+    * a dict — the ``--measure-json`` artifact ``launch.train`` writes
+      (``{"measured_step_s": ...}``);
+    * a path to that JSON file.
+
+    Returns the validated ``measured_step_s`` to pass to
+    :func:`project_wallclock` so scenario throughput projections carry
+    *real* units for the measured config instead of roofline estimates —
+    the measured price subsumes the launch/dispatch floor, so
+    ``min_step_s`` no longer applies when it is used.
+    """
+    if isinstance(measured, str):
+        import json
+
+        with open(measured) as f:
+            measured = json.load(f)
+    if isinstance(measured, dict):
+        if "measured_step_s" not in measured:
+            raise ValueError(
+                "calibration dict must carry 'measured_step_s' (the "
+                "launch.train --measure-json artifact)"
+            )
+        measured = measured["measured_step_s"]
+    measured = float(measured)
+    if not (measured > 0.0 and np.isfinite(measured)):
+        raise ValueError(f"measured_step_s must be finite and positive: {measured}")
+    return measured
+
+
 def project_wallclock(
     result: SimResult,
     topology: Topology,
@@ -144,6 +179,7 @@ def project_wallclock(
     compression: str | None = None,
     hw: HW = HW(),
     min_step_s: float = MIN_STEP_S,
+    measured_step_s: float | None = None,
 ) -> dict[str, float]:
     """Quality-AND-speed report for a finished scenario run.
 
@@ -151,6 +187,11 @@ def project_wallclock(
     jaxpr cost model; otherwise the step is priced on gossip bandwidth
     alone (payload from the result's parameter shapes).  ``min_step_s``
     floors the per-step price (see :func:`step_time_seconds`).
+
+    ``measured_step_s`` (see :func:`calibrate_from_dryrun`) replaces the
+    roofline price outright: the nominal step is pinned to the measured
+    wall-clock of a real ``launch.train`` run, the roofline terms stay in
+    the report for reference, and ``dominant`` becomes ``"measured"``.
     """
     payload = payload_bytes(result.params)
     kw: dict[str, float] = {}
@@ -168,6 +209,13 @@ def project_wallclock(
         gossips_per_step=gossips, compression=compression, hw=hw,
         min_step_s=min_step_s, **kw,
     )
+    if measured_step_s is not None:
+        price = {
+            **price,
+            "step_time_s": float(measured_step_s),
+            "dominant": "measured",
+            "measured_step_s": float(measured_step_s),
+        }
     total_steps = int(result.steps[result.alive].sum())
     wallclock_s = result.sim_time * price["step_time_s"]
     return {

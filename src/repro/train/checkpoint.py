@@ -54,6 +54,13 @@ def _flatten(tree: Tree) -> dict[str, np.ndarray]:
 def _unflatten(flat: dict[str, np.ndarray]) -> Tree:
     tree: Tree = {}
     for key, val in flat.items():
+        if val.dtype == np.dtype("V2"):
+            # numpy round-trips bfloat16 through npz as an opaque 2-byte
+            # void; reinterpret (bf16 is the only 2-byte void we store —
+            # flat-plane param buffers keep their bucket dtype)
+            import ml_dtypes
+
+            val = val.view(ml_dtypes.bfloat16)
         parts = key.split("/")
         node = tree
         for p in parts[:-1]:

@@ -29,13 +29,14 @@ from ..compat import LEGACY_SHARD_MAP, shard_map
 from ..configs.base import ModelConfig
 from ..core.gossip import GossipChannel, build_channel, make_psum_mean
 from ..core.optimizers import OptimizerConfig, make_optimizer
+from ..core.planes import plane_scalars
 from ..core.schedules import ScheduleConfig, build_schedule
 from ..core.topology import build_topology
 from ..core.update_spec import run_update, update_spec
-from ..kernels.fused_update import make_stage
+from ..kernels.fused_update import make_plane_stage, make_stage
 from ..models import transformer as T
 from ..models.layers import TPContext
-from .train_state import stacked_state_specs
+from .train_state import model_plane_layout, stacked_state_specs
 
 Tree = Any
 
@@ -61,6 +62,11 @@ class TrainConfig:
     runtime: T.RuntimeConfig = T.RuntimeConfig()
     fused_update: bool = False
     fused_impl: str = "ref"  # ref | pallas | pallas_interpret
+    # flat fast path: pack the whole update tail and the gossip payload into
+    # dtype-bucketed plane buffers (one kernel launch per stage per bucket,
+    # one collective per bucket per edge class); optimizer + channel hot
+    # state stays in plane form across steps.  Requires tp == 1.
+    flat_planes: bool = False
     gossip_serialize: bool = True  # one recv buffer live at a time (§Perf A-3)
     track_consensus: bool = False
 
@@ -162,6 +168,10 @@ def build_train_step(
     opt = make_optimizer(tcfg.opt_config())
     lr_fn = build_schedule(tcfg.schedule)
 
+    # flat fast path: one static plane layout shared by the step, the state
+    # initializer and the resume path (model_plane_layout rejects tp > 1)
+    layout = model_plane_layout(cfg, tp) if tcfg.flat_planes else None
+
     gossip = build_gossip_channel(
         tcfg, topology, node_axes, gossips_per_step=opt.gossips_per_step
     )
@@ -247,7 +257,33 @@ def build_train_step(
         grads, loss, metrics = grads_of(params, batch)
         grads = reduce_replicated_grads(grads)
 
-        if tcfg.fused_update:
+        if tcfg.flat_planes:
+            # flat fast path: pack once, run the whole tail + gossip on
+            # dtype-bucketed plane buffers (O(buckets x stages) launches,
+            # O(buckets x edge-classes) collectives), unpack the new
+            # params for the next forward.  Optimizer + channel state stay
+            # in plane form across steps; the clip/LARS scalars come from
+            # the original trees so they match the per-leaf path bit-for-bit.
+            ocfg = tcfg.opt_config()
+            g32 = jax.tree.map(lambda gg: gg.astype(jnp.float32), grads)
+            new_x_pl, new_opt, comp_state = run_update(
+                update_spec(ocfg),
+                ocfg,
+                x=layout.pack(params),
+                g=layout.pack(g32, dtype=jnp.float32),
+                state=opt_state,
+                lr=lr,
+                step_idx=step_idx,
+                gossip=gossip,
+                mean=mean,
+                comp_state=comp_state,
+                stage=make_plane_stage(
+                    tcfg.fused_impl if tcfg.fused_update else "ref"
+                ),
+                scalars=plane_scalars(ocfg, layout, params, g32),
+            )
+            new_params = layout.unpack(new_x_pl, like=params)
+        elif tcfg.fused_update:
             # fused fast path (any algorithm): the spec's phases run with
             # the Pallas stage executor — payload build and recombination
             # are one HBM pass each, with the gossip in between
@@ -296,7 +332,9 @@ def build_train_step(
         }
         return new_state, out_metrics
 
-    sspecs = stacked_state_specs(cfg, opt, tp, node_axes, model_axis, gossip)
+    sspecs = stacked_state_specs(
+        cfg, opt, tp, node_axes, model_axis, gossip, layout
+    )
     bspecs = batch_specs(cfg, node_axes)
     mspecs = {"loss": P(), "lr": P(), "xent": P(),
               "moe_load_balance": P(), "moe_router_z": P()}

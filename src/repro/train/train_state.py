@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..configs.base import ModelConfig
 from ..core.gossip import GossipChannel
 from ..core.optimizers import Optimizer
+from ..core.planes import PlaneLayout
 from ..models import transformer as T
 
 Tree = Any
@@ -33,7 +34,37 @@ __all__ = [
     "init_train_state",
     "abstract_train_state",
     "ensure_channel_state",
+    "model_plane_layout",
+    "reconcile_plane_state",
 ]
+
+
+def model_plane_layout(cfg: ModelConfig, tp: int = 1) -> PlaneLayout:
+    """The flat-plane layout of this model's per-node parameter tree.
+
+    ``TrainConfig(flat_planes=True)`` keeps the optimizer and channel hot
+    state packed in this layout across steps; the step, the state
+    initializer and the resume path must all derive it from the same
+    template, which this helper pins (abstract — no allocation).  Flat
+    planes currently require ``tp == 1`` (with model parallelism the
+    local leaf shards would need their own layout per mesh column; the
+    per-leaf path remains the tp > 1 production path).
+    """
+    if tp != 1:
+        raise NotImplementedError(
+            "flat_planes requires tp == 1 for now (plane layout x model "
+            "parallelism is a ROADMAP follow-up); use the per-leaf path"
+        )
+    abs_params = jax.eval_shape(
+        lambda k: T.init_params(k, cfg, tp), jax.random.key(0)
+    )
+    return PlaneLayout.build(abs_params)
+
+
+def _plane_pspec(layout: PlaneLayout) -> Tree:
+    """Per-node PartitionSpec tree of a plane dict: each bucket is one
+    unsharded (rows, LANES) buffer (tp == 1 by construction)."""
+    return {key: P(None, None) for key in layout.segments}
 
 
 def _prepend_axis(spec_tree: Tree, axes) -> Tree:
@@ -49,14 +80,22 @@ def stacked_param_specs(cfg: ModelConfig, tp: int, node_axes, model_axis="model"
 def stacked_state_specs(
     cfg: ModelConfig, opt: Optimizer, tp: int, node_axes, model_axis="model",
     channel: GossipChannel | None = None,
+    plane_layout: PlaneLayout | None = None,
 ) -> Tree:
-    """Specs for the full TrainState pytree (params + opt + channel state)."""
+    """Specs for the full TrainState pytree (params + opt + channel state).
+
+    With ``plane_layout`` (the flat fast path), the optimizer and channel
+    buckets hold plane buffers — one ``(rows, LANES)`` leaf per dtype
+    bucket — while the parameters stay in tree form (the forward pass
+    consumes them by name).
+    """
     from ..core.optimizers import state_keys
 
     pspec = T.param_specs(cfg, tp, model_axis)
-    # every optimizer state bucket mirrors the param tree
-    opt_state_spec: Tree = {k: pspec for k in state_keys(opt.config)}
-    channel_spec = channel.state_specs(pspec) if channel is not None else {}
+    hot_spec = _plane_pspec(plane_layout) if plane_layout is not None else pspec
+    # every optimizer state bucket mirrors the param tree (or its planes)
+    opt_state_spec: Tree = {k: hot_spec for k in state_keys(opt.config)}
+    channel_spec = channel.state_specs(hot_spec) if channel is not None else {}
     return {
         "step": P(),
         "params": _prepend_axis(pspec, node_axes),
@@ -71,8 +110,15 @@ def make_train_state_fn(
     n_nodes: int,
     tp: int,
     channel: GossipChannel | None = None,
+    plane_layout: PlaneLayout | None = None,
 ):
-    """Pure init function (jit-able with out_shardings)."""
+    """Pure init function (jit-able with out_shardings).
+
+    With ``plane_layout``, the optimizer state buckets and the channel
+    template are packed into f32 planes here — this is the *only* pack the
+    hot state ever pays outside a checkpoint boundary; the train step keeps
+    it in plane form from then on.
+    """
 
     def init_fn(key):
         params = T.init_params(key, cfg, tp)
@@ -81,9 +127,17 @@ def make_train_state_fn(
             return jnp.broadcast_to(x[None], (n_nodes,) + x.shape)
 
         sp = jax.tree.map(stack, params)
-        opt_state = jax.tree.map(stack, opt.init(params))
+        opt_state = opt.init(params)
+        chan_template: Tree = params
+        if plane_layout is not None:
+            opt_state = {
+                k: plane_layout.pack(v, dtype=jnp.float32)
+                for k, v in opt_state.items()
+            }
+            chan_template = plane_layout.pack(params, dtype=jnp.float32)
+        opt_state = jax.tree.map(stack, opt_state)
         chan = (
-            jax.tree.map(stack, channel.init(params))
+            jax.tree.map(stack, channel.init(chan_template))
             if channel is not None
             else {}
         )
@@ -108,11 +162,14 @@ def init_train_state(
     node_axes=None,
     model_axis: str = "model",
     channel: GossipChannel | None = None,
+    plane_layout: PlaneLayout | None = None,
 ):
-    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, channel)
+    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, channel, plane_layout)
     if mesh is None:
         return init_fn(key)
-    specs = stacked_state_specs(cfg, opt, tp, node_axes, model_axis, channel)
+    specs = stacked_state_specs(
+        cfg, opt, tp, node_axes, model_axis, channel, plane_layout
+    )
     shardings = jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs, is_leaf=lambda x: isinstance(x, P)
     )
@@ -143,7 +200,12 @@ def _subtree_matches(abstract: Tree, old: Tree) -> bool:
     )
 
 
-def ensure_channel_state(state: Tree, channel: GossipChannel | None, n_nodes: int) -> Tree:
+def ensure_channel_state(
+    state: Tree,
+    channel: GossipChannel | None,
+    n_nodes: int,
+    plane_layout: PlaneLayout | None = None,
+) -> Tree:
     """Reconcile a restored TrainState's ``"channel"`` bucket with the
     current channel's structure.
 
@@ -162,7 +224,19 @@ def ensure_channel_state(state: Tree, channel: GossipChannel | None, n_nodes: in
     """
     if channel is None:
         return {**state, "channel": {}}
-    template = jax.eval_shape(lambda p: jax.tree.map(lambda x: x[0], p), state["params"])
+    if plane_layout is not None:
+        # flat fast path: the channel state lives in plane layout, so the
+        # expected structure comes from the packed f32 payload template
+        template = jax.eval_shape(
+            lambda p: plane_layout.pack(
+                jax.tree.map(lambda x: x[0], p), dtype=jnp.float32
+            ),
+            state["params"],
+        )
+    else:
+        template = jax.eval_shape(
+            lambda p: jax.tree.map(lambda x: x[0], p), state["params"]
+        )
     abstract = jax.eval_shape(
         lambda t: jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape),
@@ -193,10 +267,42 @@ def ensure_channel_state(state: Tree, channel: GossipChannel | None, n_nodes: in
     return {**state, "channel": merged}
 
 
+def reconcile_plane_state(
+    state: Tree, plane_layout: PlaneLayout, flat_planes: bool
+) -> Tree:
+    """Convert a restored TrainState's optimizer bucket between tree and
+    plane form, so checkpoints are interchangeable across the
+    ``flat_planes`` flag.
+
+    A plane-form bucket is recognized by its top-level keys being the
+    layout's dtype-bucket names (parameter trees never use dtype names as
+    top-level keys).  Channel state is *not* converted — its structure is
+    transport-internal (ring buffers sized by the payload), so a
+    cross-format resume re-initializes it through
+    :func:`ensure_channel_state`, exactly like any other structural
+    change.  All optimizer buckets are f32 by construction, packed and
+    unpacked with the stacked node axis preserved.
+    """
+    if "opt" not in state:
+        return state
+    buckets = set(plane_layout.segments)
+    new_opt: Tree = {}
+    for k, v in state["opt"].items():
+        is_plane = isinstance(v, dict) and set(v) == buckets
+        if flat_planes and not is_plane:
+            new_opt[k] = plane_layout.pack(v, dtype=jnp.float32, leading=1)
+        elif not flat_planes and is_plane:
+            new_opt[k] = plane_layout.unpack(v, dtype=jnp.float32, leading=1)
+        else:
+            new_opt[k] = v
+    return {**state, "opt": new_opt}
+
+
 def abstract_train_state(
     cfg: ModelConfig, opt: Optimizer, n_nodes: int, tp: int,
     channel: GossipChannel | None = None,
+    plane_layout: PlaneLayout | None = None,
 ):
     """ShapeDtypeStruct pytree of the TrainState (dry-run input stand-in)."""
-    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, channel)
+    init_fn = make_train_state_fn(cfg, opt, n_nodes, tp, channel, plane_layout)
     return jax.eval_shape(init_fn, jax.random.key(0))

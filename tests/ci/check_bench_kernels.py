@@ -1,0 +1,140 @@
+"""CI gate for BENCH_kernels.json (fused-tail + flat-plane microbenchmarks).
+
+Usage::
+
+    python tests/ci/check_bench_kernels.py BENCH_kernels.json
+
+Validates the machine-readable invariants the kernel subsystems promise
+(ISSUE 1 + ISSUE 5 acceptance criteria):
+
+* every algorithm's fused tail is projected no slower than the unfused
+  per-op execution (``speedup >= 1.0`` — the roofline at measured
+  bandwidth; a regression here means the stage plan grew redundant
+  passes);
+* the tree-shaped workload ran for every algorithm and its **launch
+  counts are exactly structural**: the per-leaf path issues
+  ``leaves x stages`` ``pallas_call``s and the flat-plane path
+  ``dtype-buckets x stages`` — O(stages), independent of the tree — both
+  counted from the traced jaxpr, not estimated;
+* collectives collapse the same way: per-leaf ``leaves x edge-classes x
+  gossips`` vs plane ``buckets x edge-classes x gossips`` (the analytic
+  ppermute-path count; the distributed tier cross-checks it against
+  jaxpr-counted ppermutes on a real mesh);
+* wall-clock backstop: the plane path's *aggregate* time over the timed
+  tails (dispatched per-leaf baseline — the accelerator launch pattern)
+  is within ``PLANE_AGG_SLACK`` of the per-leaf path, and no single
+  algorithm regresses past ``PLANE_ALGO_SLACK``.  CPU timings of these
+  paths are noisy (the structural counts above are the real claim), so
+  this is a pathology detector — it catches the ~6-10x packing-emitter
+  cliffs this subsystem already hit once — not a microbenchmark gate.
+
+Exit code 1 on any violation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+MIN_FUSED_SPEEDUP = 1.0
+PLANE_AGG_SLACK = 1.25  # aggregate plane time may trail per-leaf by 25%
+PLANE_ALGO_SLACK = 2.0  # any single algorithm: hard 2x pathology bound
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+
+    errors: list[str] = []
+
+    tails = bench.get("optimizer_tails", {})
+    if not tails:
+        errors.append("missing optimizer_tails")
+    for algo, row in tails.items():
+        if row.get("speedup", 0.0) < MIN_FUSED_SPEEDUP:
+            errors.append(
+                f"tails/{algo}: fused speedup {row.get('speedup')} < "
+                f"{MIN_FUSED_SPEEDUP}"
+            )
+
+    tree = bench.get("tree_workload")
+    if not tree:
+        errors.append("missing tree_workload (flat-plane bench did not run)")
+        tree = {}
+    per_algo = tree.get("per_algorithm", {})
+    n_buckets = tree.get("n_buckets", 0)
+    n_leaves = tree.get("n_leaves", 0)
+    classes = tree.get("edge_classes", 0)
+    for algo in tails:
+        if algo not in per_algo:
+            errors.append(f"tree_workload: missing algorithm {algo!r}")
+    for algo, row in per_algo.items():
+        stages = row.get("stages", -1)
+        if row.get("launches_plane") != n_buckets * stages:
+            errors.append(
+                f"tree/{algo}: plane launches {row.get('launches_plane')} != "
+                f"buckets({n_buckets}) x stages({stages}) — the O(stages) "
+                "claim regressed"
+            )
+        if row.get("launches_per_leaf") != n_leaves * stages:
+            errors.append(
+                f"tree/{algo}: per-leaf launches {row.get('launches_per_leaf')}"
+                f" != leaves({n_leaves}) x stages({stages})"
+            )
+        gossips = row.get("gossips_per_step", 0)
+        if row.get("collectives_plane") != n_buckets * classes * gossips:
+            errors.append(
+                f"tree/{algo}: plane collectives {row.get('collectives_plane')}"
+                f" != buckets({n_buckets}) x classes({classes}) x "
+                f"gossips({gossips})"
+            )
+        if row.get("collectives_per_leaf") != n_leaves * classes * gossips:
+            errors.append(
+                f"tree/{algo}: per-leaf collectives "
+                f"{row.get('collectives_per_leaf')} != leaves({n_leaves}) x "
+                f"classes({classes}) x gossips({gossips})"
+            )
+
+    timed = [
+        (a, per_algo[a]) for a in tree.get("timed_algorithms", []) if a in per_algo
+    ]
+    for a in tree.get("timed_algorithms", []):
+        if a not in per_algo:
+            errors.append(f"tree_workload: timed algorithm {a!r} missing")
+    if not timed:
+        errors.append("tree_workload: no timed algorithms recorded")
+    else:
+        agg_leaf = sum(r.get("per_leaf_us", 0.0) for _, r in timed)
+        agg_plane = sum(r.get("plane_us", 1e30) for _, r in timed)
+        if agg_plane > agg_leaf * PLANE_AGG_SLACK:
+            errors.append(
+                f"tree_workload: aggregate plane time {agg_plane:.0f}us vs "
+                f"per-leaf {agg_leaf:.0f}us exceeds slack {PLANE_AGG_SLACK}"
+            )
+        for algo, r in timed:
+            if r.get("plane_us", 1e30) > r.get("per_leaf_us", 0.0) * PLANE_ALGO_SLACK:
+                errors.append(
+                    f"tree/{algo}: plane {r.get('plane_us')}us vs per-leaf "
+                    f"{r.get('per_leaf_us')}us exceeds the {PLANE_ALGO_SLACK}x "
+                    "pathology bound"
+                )
+
+    if errors:
+        print(f"KERNEL BENCH GATE: {len(errors)} violation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(
+        f"KERNEL BENCH GATE: ok ({len(tails)} fused tails, "
+        f"{len(per_algo)} tree rows, plane launches "
+        f"O(stages) x {n_buckets} bucket(s), aggregate plane speedup "
+        f"{tree.get('plane_speedup_aggregate')})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

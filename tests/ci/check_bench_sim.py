@@ -25,7 +25,12 @@ Validates the machine-readable invariants the simulator subsystem promises
 * the straggler costs throughput, not quality: nonzero stall time and a
   longer simulated horizon than homogeneous;
 * projected throughput is physically plausible: the wall-clock price of a
-  step is floored (no 1e9-steps/s toy-problem projections).
+  step is floored (no 1e9-steps/s toy-problem projections);
+* the scenario x compression sweep ran for every (scenario, algorithm,
+  compressor) cell with no divergence; bf16 is staleness-neutral (bias
+  within 1.5x of uncompressed in every cell); bf16- and int8-compressed
+  ``decentlam-sa`` still beats uncompressed DmSGD on every sweep scenario;
+  top-k+EF records its error-feedback x staleness interaction ratio.
 
 Exit code 1 on any violation.
 """
@@ -53,6 +58,9 @@ STALE_SCENARIOS = (
     "straggler_1slow_async",
 )
 ALGORITHMS = ("dsgd", "dmsgd", "decentlam", "decentlam-sa")
+SWEEP_COMPRESSIONS = ("bf16", "int8", "topk:0.1")
+SWEEP_SCENARIOS = ("homogeneous", "stale_gossip_k2", "straggler_1slow_async")
+SWEEP_ALGORITHMS = ("dmsgd", "decentlam-sa")
 
 # a physically plausible per-node step rate ceiling: the wallclock model
 # floors the step price at ~1 ms, so > ~1k steps/s/node means the floor
@@ -138,6 +146,47 @@ def main() -> int:
             errors.append("straggler_1slow: expected nonzero stall time")
         if not strag.get("sim_time", 0) > hom.get("sim_time", 0):
             errors.append("straggler_1slow: expected longer horizon than homogeneous")
+
+    # scenario x compression sweep
+    sweep = bench.get("compression_sweep", {})
+    for scen in SWEEP_SCENARIOS:
+        for algo in SWEEP_ALGORITHMS:
+            for comp in SWEEP_COMPRESSIONS:
+                cell = sweep.get(scen, {}).get(algo, {}).get(comp)
+                if cell is None:
+                    errors.append(f"sweep: missing cell {scen}/{algo}/{comp}")
+                    continue
+                if cell.get("diverged"):
+                    errors.append(f"sweep/{scen}/{algo}/{comp}: diverged")
+                    if cell.get("bias_vs_x_star") is not None:
+                        errors.append(
+                            f"sweep/{scen}/{algo}/{comp}: diverged but "
+                            "reports a bias (must be null)"
+                        )
+    comp_claims = bench.get("compression_claims", {})
+    for comp in SWEEP_COMPRESSIONS:
+        claim = comp_claims.get(comp)
+        if claim is None:
+            errors.append(f"compression_claims: missing {comp}")
+            continue
+        if not claim.get("converges_everywhere"):
+            errors.append(f"compression_claims/{comp}: divergence in the sweep")
+        if comp == "bf16" and not claim.get("staleness_neutral"):
+            errors.append("compression_claims/bf16: lost staleness neutrality")
+        if comp in ("bf16", "int8") and not claim.get(
+            "sa_no_worse_than_uncompressed_dmsgd"
+        ):
+            errors.append(
+                f"compression_claims/{comp}: compressed decentlam-sa no "
+                "longer beats uncompressed DmSGD"
+            )
+        if comp.startswith("topk"):
+            inter = claim.get("ef_staleness_interaction", {})
+            if not inter or any(v is None for v in inter.values()):
+                errors.append(
+                    "compression_claims/topk: EF x staleness interaction "
+                    "ratio not recorded"
+                )
 
     n_nodes = bench.get("config", {}).get("n", 0)
     for name, algos in scenarios.items():

@@ -1,0 +1,415 @@
+"""Flat parameter planes: layout, parity, launch counts, state round-trips.
+
+The tentpole claims pinned here (fast tier; the shard_map side lives in
+tests/test_distributed.py::test_flat_planes_shard_map_parity_and_collective_count):
+
+* pack/unpack is a lossless round trip for mixed-dtype trees, per-node and
+  stacked, and both pack lowerings produce identical buffers;
+* the plane path is **bit-exact** with the per-leaf path for all 11
+  algorithms — on the stacked reference executor (real gossip channel) and
+  on the Pallas stage executor (interpret mode), including LARS row
+  scalars, grad clip, weight decay and staleness damping;
+* the plane Pallas path issues exactly O(dtype-buckets x stages)
+  ``pallas_call``s where the per-leaf path issues O(leaves x stages) —
+  counted from the traced jaxpr;
+* plane-layout channel state (delay ring buffers, error feedback)
+  checkpoints and resumes bit-exactly, and ``reconcile_plane_state``
+  converts optimizer state across the ``flat_planes`` flag.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StackedChannel, build_topology, make_stacked_mean
+from repro.core.gossip import DelayedStackedChannel
+from repro.core.optimizers import ALGORITHMS, OptimizerConfig, make_optimizer
+from repro.core.planes import LANES, PlaneLayout, plane_scalars
+from repro.core.update_spec import run_update, stage_plan, update_spec
+from repro.kernels.fused_update import make_plane_stage, make_stage
+from repro.launch.costmodel import count_primitive
+
+RNG = np.random.default_rng(11)
+
+
+def _tmpl():
+    return {
+        "w1": jnp.asarray(RNG.standard_normal((13, 7)), jnp.float32),
+        "w2": jnp.asarray(RNG.standard_normal((2000,)), jnp.bfloat16),
+        "emb": jnp.asarray(RNG.standard_normal((40, 33)), jnp.bfloat16),
+        "ln": jnp.asarray(RNG.standard_normal((9,)), jnp.float32),
+        "b": jnp.asarray(RNG.standard_normal(()), jnp.float32),
+    }
+
+
+def _rand_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda a: jnp.asarray(
+            RNG.standard_normal(a.shape), dtype if dtype is not None else a.dtype
+        ),
+        tree,
+    )
+
+
+def _tree_equal(a, b) -> bool:
+    return all(
+        jax.tree.leaves(jax.tree.map(lambda p, q: bool(jnp.array_equal(p, q)), a, b))
+    )
+
+
+# ---------------------------------------------------------------------------
+# layout mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_pack_unpack_roundtrip_mixed_dtype():
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    assert set(lay.segments) == {"float32", "bfloat16"}
+    planes = lay.pack(tmpl)
+    for key, buf in planes.items():
+        assert buf.shape == (lay.rows[key], LANES)
+        assert buf.dtype == jnp.dtype(key)
+    assert _tree_equal(lay.unpack(planes, like=tmpl), tmpl)
+    # leaves are row-aligned: no row belongs to two segments
+    for key, segs in lay.segments.items():
+        spans = sorted((s.row_start, s.row_start + s.rows) for s in segs)
+        for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+            assert a1 <= b0
+
+
+def test_pack_impls_identical_and_stacked_roundtrip():
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    stacked = jax.tree.map(
+        lambda a: jnp.asarray(
+            RNG.standard_normal((3,) + a.shape), a.dtype
+        ),
+        tmpl,
+    )
+    for leading, tree in ((0, tmpl), (1, stacked)):
+        a = lay.pack(tree, leading=leading, impl="concat")
+        b = lay.pack(tree, leading=leading, impl="gather")
+        assert _tree_equal(a, b)
+        assert _tree_equal(lay.unpack(b, like=tree, leading=leading), tree)
+    # f32 cast pack (gradient/momentum trees)
+    g = _rand_like(tmpl, jnp.float32)
+    gp = lay.pack(g, dtype=jnp.float32)
+    assert all(v.dtype == jnp.float32 for v in gp.values())
+    assert _tree_equal(lay.unpack(gp, dtype=jnp.float32), g)
+
+
+def test_row_scalars_scatter():
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    scalars = {k: float(i + 2) for i, k in enumerate(sorted(tmpl))}
+    cols = lay.row_scalars(scalars)
+    for key, segs in lay.segments.items():
+        col = np.asarray(cols[key])
+        assert col.shape == (lay.rows[key], 1)
+        names = sorted(tmpl)
+        leaf_order = [names[i] for i in range(len(names))]
+        for seg in segs:
+            want = scalars[leaf_order[seg.index]]
+            got = col[seg.row_start: seg.row_start + seg.rows, 0]
+            np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_interpret_zero_pad_rows_inert():
+    """A plane whose rows are not a multiple of the 64-row kernel block
+    still computes the real rows exactly (boundary block masked)."""
+    tmpl = {"w": jnp.asarray(RNG.standard_normal((70,)), jnp.float32)}
+    lay = PlaneLayout.build(tmpl)
+    cfg = OptimizerConfig(algorithm="decentlam", momentum=0.9)
+    spec = update_spec(cfg)
+    g = _rand_like(tmpl, jnp.float32)
+    state = make_optimizer(cfg).init(tmpl)
+
+    def gossip(tree, step, comp):
+        return jax.tree.map(lambda a: 0.5 * a, tree), comp
+
+    kw = dict(lr=0.01, step_idx=jnp.int32(0), gossip=gossip, mean=lambda t: t,
+              comp_state=())
+    x1, s1, _ = run_update(spec, cfg, x=tmpl, g=g, state=state,
+                           stage=make_stage("pallas_interpret"), **kw)
+    xp = lay.pack(tmpl)
+    x2p, _, _ = run_update(
+        spec, cfg, x=xp, g=lay.pack(g, dtype=jnp.float32),
+        state={k: lay.pack(v, dtype=jnp.float32) for k, v in state.items()},
+        stage=make_plane_stage("pallas_interpret"),
+        scalars=plane_scalars(cfg, lay, tmpl, g), **kw,
+    )
+    assert _tree_equal(x1, lay.unpack(x2p, like=tmpl))
+
+
+# ---------------------------------------------------------------------------
+# plane-vs-per-leaf parity: all 11 algorithms, bit-exact
+# ---------------------------------------------------------------------------
+
+CONFIGS = (
+    {},
+    {"lars": True, "weight_decay": 0.01, "grad_clip": 1.0},
+)
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@pytest.mark.parametrize("extras", CONFIGS, ids=("plain", "lars-clip-wd"))
+def test_plane_parity_reference_stacked(algo, extras):
+    """Stacked reference path with a real gossip channel: the packed update
+    equals the per-leaf update bit-for-bit over multiple steps."""
+    n = 4
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    topo = build_topology("ring", n)
+    chan, mean = StackedChannel(topo), make_stacked_mean(n)
+    cfg = OptimizerConfig(algorithm=algo, momentum=0.9, **extras)
+    spec = update_spec(cfg)
+    opt = make_optimizer(cfg)
+
+    x = jax.tree.map(
+        lambda a: jnp.asarray(RNG.standard_normal((n,) + a.shape), a.dtype), tmpl
+    )
+    state = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape),
+        opt.init(jax.tree.map(lambda a: a[0], x)),
+    )
+    xp = lay.pack(x, leading=1)
+    state_pl = {
+        k: lay.pack(v, dtype=jnp.float32, leading=1) for k, v in state.items()
+    }
+    comp = chan.init(x)
+    comp_pl = chan.init(xp)
+    for k in range(2):
+        g = jax.tree.map(
+            lambda a: jnp.asarray(RNG.standard_normal(a.shape), jnp.float32), x
+        )
+        kw = dict(lr=0.01, step_idx=jnp.int32(k), gossip=chan, mean=mean)
+        sc = plane_scalars(cfg, lay, x, g)  # from the pre-update trees
+        x1, state, comp = run_update(
+            spec, cfg, x=x, g=g, state=state, comp_state=comp, **kw
+        )
+        x = jax.tree.map(lambda p, v: v.astype(p.dtype), x, x1)
+        xp_new, state_pl, comp_pl = run_update(
+            spec, cfg, x=xp, g=lay.pack(g, dtype=jnp.float32, leading=1),
+            state=state_pl, comp_state=comp_pl, scalars=sc, **kw,
+        )
+        xp = jax.tree.map(lambda p, v: v.astype(p.dtype), xp, xp_new)
+        assert _tree_equal(x, lay.unpack(xp, like=x, leading=1)), f"step {k}"
+    for sk, v in state.items():
+        assert _tree_equal(v, lay.unpack(state_pl[sk], dtype=jnp.float32,
+                                         leading=1)), sk
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@pytest.mark.parametrize("extras", CONFIGS, ids=("plain", "lars-clip-wd"))
+def test_plane_parity_pallas_interpret(algo, extras):
+    """Per-node Pallas path: whole-plane stage kernels equal the per-leaf
+    stage kernels bit-for-bit (incl. the LARS row-scalar operand and the
+    staleness damping scalar)."""
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    cfg = OptimizerConfig(algorithm=algo, momentum=0.9, **extras)
+    spec = update_spec(cfg)
+    x = _rand_like(tmpl)
+    g = _rand_like(tmpl, jnp.float32)
+    state = make_optimizer(cfg).init(x)
+
+    def gossip(tree, step, comp):
+        return jax.tree.map(lambda a: 0.7 * a, tree), comp
+
+    ng = jnp.int32(2) if spec.staleness_aware else None
+    kw = dict(lr=0.01, step_idx=jnp.int32(3), gossip=gossip, mean=lambda t: t,
+              comp_state=(), node_gaps=ng)
+    x1, s1, _ = run_update(spec, cfg, x=x, g=g, state=state,
+                           stage=make_stage("pallas_interpret"), **kw)
+    x2p, s2p, _ = run_update(
+        spec, cfg, x=lay.pack(x), g=lay.pack(g, dtype=jnp.float32),
+        state={k: lay.pack(v, dtype=jnp.float32) for k, v in state.items()},
+        stage=make_plane_stage("pallas_interpret"),
+        scalars=plane_scalars(cfg, lay, x, g), **kw,
+    )
+    assert _tree_equal(x1, lay.unpack(x2p, like=x))
+    for sk in s1:
+        assert _tree_equal(s1[sk], lay.unpack(s2p[sk], dtype=jnp.float32)), sk
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_plane_launch_count_is_O_stages(algo):
+    """jaxpr-counted pallas_calls: per-leaf = leaves x stages, plane =
+    buckets x stages — the tentpole's launch-collapse claim."""
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    cfg = OptimizerConfig(algorithm=algo, momentum=0.9, weight_decay=0.01)
+    spec = update_spec(cfg)
+    g = _rand_like(tmpl, jnp.float32)
+    state = make_optimizer(cfg).init(tmpl)
+
+    def gossip(tree, step, comp):
+        return tree, comp
+
+    kw = dict(lr=0.01, step_idx=jnp.int32(0), gossip=gossip, mean=lambda t: t,
+              comp_state=())
+
+    def leaf_fn(x, g, state):
+        return run_update(spec, cfg, x=x, g=g, state=state,
+                          stage=make_stage("pallas_interpret"), **kw)
+
+    def plane_fn(x, g, state):
+        return run_update(
+            spec, cfg, x=lay.pack(x), g=lay.pack(g, dtype=jnp.float32),
+            state={k: lay.pack(v, dtype=jnp.float32) for k, v in state.items()},
+            stage=make_plane_stage("pallas_interpret"),
+            scalars=plane_scalars(cfg, lay, tmpl, g), **kw,
+        )
+
+    stages = len(stage_plan(cfg))
+    n_leaves = len(jax.tree.leaves(tmpl))
+    n_buckets = len(lay.segments)
+    assert count_primitive(
+        jax.make_jaxpr(leaf_fn)(tmpl, g, state), "pallas_call"
+    ) == n_leaves * stages
+    assert count_primitive(
+        jax.make_jaxpr(plane_fn)(tmpl, g, state), "pallas_call"
+    ) == n_buckets * stages
+
+
+# ---------------------------------------------------------------------------
+# plane-layout channel state: checkpoint round trip + resume equality
+# ---------------------------------------------------------------------------
+
+
+def test_plane_channel_state_checkpoint_roundtrip(tmp_path):
+    """A delayed channel whose state lives in plane layout (ring buffers of
+    packed payloads + top-k error feedback) checkpoints through the npz
+    store and resumes bit-exactly: interrupted == uninterrupted."""
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    n = 4
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    topo = build_topology("ring", n)
+    chan = DelayedStackedChannel(topo, 2, compression="topk:0.2")
+    cfg = OptimizerConfig(algorithm="decentlam-sa", momentum=0.8)
+    spec = update_spec(cfg)
+    opt = make_optimizer(cfg)
+
+    x = jax.tree.map(
+        lambda a: jnp.asarray(RNG.standard_normal((n,) + a.shape), a.dtype), tmpl
+    )
+    xp = lay.pack(x, leading=1)
+    state_pl = {
+        k: lay.pack(v, dtype=jnp.float32, leading=1)
+        for k, v in jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape),
+            opt.init(jax.tree.map(lambda a: a[0], x)),
+        ).items()
+    }
+    comp_pl = chan.init(xp)
+    grads = [
+        lay.pack(
+            jax.tree.map(
+                lambda a: jnp.asarray(RNG.standard_normal(a.shape), jnp.float32), x
+            ),
+            dtype=jnp.float32, leading=1,
+        )
+        for _ in range(6)
+    ]
+
+    def step(xp, state_pl, comp_pl, k):
+        xn, state_pl, comp_pl = run_update(
+            spec, cfg, x=xp, g=grads[k], state=state_pl, lr=0.01,
+            step_idx=jnp.int32(k), gossip=chan, mean=make_stacked_mean(n),
+            comp_state=comp_pl,
+        )
+        return (
+            jax.tree.map(lambda p, v: v.astype(p.dtype), xp, xn),
+            state_pl, comp_pl,
+        )
+
+    # uninterrupted: 6 steps
+    a_x, a_s, a_c = xp, state_pl, comp_pl
+    for k in range(6):
+        a_x, a_s, a_c = step(a_x, a_s, a_c, k)
+
+    # interrupted at 3: checkpoint, restore, continue
+    b_x, b_s, b_c = xp, state_pl, comp_pl
+    for k in range(3):
+        b_x, b_s, b_c = step(b_x, b_s, b_c, k)
+    ckpt = {
+        "step": jnp.int32(3),
+        "params": b_x,
+        "opt": b_s,
+        "channel": b_c,
+    }
+    save_checkpoint(str(tmp_path), jax.device_get(ckpt))
+    restored, _ = restore_checkpoint(str(tmp_path))
+    assert _tree_equal(restored["channel"], b_c)  # delay rings + EF exact
+    b_x, b_s, b_c = restored["params"], restored["opt"], restored["channel"]
+    for k in range(3, 6):
+        b_x, b_s, b_c = step(b_x, b_s, b_c, k)
+
+    assert _tree_equal(a_x, b_x)
+    assert _tree_equal(a_s, b_s)
+    assert _tree_equal(a_c, b_c)
+
+
+def test_reconcile_plane_state_roundtrip():
+    """Optimizer state converts tree <-> plane across the flat_planes flag
+    without loss (the cross-format resume path)."""
+    from repro.train.train_state import reconcile_plane_state
+
+    n = 3
+    tmpl = _tmpl()
+    lay = PlaneLayout.build(tmpl)
+    m = jax.tree.map(
+        lambda a: jnp.asarray(RNG.standard_normal((n,) + a.shape), jnp.float32),
+        tmpl,
+    )
+    tree_state = {"step": jnp.int32(7), "params": {}, "opt": {"m": m}}
+    packed = reconcile_plane_state(tree_state, lay, True)
+    assert set(packed["opt"]["m"]) == set(lay.segments)
+    # already-plane state passes through unchanged
+    again = reconcile_plane_state(packed, lay, True)
+    assert _tree_equal(again["opt"]["m"], packed["opt"]["m"])
+    back = reconcile_plane_state(packed, lay, False)
+    assert _tree_equal(back["opt"]["m"], m)
+
+
+def test_ensure_channel_state_plane_template():
+    """A plane-layout TrainState resumes its channel bucket when shapes
+    match and zero-inits it when the payload layout changed."""
+    from repro.train.train_state import ensure_channel_state
+
+    n = 2
+    tmpl = {"w": jnp.zeros((300,), jnp.float32), "s": jnp.zeros((5,), jnp.float32)}
+    lay = PlaneLayout.build(tmpl)
+    topo = build_topology("ring", 4)
+    chan = DelayedStackedChannel(topo, 1)
+    params = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tmpl
+    )
+    plane_t = lay.pack(tmpl, dtype=jnp.float32)
+    chan_state = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape)
+        + jnp.asarray(1, a.dtype),
+        chan.init(plane_t),
+    )
+    state = {"step": jnp.int32(1), "params": params, "opt": {},
+             "channel": chan_state}
+    out = ensure_channel_state(state, chan, n, lay)
+    assert _tree_equal(out["channel"], chan_state)  # matching resume survives
+    # a different layout (template grew past the 64-row plane quantum, so
+    # the packed buffer shape changes) invalidates the delay buffers
+    tmpl2 = {"w": jnp.zeros((70000,), jnp.float32), "s": jnp.zeros((5,), jnp.float32)}
+    lay2 = PlaneLayout.build(tmpl2)
+    params2 = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tmpl2
+    )
+    out2 = ensure_channel_state(
+        {**state, "params": params2}, chan, n, lay2
+    )
+    assert all(
+        float(jnp.sum(jnp.abs(leaf))) == 0.0
+        for leaf in jax.tree.leaves(out2["channel"]["delay"])
+    )

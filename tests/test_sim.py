@@ -458,6 +458,71 @@ def test_wallclock_price_floor_is_physically_plausible(problem8):
     assert raw["step_time_s"] == raw["roofline_s"] < MIN_STEP_S
 
 
+def test_wallclock_calibration_from_dryrun_pinned(problem8, tmp_path):
+    """Sim-calibrated wallclock (ROADMAP item): a measured per-step time
+    from a ``launch.train`` run replaces the roofline price outright, so
+    scenario projections carry real units.  Pinned: wallclock_s ==
+    sim_time x measured_step_s exactly, dominant == "measured", and every
+    accepted calibration input form (float / dict / json path) agrees."""
+    import json
+
+    from repro.sim import calibrate_from_dryrun
+
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    topo = build_topology("ring", 8)
+    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+                 scenario="straggler_1slow", seed=0)
+
+    measured = 0.05  # 50 ms/step, as launch.train --measure-json reports it
+    path = tmp_path / "measure.json"
+    path.write_text(json.dumps({"measured_step_s": measured}))
+    assert calibrate_from_dryrun(measured) == measured
+    assert calibrate_from_dryrun({"measured_step_s": measured}) == measured
+    assert calibrate_from_dryrun(str(path)) == measured
+    with pytest.raises(ValueError):
+        calibrate_from_dryrun({"wrong_key": 1.0})
+    with pytest.raises(ValueError):
+        calibrate_from_dryrun(0.0)
+
+    p = project_wallclock(r, topo, opt=opt, grad_fn=_grad(problem8),
+                          measured_step_s=calibrate_from_dryrun(str(path)))
+    assert p["dominant"] == "measured"
+    assert p["step_time_s"] == measured
+    assert p["wallclock_s"] == pytest.approx(r.sim_time * measured)
+    total_steps = int(r.steps[r.alive].sum())
+    assert p["steps_per_s"] == pytest.approx(total_steps / (r.sim_time * measured))
+    # roofline terms stay in the report for reference
+    assert {"compute_s", "memory_s", "collective_s", "roofline_s"} <= set(p)
+
+
+def test_event_engine_compression_threads_channel_state(problem8):
+    """simulate(compression=...) runs both engines: stateless compressors
+    leave the trajectory near-baseline, and top-k's error-feedback
+    residuals thread through the virtual stacked step (non-zero after the
+    run, and compression=None stays bit-exact with the pre-compression
+    engine)."""
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.8))
+    base = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+                    scenario="straggler_1slow_async", seed=0, metric_fn=metric)
+    again = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+                     scenario="straggler_1slow_async", seed=0, metric_fn=metric,
+                     compression=None)
+    np.testing.assert_array_equal(np.asarray(base.params), np.asarray(again.params))
+    bf16 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+                    scenario="straggler_1slow_async", seed=0, metric_fn=metric,
+                    compression="bf16")
+    assert np.isfinite(bf16.final_metric)
+    assert bf16.final_metric <= base.final_metric * 2.0 + 1e-3
+    # delayed engine too (stale_gossip_* scenarios)
+    k2 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+                  scenario="stale_gossip_k2", seed=0, metric_fn=metric,
+                  compression="int8")
+    assert np.isfinite(k2.final_metric)
+
+
 def test_event_engine_decentlam_sa_async_straggler_converges(problem8):
     """The headline repair: under bounded-staleness asynchrony (SSP-8)
     decentlam diverges while decentlam-sa — damping on the incident-edge
