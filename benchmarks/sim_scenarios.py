@@ -31,6 +31,17 @@ converge on every stale scenario at bias no worse than DmSGD while matching
 ``decentlam`` bit-exactly at gap 0 (the ``sa_claims`` block below, gated in
 CI).
 
+The **fleet sweep** re-runs the bias/staleness claims at n = 64, 256 and
+1024 on the sparse one-peer exponential graph through the node-vectorized
+event engine (:mod:`repro.sim.vectorized`), with wall-clock projected from
+a calibrated per-step price — the scale regime the paper targets (large
+batch = many nodes) that the per-node engine cannot reach.  Scenario scope
+is logged explicitly: per-node lognormal jitter and membership churn make
+every completion time distinct (batch size 1 — the O(n^2) regime), so
+those scenarios run at n=64 only; the constant-speed scenarios
+(homogeneous, straggler_tail) and the synchronous delayed engine
+(stale_gossip_k2) cover all three sizes.
+
 ``run(json_path=...)`` writes BENCH_sim.json (machine-readable, gated by
 tests/ci/check_bench_sim.py next to BENCH_kernels.json).
 """
@@ -52,7 +63,14 @@ from repro.core import (
     make_linear_regression,
     make_optimizer,
 )
-from repro.sim import SCENARIOS, effective_batch_fraction, project_wallclock, simulate
+from repro.sim import (
+    SCENARIOS,
+    SimSpec,
+    calibrate_from_dryrun,
+    effective_batch_fraction,
+    project_wallclock,
+    simulate,
+)
 from repro.sim.metrics import is_diverged
 
 CONFIG = {
@@ -87,6 +105,27 @@ SWEEP_COMPRESSIONS = ("bf16", "int8", "topk:0.1")
 SWEEP_SCENARIOS = ("homogeneous", "stale_gossip_k2", "straggler_1slow_async")
 SWEEP_ALGORITHMS = ("dmsgd", "decentlam-sa")
 
+# ---- fleet sweep (node-vectorized engine) ---------------------------------
+FLEET_SIZES = (64, 256, 1024)
+FLEET_TOPOLOGY = "one-peer-exp"
+FLEET_ALGORITHMS = ("dmsgd", "decentlam", "decentlam-sa")
+FLEET_N_STEPS = 200
+# constant-speed event scenarios + the synchronous delayed engine scale to
+# every fleet size; everything with per-node jitter or membership churn
+# (distinct completion times -> batch size 1 -> O(n^2)) runs at n=64 only
+FLEET_SCENARIOS_ALL_SIZES = ("homogeneous", "straggler_tail", "stale_gossip_k2")
+FLEET_SCENARIOS_N64_ONLY = (
+    "straggler_1slow", "straggler_1slow_async", "failstop_quarter", "churn",
+    "stale_gossip_k1", "stale_gossip_k4",
+)
+# calibrated per-step price for the wall-clock projection: 50 ms/step is a
+# ResNet-50-class step on one accelerator (the paper's Tab. 4 regime); the
+# projection scales linearly in it, so claims below only compare ratios
+FLEET_MEASURED_STEP_S = 0.05
+# CI budget for the engine itself: seconds of host time per simulated
+# node-step on the n=1024 homogeneous run (measured ~0.3 ms; 7x headroom)
+FLEET_ENGINE_BUDGET_S = 2e-3
+
 
 def _cluster_optimum(problem, indices) -> jnp.ndarray:
     """Exact optimum of the quadratic restricted to the listed nodes' data."""
@@ -100,6 +139,150 @@ def _cluster_optimum(problem, indices) -> jnp.ndarray:
 
 def _finite(v: float):
     return float(v) if math.isfinite(v) else None
+
+
+def _run_fleet(csv: bool = True) -> tuple[dict, dict]:
+    """The bias/staleness registry at fleet scale (n = 64, 256, 1024).
+
+    Runs through the node-vectorized event engine on the sparse one-peer
+    exponential graph; wall-clock and device-hours are projected from the
+    calibrated ``FLEET_MEASURED_STEP_S`` price.  Returns the results table
+    and the machine-checkable ``fleet_claims`` block.
+    """
+    measured = calibrate_from_dryrun(FLEET_MEASURED_STEP_S)
+    results: dict[str, dict] = {}
+    engine_1024: dict[str, float] = {}
+    if csv:
+        print("fleet:n,scenario,algorithm,bias_vs_x_star,stall,wallclock_s,"
+              "device_hours,engine_s,diverged")
+    for n in FLEET_SIZES:
+        problem = make_linear_regression(
+            n=n, m=CONFIG["m"], d=CONFIG["d"], noise=CONFIG["noise"],
+            seed=CONFIG["seed"], heterogeneity=CONFIG["heterogeneity"],
+        )
+        x0 = jnp.zeros((n, CONFIG["d"]), jnp.float32)
+
+        def grad_fn(x, _s, _p=problem):
+            return _p.grad(x)
+
+        def restrict(indices, _p=problem):
+            sel = np.asarray(indices)
+            sub = dataclasses.replace(_p, A=_p.A[sel], b=_p.b[sel])
+            return lambda x, _s: sub.grad(x)
+
+        def metric(x, _p=problem):
+            return bias_to_optimum(x, _p.x_star)
+
+        scenarios = FLEET_SCENARIOS_ALL_SIZES + (
+            FLEET_SCENARIOS_N64_ONLY if n == 64 else ()
+        )
+        results[str(n)] = {}
+        for scenario in scenarios:
+            results[str(n)][scenario] = {}
+            for algorithm in FLEET_ALGORITHMS:
+                opt = make_optimizer(
+                    OptimizerConfig(algorithm=algorithm, momentum=CONFIG["momentum"])
+                )
+                t0 = time.time()
+                res = simulate(
+                    opt,
+                    SimSpec(
+                        topology=FLEET_TOPOLOGY, n=n, lr=CONFIG["lr"],
+                        n_steps=FLEET_N_STEPS, scenario=scenario,
+                        seed=CONFIG["seed"], metric_fn=metric, restrict=restrict,
+                    ),
+                    x0, grad_fn,
+                )
+                engine_s = time.time() - t0
+                node_steps = int(res.steps[res.alive].sum())
+                proj = project_wallclock(
+                    res, build_topology(FLEET_TOPOLOGY, res.n_nodes),
+                    measured_step_s=measured,
+                )
+                diverged = is_diverged(res.final_metric)
+                entry = {
+                    "bias_vs_x_star": None if diverged else _finite(res.final_metric),
+                    "consensus": None if diverged else _finite(res.final_consensus),
+                    "diverged": diverged,
+                    "steps_min": int(res.steps[res.alive].min()),
+                    "steps_max": int(res.steps[res.alive].max()),
+                    "effective_batch_fraction": round(effective_batch_fraction(res), 4),
+                    "stall_time": round(float(res.stall_time.sum()), 2),
+                    "sim_time": round(res.sim_time, 2),
+                    "n_final": res.n_nodes,
+                    "wallclock_s": proj["wallclock_s"],
+                    "device_hours": round(proj["device_hours"], 3),
+                    "steps_per_s": proj["steps_per_s"],
+                    "engine_seconds": round(engine_s, 1),
+                    "engine_s_per_node_step": engine_s / max(1, node_steps),
+                }
+                results[str(n)][scenario][algorithm] = entry
+                if n == 1024 and scenario == "homogeneous":
+                    engine_1024[algorithm] = entry["engine_s_per_node_step"]
+                if csv:
+                    print(
+                        f"fleet:{n},{scenario},{algorithm},"
+                        f"{entry['bias_vs_x_star'] if not diverged else 'diverged'},"
+                        f"{entry['stall_time']},{entry['wallclock_s']:.1f},"
+                        f"{entry['device_hours']},{entry['engine_seconds']},{diverged}"
+                    )
+
+    sa = results["256"]["stale_gossip_k2"]["decentlam-sa"]["bias_vs_x_star"]
+    dm = results["256"]["stale_gossip_k2"]["dmsgd"]["bias_vs_x_star"]
+    worst_engine = max(engine_1024.values())
+    fleet_claims = {
+        "sizes": list(FLEET_SIZES),
+        # a finding, not a regression: plain DecentLaM's 1/lr-scaled
+        # correction assumes a static W — on the time-varying one-peer
+        # graph it diverges at every size (the lockstep oracle reproduces
+        # this, so it is algorithmic, not an engine artifact), and
+        # decentlam-sa coincides with it at gap 0 but is rescued by its
+        # staleness damping whenever gaps are nonzero
+        "decentlam_time_varying_divergence": {
+            "topology": FLEET_TOPOLOGY,
+            "diverged_sizes": sorted(
+                int(n) for n in results
+                if results[n]["homogeneous"]["decentlam"]["diverged"]
+            ),
+            "sa_rescued_on": [
+                s for s in ("straggler_tail", "stale_gossip_k2")
+                if not any(
+                    results[n][s]["decentlam-sa"]["diverged"] for n in results
+                )
+            ],
+        },
+        # the paper's bias ordering survives fleet scale: staleness-aware
+        # DecentLaM at n=256 under stale gossip is no worse than DmSGD
+        "sa_no_worse_at_256_stale": {
+            "scenario": "stale_gossip_k2",
+            "decentlam_sa_bias": sa,
+            "dmsgd_bias": dm,
+            "holds": sa is not None and dm is not None and sa <= dm * 1.05,
+        },
+        # the engine itself stays fast enough to sweep: host seconds per
+        # simulated node-step on the n=1024 homogeneous run, worst algorithm
+        "engine_n1024_s_per_node_step": worst_engine,
+        "engine_budget_s_per_node_step": FLEET_ENGINE_BUDGET_S,
+        "engine_within_budget": worst_engine <= FLEET_ENGINE_BUDGET_S,
+        "scenario_scope_note": (
+            "lognormal-jitter and membership scenarios run at n=64 only: "
+            "distinct completion times give batch size 1 (the O(n^2) "
+            "regime); constant-speed and delayed-engine scenarios cover "
+            "all sizes"
+        ),
+    }
+    return {
+        "config": {
+            "topology": FLEET_TOPOLOGY,
+            "n_steps": FLEET_N_STEPS,
+            "lr": CONFIG["lr"],
+            "momentum": CONFIG["momentum"],
+            "algorithms": list(FLEET_ALGORITHMS),
+            "measured_step_s": measured,
+            "sizes": list(FLEET_SIZES),
+        },
+        "results": results,
+    }, fleet_claims
 
 
 def run(csv: bool = True, json_path: str | None = None) -> dict:
@@ -136,9 +319,13 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
             )
             t0 = time.time()
             res = simulate(
-                opt, cfg["topology"], cfg["n"], x0, grad_fn,
-                lr=cfg["lr"], n_steps=cfg["n_steps"], scenario=scenario,
-                seed=cfg["seed"], metric_fn=metric, restrict=restrict,
+                opt,
+                SimSpec(
+                    topology=cfg["topology"], n=cfg["n"], lr=cfg["lr"],
+                    n_steps=cfg["n_steps"], scenario=scenario,
+                    seed=cfg["seed"], metric_fn=metric, restrict=restrict,
+                ),
+                x0, grad_fn,
             )
             x_star_cluster = (
                 _cluster_optimum(problem, res.kept)
@@ -226,10 +413,14 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
                     OptimizerConfig(algorithm=algorithm, momentum=cfg["momentum"])
                 )
                 res = simulate(
-                    opt, cfg["topology"], cfg["n"], x0, grad_fn,
-                    lr=cfg["lr"], n_steps=cfg["n_steps"], scenario=scenario,
-                    seed=cfg["seed"], metric_fn=metric, restrict=restrict,
-                    compression=comp,
+                    opt,
+                    SimSpec(
+                        topology=cfg["topology"], n=cfg["n"], lr=cfg["lr"],
+                        n_steps=cfg["n_steps"], scenario=scenario,
+                        seed=cfg["seed"], metric_fn=metric, restrict=restrict,
+                        compression=comp,
+                    ),
+                    x0, grad_fn,
                 )
                 diverged = is_diverged(res.final_metric)
                 bias = None if diverged else _finite(res.final_metric)
@@ -288,6 +479,8 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
             }
         compression_claims[comp] = entry
 
+    fleet, fleet_claims = _run_fleet(csv=csv)
+
     payload = {
         "bench": "sim_scenarios",
         "config": CONFIG,
@@ -299,6 +492,8 @@ def run(csv: bool = True, json_path: str | None = None) -> dict:
         "sa_claims": sa_claims,
         "compression_sweep": sweep,
         "compression_claims": compression_claims,
+        "fleet": fleet,
+        "fleet_claims": fleet_claims,
     }
     if json_path:
         with open(json_path, "w") as f:

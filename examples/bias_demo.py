@@ -81,7 +81,7 @@ def main() -> None:
         label = {a: [float(v) for v in traces[a]] for a in ALGOS}
         ticks = [i * record for i in range(len(label["dsgd"]))]
     else:
-        from repro.sim import simulate
+        from repro.sim import SimSpec, simulate
 
         metric = functools.partial(bias_to_optimum, x_star=prob.x_star)
         print(f"scenario: {args.scenario} (seed {args.seed})\n")
@@ -89,10 +89,14 @@ def main() -> None:
         for a in ALGOS:
             opt = make_optimizer(OptimizerConfig(algorithm=a, momentum=momentum))
             res = simulate(
-                opt, "torus", 8, jnp.zeros((8, prob.dim), jnp.float32),
+                opt,
+                SimSpec(
+                    topology="torus", n=8, lr=lr, n_steps=n_steps,
+                    scenario=args.scenario, seed=args.seed,
+                    record_dt=float(record), metric_fn=metric,
+                ),
+                jnp.zeros((8, prob.dim), jnp.float32),
                 lambda x, _s: prob.grad(x),
-                lr=lr, n_steps=n_steps, scenario=args.scenario, seed=args.seed,
-                record_dt=float(record), metric_fn=metric,
             )
             label[a] = [e["metric"] for e in res.trace]
         ticks = [e["t"] for e in res.trace]

@@ -28,7 +28,7 @@ from repro.core import (
     make_linear_regression,
     make_optimizer,
 )
-from repro.sim import SCENARIOS, get_scenario, project_wallclock, simulate
+from repro.sim import SCENARIOS, SimSpec, get_scenario, project_wallclock, simulate
 
 
 def main() -> None:
@@ -42,6 +42,10 @@ def main() -> None:
     parser.add_argument("--momentum", type=float, default=0.8)
     parser.add_argument("--seed", type=int, default=0)
     parser.add_argument("--record-dt", type=float, default=25.0)
+    parser.add_argument(
+        "--engine", default="auto", choices=("auto", "vectorized", "pernode"),
+        help="event-loop strategy (vectorized scales to fleet-size n)",
+    )
     parser.add_argument("--list", action="store_true", help="list scenarios and exit")
     args = parser.parse_args()
 
@@ -68,11 +72,14 @@ def main() -> None:
         f"scenario={args.scenario} algorithm={args.algorithm} "
         f"topology={args.topology} n={args.n} steps={args.steps} seed={args.seed}"
     )
+    spec = SimSpec(
+        topology=args.topology, n=args.n, lr=args.lr, n_steps=args.steps,
+        scenario=args.scenario, seed=args.seed, record_dt=args.record_dt,
+        metric_fn=metric, restrict=restrict, engine=args.engine,
+    )
     res = simulate(
-        opt, args.topology, args.n, jnp.zeros((args.n, prob.dim), jnp.float32),
+        opt, spec, jnp.zeros((args.n, prob.dim), jnp.float32),
         lambda x, _s: prob.grad(x),
-        lr=args.lr, n_steps=args.steps, scenario=args.scenario, seed=args.seed,
-        record_dt=args.record_dt, metric_fn=metric, restrict=restrict,
     )
 
     print(f"\n{'sim_t':>8s} {'steps':>9s} {'consensus':>10s} {'bias':>10s}")

@@ -38,6 +38,7 @@ from .topology import (
     TOPOLOGIES,
     EdgeClass,
     Topology,
+    TopologySpec,
     build_topology,
     metropolis_weights,
     rho,
@@ -60,6 +61,7 @@ __all__ = [
     "ScheduleConfig",
     "TOPOLOGIES",
     "Topology",
+    "TopologySpec",
     "bias_to_optimum",
     "build_channel",
     "build_schedule",

@@ -26,6 +26,7 @@ training can route around fail-stopped nodes without renumbering.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import math
 from typing import Sequence
 
@@ -34,6 +35,7 @@ import numpy as np
 __all__ = [
     "EdgeClass",
     "Topology",
+    "TopologySpec",
     "build_topology",
     "metropolis_weights",
     "rho",
@@ -151,38 +153,102 @@ class Topology:
 
     ``period`` is the number of distinct weight matrices it cycles through;
     static topologies have ``period == 1``.
+
+    The *sparse* per-edge representation (``edge_classes`` + per-phase self
+    weights) is primary; the dense ``(n, n)`` matrix is materialized lazily
+    on first ``W(step)`` access and cached.  Topologies built from a dense W
+    (``_static`` / ``_cycle``) carry both eagerly; topologies built from
+    edge classes (``_from_classes`` — the fleet-scale generators) never pay
+    O(n^2) memory unless a dense consumer (spectral analysis, the stacked
+    oracle channel) asks for it.
     """
 
     name: str
     n: int
-    _W_cycle: tuple[np.ndarray, ...]
+    _W_cycle: tuple[np.ndarray, ...] | None
     _classes_cycle: tuple[tuple[EdgeClass, ...], ...]
+    _self_weight_cycle: tuple[np.ndarray, ...] | None = None
 
     @property
     def period(self) -> int:
-        return len(self._W_cycle)
+        return len(self._classes_cycle)
 
     def W(self, step: int = 0) -> np.ndarray:
-        return self._W_cycle[step % self.period]
+        phase = step % self.period
+        if self._W_cycle is not None:
+            return self._W_cycle[phase]
+        cache = self.__dict__.get("_W_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_W_cache", cache)
+        if phase not in cache:
+            W = np.diag(self.self_weight(phase)).astype(np.float64)
+            for c in self._classes_cycle[phase]:
+                for src, dst in c.pairs:
+                    W[dst, src] += c.recv_weight[dst]
+            cache[phase] = W
+        return cache[phase]
 
     def self_weight(self, step: int = 0) -> np.ndarray:
-        return np.diag(self.W(step)).copy()
+        phase = step % self.period
+        if self._self_weight_cycle is not None:
+            return self._self_weight_cycle[phase].copy()
+        return np.diag(self.W(phase)).copy()
 
     def edge_classes(self, step: int = 0) -> tuple[EdgeClass, ...]:
         return self._classes_cycle[step % self.period]
 
     def max_degree(self) -> int:
-        return max(
-            int((np.abs(W) > 0).sum(axis=1).max()) - 1 for W in self._W_cycle
+        if self._W_cycle is not None:
+            return max(
+                int((np.abs(W) > 0).sum(axis=1).max()) - 1 for W in self._W_cycle
+            )
+        return max(int(self.in_degree(t).max()) for t in range(self.period))
+
+    def in_degree(self, step: int = 0) -> np.ndarray:
+        """Per-node count of nonzero-weight in-edges at this phase (sparse)."""
+        deg = np.zeros(self.n, dtype=np.int64)
+        for c in self.edge_classes(step):
+            for src, dst in c.pairs:
+                if c.recv_weight[dst] != 0.0 and src != dst:
+                    deg[dst] += 1
+        return deg
+
+    def in_neighbors(self) -> tuple[tuple[int, ...], ...]:
+        """Sparse per-edge in-neighbor map: for each node, the sorted union
+        over period phases of the nodes whose payload it mixes with nonzero
+        weight.  Derived from ``edge_classes`` — no dense W materialization,
+        so it stays O(edges) at fleet scale.  The simulator's SSP blocking
+        and staleness-gap accounting key on this map."""
+        nbrs: list[set[int]] = [set() for _ in range(self.n)]
+        for t in range(self.period):
+            for c in self.edge_classes(t):
+                for src, dst in c.pairs:
+                    if c.recv_weight[dst] != 0.0 and src != dst:
+                        nbrs[dst].add(src)
+        return tuple(tuple(sorted(s)) for s in nbrs)
+
+    def in_neighbor_csr(self) -> tuple[np.ndarray, np.ndarray]:
+        """CSR form of :meth:`in_neighbors`: ``(indptr, indices)`` with
+        ``indices[indptr[i]:indptr[i+1]]`` = node ``i``'s in-neighbors —
+        the vectorized event engine's edge list."""
+        nbrs = self.in_neighbors()
+        indptr = np.zeros(self.n + 1, dtype=np.int64)
+        for i, s in enumerate(nbrs):
+            indptr[i + 1] = indptr[i] + len(s)
+        indices = np.fromiter(
+            (j for s in nbrs for j in s), dtype=np.int64, count=int(indptr[-1])
         )
+        return indptr, indices
 
     def rho(self) -> float:
         """Spectral gap of the *average* mixing matrix over one period."""
-        Wbar = sum(self._W_cycle) / self.period
+        Wbar = sum(self.W(t) for t in range(self.period)) / self.period
         return rho(Wbar)
 
     def validate(self) -> None:
-        for W, classes in zip(self._W_cycle, self._classes_cycle):
+        for t in range(self.period):
+            W, classes = self.W(t), self._classes_cycle[t]
             n = self.n
             assert W.shape == (n, n)
             np.testing.assert_allclose(W, W.T, atol=1e-12, err_msg="W not symmetric")
@@ -208,7 +274,8 @@ class Topology:
         dead_set = set(int(d) for d in dead)
         assert all(0 <= d < self.n for d in dead_set)
         new_W = []
-        for W in self._W_cycle:
+        for t in range(self.period):
+            W = self.W(t)
             adj = (np.abs(W - np.diag(np.diag(W))) > 0).astype(np.int64)
             for d in dead_set:
                 adj[d, :] = 0
@@ -244,6 +311,35 @@ def _cycle(name: str, Ws: Sequence[np.ndarray]) -> Topology:
     )
     t.validate()
     return t
+
+
+def _from_classes(
+    name: str,
+    n: int,
+    classes_cycle: Sequence[Sequence[EdgeClass]],
+    self_weight_cycle: Sequence[np.ndarray],
+) -> Topology:
+    """Sparse constructor: edge classes + per-phase self weights, no dense W.
+
+    The fleet-scale generators build through here so an n=1024 topology
+    costs O(n * degree), not O(n^2); ``W(step)`` still materializes (and
+    caches) the dense matrix on demand for the spectral analysis and the
+    stacked oracle channel.  Classes are validated per phase (cheap); the
+    dense symmetry/stochasticity check stays in ``validate()`` for callers
+    that want it.
+    """
+    for classes in classes_cycle:
+        for c in classes:
+            c.validate(n)
+    return Topology(
+        name=name,
+        n=n,
+        _W_cycle=None,
+        _classes_cycle=tuple(tuple(cs) for cs in classes_cycle),
+        _self_weight_cycle=tuple(
+            np.asarray(sw, dtype=np.float64) for sw in self_weight_cycle
+        ),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -283,8 +379,14 @@ def torus(n: int) -> Topology:
     return _static("torus", metropolis_weights(adj))
 
 
-def symmetric_exponential(n: int) -> Topology:
-    """Neighbors at hop distances +/- 2^k (paper App. G.3, [Assran et al.])."""
+def symmetric_exponential(n: int, *, degree: int | None = None) -> Topology:
+    """Neighbors at hop distances +/- 2^k (paper App. G.3, [Assran et al.]).
+
+    ``degree`` truncates the family to the first ``degree`` hop distances
+    (1, 2, 4, ...), i.e. each node talks to ~``2 * degree`` peers — the
+    sparse fleet setting where the full exponential graph would approach
+    all-to-all.  ``None`` keeps every distance up to ``n // 2``.
+    """
     if n <= 2:
         return ring(n)
     offsets: list[int] = []
@@ -292,28 +394,69 @@ def symmetric_exponential(n: int) -> Topology:
     while (1 << k) <= n // 2:
         offsets.append(1 << k)
         k += 1
+    if degree is not None:
+        assert 1 <= degree <= len(offsets), (
+            f"degree must be in [1, {len(offsets)}] for n={n}, got {degree}"
+        )
+        offsets = offsets[:degree]
     return _static(
         "symmetric-exponential", metropolis_weights(_offsets_to_adj(n, offsets))
     )
 
 
-def one_peer_exponential(n: int) -> Topology:
-    """Time-varying degree-1 exponential graph via XOR matchings.
+def one_peer_exponential(n: int, *, period: int | None = None) -> Topology:
+    """Time-varying degree-1 exponential graph via XOR matchings (sparse).
 
-    At step t each node exchanges with ``i XOR 2^(t mod log2 n)``:
+    At step t each node exchanges with ``i XOR 2^(t mod period)``:
     W_t = (I + P_t) / 2, a perfect matching -> O(1) bandwidth *and* a single
     partner per step (maximal straggler tolerance).  Requires n power of two.
+
+    Built directly from edge classes — one permutation + uniform 0.5 receive
+    weight per phase — so an n=1024 fleet topology costs O(n log n), not the
+    O(n^2 log n) of a dense cycle.  ``period`` truncates the distance cycle
+    to the first ``period`` powers of two (default ``log2 n``, the full
+    exponential sweep).
     """
     assert n >= 2 and (n & (n - 1)) == 0, "one-peer exponential needs power-of-two n"
-    Ws = []
-    for k in range(int(math.log2(n))):
-        W = np.zeros((n, n), dtype=np.float64)
-        for i in range(n):
-            j = i ^ (1 << k)
-            W[i, j] = 0.5
-            W[i, i] = 0.5
-        Ws.append(W)
-    return _cycle("one-peer-exponential", Ws)
+    k_max = int(math.log2(n))
+    if period is None:
+        period = k_max
+    assert 1 <= period <= k_max, (
+        f"period must be in [1, log2(n)={k_max}], got {period}"
+    )
+    classes_cycle = []
+    for k in range(period):
+        perm = tuple(i ^ (1 << k) for i in range(n))
+        classes_cycle.append(
+            (EdgeClass(perm=perm, recv_weight=np.full(n, 0.5)),)
+        )
+    self_weights = [np.full(n, 0.5) for _ in range(period)]
+    return _from_classes("one-peer-exponential", n, classes_cycle, self_weights)
+
+
+def one_peer_ring(n: int) -> Topology:
+    """Time-varying degree-1 ring: alternating even/odd edge matchings.
+
+    Phase 0 pairs ``(0,1), (2,3), ...``; phase 1 pairs ``(1,2), (3,4), ...,
+    (n-1,0)`` — the period-2 matching decomposition of the ring, so each
+    node talks to exactly one peer per step but the union over a period is
+    the full ring.  Requires even n.  Built sparsely from edge classes.
+    """
+    assert n >= 2 and n % 2 == 0, "one-peer ring needs even n"
+    if n == 2:
+        return one_peer_exponential(2)
+    classes_cycle = []
+    for phase in range(2):
+        perm = [-1] * n
+        for a in range(phase, n, 2):
+            i, j = a, (a + 1) % n
+            perm[i] = j
+            perm[j] = i
+        classes_cycle.append(
+            (EdgeClass(perm=tuple(perm), recv_weight=np.full(n, 0.5)),)
+        )
+    self_weights = [np.full(n, 0.5) for _ in range(2)]
+    return _from_classes("one-peer-ring", n, classes_cycle, self_weights)
 
 
 def bipartite_random_match(n: int, *, seed: int = 0, pool: int = 8) -> Topology:
@@ -355,6 +498,7 @@ TOPOLOGIES = {
     "symmetric-exponential": symmetric_exponential,
     "one-peer-exp": one_peer_exponential,
     "one-peer-exponential": one_peer_exponential,
+    "one-peer-ring": one_peer_ring,
     "random-match": bipartite_random_match,
     "bipartite-random-match": bipartite_random_match,
     "full": fully_connected,
@@ -364,11 +508,77 @@ TOPOLOGIES = {
 }
 
 
-def build_topology(name: str, n: int, **kwargs) -> Topology:
-    try:
-        factory = TOPOLOGIES[name]
-    except KeyError as e:
-        raise ValueError(
-            f"unknown topology {name!r}; available: {sorted(TOPOLOGIES)}"
-        ) from e
-    return factory(n, **kwargs)
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Declarative topology: a registry family plus its parameters as fields.
+
+    Promotes ``build_topology("one-peer-exp", n)`` string dispatch to a
+    first-class spec so parameters that used to require bespoke factory
+    kwargs (``period`` for the one-peer exponential's distance cycle,
+    ``degree`` for the symmetric exponential's truncation, ``seed``/``pool``
+    for random matchings) live in one frozen, hashable value that travels
+    through ``SimSpec``, ``plan_recovery`` and checkpoints.  ``family`` is
+    any :data:`TOPOLOGIES` key; string names everywhere else remain accepted
+    shorthand that resolves through this registry.
+
+    Fields that a family does not accept must stay ``None`` — ``build``
+    raises otherwise rather than silently dropping them.
+    """
+
+    family: str = "ring"
+    degree: int | None = None
+    period: int | None = None
+    seed: int | None = None
+    pool: int | None = None
+
+    def __post_init__(self):
+        if self.family not in TOPOLOGIES:
+            raise ValueError(
+                f"unknown topology family {self.family!r}; "
+                f"available: {sorted(TOPOLOGIES)}"
+            )
+
+    def build(self, n: int) -> Topology:
+        factory = TOPOLOGIES[self.family]
+        accepted = inspect.signature(factory).parameters
+        kwargs = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name != "family" and getattr(self, f.name) is not None
+        }
+        unknown = set(kwargs) - set(accepted)
+        if unknown:
+            raise ValueError(
+                f"topology family {self.family!r} does not take "
+                f"{sorted(unknown)} (accepted: "
+                f"{sorted(set(accepted) - {'n'})})"
+            )
+        return factory(n, **kwargs)
+
+
+def build_topology(spec: str | TopologySpec | Topology, n: int, **kwargs) -> Topology:
+    """Resolve a topology reference to a concrete :class:`Topology`.
+
+    Accepts, in order of preference:
+
+    * a :class:`TopologySpec` — the first-class form;
+    * a string family name (+ optional factory kwargs) — shorthand that
+      resolves through the :class:`TopologySpec` registry;
+    * an already-built :class:`Topology` — passed through when its node
+      count matches (it cannot be rebuilt at another size, e.g. by a
+      rescale recovery; pass a name or spec for that).
+    """
+    if isinstance(spec, Topology):
+        if kwargs:
+            raise TypeError("cannot pass factory kwargs with a built Topology")
+        if spec.n != n:
+            raise ValueError(
+                f"topology {spec.name!r} is built for n={spec.n}, not n={n}; "
+                "pass a family name or TopologySpec so it can be rebuilt"
+            )
+        return spec
+    if isinstance(spec, str):
+        spec = TopologySpec(family=spec, **kwargs)
+    elif kwargs:
+        raise TypeError("factory kwargs only combine with a string family name")
+    return spec.build(n)

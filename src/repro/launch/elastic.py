@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Sequence
 
-from ..core.topology import Topology, build_topology
+from ..core.topology import Topology, TopologySpec, build_topology
 from ..train.checkpoint import elastic_reshape
 
 Tree = Any
@@ -35,13 +35,17 @@ class RecoveryPlan:
 
 
 def plan_recovery(
-    topology_name: str,
+    topology: str | TopologySpec | Topology,
     n_nodes: int,
     dead: Sequence[int],
     *,
     allow_reroute: bool = True,
 ) -> RecoveryPlan:
     """Choose the cheapest recovery for a set of fail-stopped nodes.
+
+    ``topology`` is any reference ``core.topology.build_topology`` resolves:
+    a family name, a :class:`TopologySpec`, or a built :class:`Topology`
+    (the latter can only be rerouted, not rebuilt at a smaller size).
 
     Rerouting keeps the mesh shape (dead indices idle with self-weight 1) —
     viable while the survivor graph stays connected and the waste (idle
@@ -54,7 +58,7 @@ def plan_recovery(
     assert alive >= 1, "no survivors"
 
     if allow_reroute and len(dead) <= max(1, n_nodes // 8):
-        base = build_topology(topology_name, n_nodes)
+        base = build_topology(topology, n_nodes)
         return RecoveryPlan(
             mode="reroute", n_nodes=n_nodes, topology=base.exclude(dead), dead=dead
         )
@@ -65,7 +69,7 @@ def plan_recovery(
     return RecoveryPlan(
         mode="rescale",
         n_nodes=new_n,
-        topology=build_topology(topology_name, new_n),
+        topology=build_topology(topology, new_n),
         dead=dead,
     )
 

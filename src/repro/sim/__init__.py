@@ -27,7 +27,7 @@ from .events import (
     get_scenario,
 )
 from .metrics import SimResult, effective_batch_fraction, is_diverged
-from .runner import simulate
+from .runner import SimSpec, simulate
 from .wallclock import (
     MIN_STEP_S,
     calibrate_from_dryrun,
@@ -49,6 +49,7 @@ __all__ = [
     "SCENARIOS",
     "Scenario",
     "SimResult",
+    "SimSpec",
     "Slowdown",
     "calibrate_from_dryrun",
     "delay_matrix",

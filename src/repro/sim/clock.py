@@ -50,6 +50,17 @@ class EventQueue:
         time, _, node, tag = heapq.heappop(self._heap)
         return time, node, tag
 
+    def peek_time(self) -> float:
+        """Completion time of the next event without popping it.
+
+        The vectorized event engine uses this to drain a whole same-time
+        completion batch (popping while ``peek_time() == t``) — exact float
+        equality is intentional: ties come from identical constant-duration
+        arithmetic, and FIFO tie-breaking within the batch is preserved by
+        the heap's sequence numbers.
+        """
+        return self._heap[0][0]
+
     def __len__(self) -> int:
         return len(self._heap)
 

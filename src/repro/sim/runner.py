@@ -28,6 +28,15 @@ version-synchronous BSP — stragglers cost wall-clock, not quality — while
 larger bounds admit genuinely stale mixing (and expose, e.g., DecentLaM's
 momentum-staleness feedback; see ``benchmarks/sim_scenarios.py``).
 
+Two event-loop strategies execute this model (``SimSpec.engine``):
+
+* ``"pernode"``  — this module: one popped completion event at a time, one
+  jitted stacked step per node-step.  The reference implementation.
+* ``"vectorized"`` (``"auto"``) — :mod:`repro.sim.vectorized`: same-time
+  completion batches share one jitted step per identical virtual view, so
+  a lockstep fleet costs one launch per *round* instead of one per
+  node-step.  Pinned bit-exact against this loop for every algorithm.
+
 Known modeling choices (documented, asserted where relevant):
 
 * Exact-mean communication (PmSGD, SlowMo's outer sync) averages the
@@ -45,6 +54,8 @@ Known modeling choices (documented, asserted where relevant):
 
 from __future__ import annotations
 
+import warnings
+from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -59,11 +70,12 @@ from ..launch.elastic import plan_recovery
 from .clock import EventQueue, node_rngs
 from .events import FailStop, LinkDegrade, Rejoin, Scenario, Slowdown, get_scenario
 from .metrics import SimResult
+from .spec import SimSpec
 
 Tree = Any
 GradFn = Callable[[Tree, Any], Tree]
 
-__all__ = ["simulate"]
+__all__ = ["SimSpec", "simulate"]
 
 
 def _row(tree: Tree, i: int) -> Tree:
@@ -128,7 +140,14 @@ def _make_step(
 
 
 def _in_neighbors(topology: Topology) -> list[set[int]]:
-    """Union over period phases of each node's gossip in-edges."""
+    """Union over period phases of each node's gossip in-edges — the dense
+    *reference* computation (scans every ``W(t)`` row).
+
+    The engines use the sparse equivalent ``Topology.in_neighbors()``
+    (derived from ``edge_classes``, O(edges) instead of O(n^2 * period));
+    ``tests/test_property_hypothesis.py`` pins the two equal over random
+    time-varying topologies.
+    """
     nbrs: list[set[int]] = [set() for _ in range(topology.n)]
     for t in range(topology.period):
         W = topology.W(t)
@@ -139,57 +158,130 @@ def _in_neighbors(topology: Topology) -> list[set[int]]:
     return nbrs
 
 
-def simulate(
-    opt: Optimizer,
-    topology_name: str,
-    n: int,
-    params0: Tree,
-    grad_fn: GradFn,
-    *,
-    lr,
-    n_steps: int,
-    scenario: Scenario | str | None = None,
-    seed: int = 0,
-    record_dt: float = 0.0,
-    metric_fn: Callable[[Tree], Any] | None = None,
-    restrict: Callable[[tuple[int, ...]], GradFn] | None = None,
-    compression: str | None = None,
-) -> SimResult:
-    """Run one scenario; terminates when every alive node has completed
-    ``n_steps`` steps (fast nodes may have done more).
+def _new_mailboxes(n: int, depth: int) -> list[deque]:
+    """Per-node snapshot mailboxes: bounded deques, oldest first.
 
-    ``restrict(alive_original_indices) -> grad_fn`` supplies the gradient
-    function for a rescaled (smaller) cluster; required only for scenarios
-    whose failures exceed the reroute budget.  ``record_dt`` > 0 records a
-    trace entry (time, step range, consensus, metric) each time simulated
-    time crosses a multiple of it.
-
-    ``compression`` applies a message compressor (``bf16`` / ``int8`` /
-    ``topk:<rate>``) to every gossip payload in either engine — the
-    scenario x compression sweep of ``benchmarks/sim_scenarios.py``.  For
-    top-k the error-feedback residuals are per-node channel state, carried
-    in the virtual stacked step and snapshotted through the mailboxes like
-    the optimizer state.  Fail-stop recovery and rejoin zero the residuals
-    of the affected nodes (checkpoint-restore semantics).
+    Each entry is ``(version, pub_time, x_row, state_row, chstate_row)``.
+    ``maxlen=depth`` makes publication O(1) — the old list + ``pop(0)``
+    churned an O(depth) copy per node per event, which a 1024-node fleet
+    pays hundreds of thousands of times per run.  Retained-depth semantics
+    (keep exactly the last ``depth`` snapshots, evict the oldest) are
+    pinned in ``tests/test_sim.py``.
     """
-    if scenario is None:
-        scenario = get_scenario("homogeneous", n, n_steps)
-    elif isinstance(scenario, str):
-        scenario = get_scenario(scenario, n, n_steps)
+    return [deque(maxlen=depth) for _ in range(n)]
 
-    lr_fn = lr if callable(lr) else (lambda _s: jnp.float32(lr))
+
+def _visible(box, deadline: float, version_cap: int):
+    """Latest snapshot in ``box`` published by ``deadline`` whose version is
+    <= ``version_cap`` (else the oldest retained).
+
+    The version cap gives SSP parameter-server semantics: a reader at
+    step ``k`` never consumes a neighbor payload *newer* than version
+    ``k`` — nodes that run ahead keep their old payloads buffered for
+    lagging readers.  Without the cap, a slow node would mix its fast
+    neighbors' future iterates, which destabilizes algorithms whose
+    gradient estimator differences iterates (DecentLaM's ``1/lr``
+    amplification); with it, ``max_staleness=1`` is exactly
+    version-synchronous BSP and stragglers cost stall time, not quality.
+    """
+    for snap in reversed(box):
+        if snap[1] <= deadline and snap[0] <= version_cap:
+            return snap
+    return box[0]
+
+
+def simulate(opt: Optimizer, spec, *args, **kwargs) -> SimResult:
+    """Run one scenario; terminates when every alive node has completed
+    ``spec.n_steps`` steps (fast nodes may have done more).
+
+    The supported signature is ``simulate(opt, spec, params0, grad_fn)``
+    with a :class:`SimSpec` carrying everything else (topology, scenario,
+    compression, recording, seed, restrict, engine — see
+    :mod:`repro.sim.spec`).
+
+    The pre-SimSpec signature ``simulate(opt, topology_name, n, params0,
+    grad_fn, *, lr=..., n_steps=..., scenario=..., seed=..., record_dt=...,
+    metric_fn=..., restrict=..., compression=...)`` still works for one
+    release behind a :class:`DeprecationWarning`; it is repacked into a
+    ``SimSpec`` verbatim, so results are identical.
+    """
+    if isinstance(spec, SimSpec):
+        if kwargs or len(args) != 2:
+            raise TypeError(
+                "simulate(opt, spec, params0, grad_fn) takes exactly four "
+                "arguments when called with a SimSpec"
+            )
+        params0, grad_fn = args
+        return _simulate(opt, spec, params0, grad_fn)
+
+    # --- deprecated kwargs-pile signature ---------------------------------
+    if len(args) != 3:
+        raise TypeError(
+            "legacy simulate(opt, topology_name, n, params0, grad_fn, ...) "
+            f"takes three positional arguments after the topology, got {len(args)}"
+        )
+    warnings.warn(
+        "simulate(opt, topology_name, n, params0, grad_fn, ...) is "
+        "deprecated; build a repro.sim.SimSpec and call "
+        "simulate(opt, spec, params0, grad_fn) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    n, params0, grad_fn = args
+    legacy = dict(kwargs)
+    spec = SimSpec(
+        topology=spec,
+        n=int(n),
+        lr=legacy.pop("lr", 1e-3),
+        n_steps=legacy.pop("n_steps", 100),
+        scenario=legacy.pop("scenario", None),
+        seed=legacy.pop("seed", 0),
+        record_dt=legacy.pop("record_dt", 0.0),
+        metric_fn=legacy.pop("metric_fn", None),
+        restrict=legacy.pop("restrict", None),
+        compression=legacy.pop("compression", None),
+    )
+    if legacy:
+        raise TypeError(f"unknown simulate() kwargs: {sorted(legacy)}")
+    return _simulate(opt, spec, params0, grad_fn)
+
+
+def _simulate(opt: Optimizer, spec: SimSpec, params0: Tree, grad_fn: GradFn):
+    scenario = spec.scenario
+    if scenario is None:
+        scenario = get_scenario("homogeneous", spec.n, spec.n_steps)
+    elif isinstance(scenario, str):
+        scenario = get_scenario(scenario, spec.n, spec.n_steps)
+
+    lr = spec.lr
+    lr_fn = lr if callable(lr) else (lambda _s, _v=float(lr): jnp.float32(_v))
 
     if scenario.engine == "delayed":
-        return _run_delayed_engine(
-            opt, topology_name, n, params0, grad_fn, lr_fn, scenario,
-            n_steps=n_steps, record_dt=record_dt, metric_fn=metric_fn,
-            compression=compression,
-        )
+        return _run_delayed_engine(opt, spec, params0, grad_fn, lr_fn, scenario)
+    if spec.engine == "pernode":
+        return _run_event_pernode(opt, spec, params0, grad_fn, lr_fn, scenario)
+    from .vectorized import run_event_vectorized
 
-    base_topology = build_topology(topology_name, n)
+    return run_event_vectorized(opt, spec, params0, grad_fn, lr_fn, scenario)
+
+
+def _run_event_pernode(
+    opt: Optimizer, spec: SimSpec, params0: Tree, grad_fn: GradFn, lr_fn,
+    scenario: Scenario,
+) -> SimResult:
+    """The reference event loop: one completion event, one jitted step."""
+    n = spec.n
+    n_steps = spec.n_steps
+    metric_fn = spec.metric_fn
+    restrict = spec.restrict
+    compression = spec.compression
+    record_dt = spec.record_dt
+    topology_ref = spec.topology
+
+    base_topology = build_topology(topology_ref, n)
     topo = base_topology
     one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
-    nbrs = _in_neighbors(topo)
+    nbrs = topo.in_neighbors()
 
     x = params0
     state = opt.init(params0)
@@ -198,18 +290,19 @@ def simulate(
     steps = np.zeros(n, dtype=np.int64)
     stall = np.zeros(n, dtype=np.float64)
     speed_scale = np.ones(n, dtype=np.float64)
-    link_delay = np.zeros((n, n), dtype=np.float64)
-    rngs = node_rngs(seed, n)
+    # sparse per-edge extra latency: only LinkDegrade-touched edges appear
+    # (the old dense (n, n) matrix was all-zeros for every registry
+    # scenario — at fleet scale that is n^2 floats for nothing)
+    link_delay: dict[tuple[int, int], float] = {}
+    rngs = node_rngs(spec.seed, n)
     durations = scenario.duration_models(n)
     dead: set[int] = set()
     kept_indices = tuple(range(n))
     recovery_mode = "none"
     rescaled = False
 
-    # mailbox[j]: list of (step, pub_time, x_row, state_row, chstate_row),
-    # oldest first
     depth = scenario.max_staleness + 4
-    mailbox: list[list] = [[] for _ in range(n)]
+    mailbox = _new_mailboxes(n, depth)
     events_log: list[dict] = []
     trace: list[dict] = []
     next_record = record_dt if record_dt > 0 else None
@@ -218,27 +311,6 @@ def simulate(
         mailbox[i].append(
             (int(steps[i]), t, _row(x, i), _row(state, i), _row(chstate, i))
         )
-        if len(mailbox[i]) > depth:
-            mailbox[i].pop(0)
-
-    def visible(j: int, deadline: float, version_cap: int):
-        """Latest snapshot of ``j`` published by ``deadline`` whose version is
-        <= ``version_cap`` (else the oldest retained).
-
-        The version cap gives SSP parameter-server semantics: a reader at
-        step ``k`` never consumes a neighbor payload *newer* than version
-        ``k`` — nodes that run ahead keep their old payloads buffered for
-        lagging readers.  Without the cap, a slow node would mix its fast
-        neighbors' future iterates, which destabilizes algorithms whose
-        gradient estimator differences iterates (DecentLaM's ``1/lr``
-        amplification); with it, ``max_staleness=1`` is exactly
-        version-synchronous BSP and stragglers cost stall time, not quality.
-        """
-        box = mailbox[j]
-        for snap in reversed(box):
-            if snap[1] <= deadline and snap[0] <= version_cap:
-                return snap
-        return box[0]
 
     def alive_nodes() -> list[int]:
         return [i for i in range(n_cur) if i not in dead]
@@ -246,7 +318,7 @@ def simulate(
     def blocked_by(i: int) -> list[int]:
         """Alive in-neighbors too far behind for ``i`` to start its next step."""
         horizon = steps[i] + 1 - scenario.max_staleness
-        return [j for j in sorted(nbrs[i]) if j not in dead and steps[j] < horizon]
+        return [j for j in nbrs[i] if j not in dead and steps[j] < horizon]
 
     queue = EventQueue()
     start_time = np.zeros(n, dtype=np.float64)
@@ -260,6 +332,7 @@ def simulate(
             waiting[i] = now
             return
         dur = durations[i](i, int(steps[i]), rngs[i]) * speed_scale[i]
+        assert dur > 0.0, f"step durations must be positive (node {i}: {dur})"
         start_time[i] = now
         queue.push(now + dur, i, int(epoch[i]))
 
@@ -314,7 +387,7 @@ def simulate(
             elif isinstance(ev, LinkDegrade):
                 for (u, v) in ev.edges:
                     if u < n_cur and v < n_cur:
-                        link_delay[u, v] = link_delay[v, u] = ev.delay
+                        link_delay[(u, v)] = link_delay[(v, u)] = ev.delay
                 events_log.append({"t": t, "event": f"link_degrade{ev.edges}+{ev.delay}"})
             elif isinstance(ev, FailStop):
                 dead |= set(int(d) for d in ev.nodes)
@@ -322,7 +395,7 @@ def simulate(
                     waiting.pop(int(d), None)
                     if int(d) < n_cur:
                         epoch[int(d)] += 1  # invalidate any queued completion
-                plan = plan_recovery(topology_name, n_cur, sorted(dead))
+                plan = plan_recovery(topology_ref, n_cur, sorted(dead))
                 recovery_mode = plan.mode
                 events_log.append(
                     {"t": t, "event": f"failstop{tuple(sorted(ev.nodes))}->{plan.mode}"}
@@ -330,7 +403,7 @@ def simulate(
                 if plan.mode == "reroute":
                     topo = plan.topology
                     one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
-                    nbrs = _in_neighbors(topo)
+                    nbrs = topo.in_neighbors()
                 else:
                     _rescale(plan, t)
             elif isinstance(ev, Rejoin):
@@ -359,15 +432,20 @@ def simulate(
                     # across re-entry)
                     row_x, row_s = _row(x, i), _row(state, i)
                     row_c = _row(chstate, i)
-                    mailbox[i] = [
-                        (v, t, row_x, row_s, row_c)
-                        for v in range(max(0, min(min_alive, sync_step)), sync_step + 1)
-                    ]
-                plan = plan_recovery(topology_name, n_cur, sorted(dead)) if dead else None
+                    mailbox[i] = deque(
+                        (
+                            (v, t, row_x, row_s, row_c)
+                            for v in range(
+                                max(0, min(min_alive, sync_step)), sync_step + 1
+                            )
+                        ),
+                        maxlen=depth,
+                    )
+                plan = plan_recovery(topology_ref, n_cur, sorted(dead)) if dead else None
                 topo = plan.topology if plan else base_topology
                 recovery_mode = plan.mode if plan else "reroute"
                 one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
-                nbrs = _in_neighbors(topo)
+                nbrs = topo.in_neighbors()
                 events_log.append({"t": t, "event": f"rejoin{tuple(back)}"})
                 for i in back:
                     schedule(i, t)
@@ -400,7 +478,7 @@ def simulate(
         steps = np.full(new_n, sync_step, dtype=np.int64)
         stall = stall[kept].copy()
         speed_scale = speed_scale[kept].copy()
-        link_delay = np.zeros((new_n, new_n), dtype=np.float64)
+        link_delay = {}
         epoch[:new_n] = epoch[kept] + 1  # queue was drained; invalidate stale pushes
         rngs = [rngs[i] for i in kept]
         durations = [durations[i] for i in kept]
@@ -411,8 +489,8 @@ def simulate(
         grad_fn = restrict(kept_indices)
         topo = plan.topology
         one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
-        nbrs = _in_neighbors(topo)
-        mailbox[:] = [[] for _ in range(new_n)]
+        nbrs = topo.in_neighbors()
+        mailbox[:] = _new_mailboxes(new_n, depth)
         waiting.clear()
         # drop every pending completion (the collapse is a sync barrier)
         while queue:
@@ -451,7 +529,9 @@ def simulate(
                 rows_c.append(_row(chstate, i))
                 vers[j] = steps[i]
             else:
-                snap = visible(j, st - link_delay[j, i], int(steps[i]))
+                snap = _visible(
+                    mailbox[j], st - link_delay.get((j, i), 0.0), int(steps[i])
+                )
                 rows_x.append(snap[2])
                 rows_s.append(snap[3])
                 rows_c.append(snap[4])
@@ -540,14 +620,17 @@ def simulate(
 
 
 def _run_delayed_engine(
-    opt, topology_name, n, params0, grad_fn, lr_fn, scenario,
-    *, n_steps, record_dt, metric_fn, compression=None,
+    opt, spec: SimSpec, params0, grad_fn, lr_fn, scenario,
 ) -> SimResult:
     """Synchronous bounded-staleness rounds (``engine="delayed"``)."""
-    topology = build_topology(topology_name, n)
+    n = spec.n
+    n_steps = spec.n_steps
+    metric_fn = spec.metric_fn
+    record_dt = spec.record_dt
+    topology = build_topology(spec.topology, n)
     channel = DelayedStackedChannel(
         topology, scenario.gossip_delay, calls_per_step=opt.gossips_per_step,
-        compression=compression,
+        compression=spec.compression,
     )
     mean = make_stacked_mean(n)
     chstate = channel.init(params0)

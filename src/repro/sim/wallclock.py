@@ -224,4 +224,7 @@ def project_wallclock(
         "wallclock_s": wallclock_s,
         "steps_per_s": (total_steps / wallclock_s) if wallclock_s > 0 else 0.0,
         "stall_s": float(result.stall_time.sum()) * price["step_time_s"],
+        # fleet cost: device-hours burned by the run (wallclock x cluster
+        # size) — the number a capacity plan actually budgets against
+        "device_hours": wallclock_s * result.n_nodes / 3600.0,
     }

@@ -30,7 +30,17 @@ Validates the machine-readable invariants the simulator subsystem promises
   compressor) cell with no divergence; bf16 is staleness-neutral (bias
   within 1.5x of uncompressed in every cell); bf16- and int8-compressed
   ``decentlam-sa`` still beats uncompressed DmSGD on every sweep scenario;
-  top-k+EF records its error-feedback x staleness interaction ratio.
+  top-k+EF records its error-feedback x staleness interaction ratio;
+* the fleet sweep (ISSUE 6) ran at every size in ``FLEET_SIZES``
+  (64/256/1024) and its recorded claims hold: ``decentlam-sa``'s bias at
+  n=256 under stale gossip is no worse than DmSGD's, and the vectorized
+  engine's measured n=1024 cost per node-step stays under the pinned
+  budget (the scaling claim that keeps fleet sims tractable).  DmSGD must
+  never diverge at fleet scale; plain DecentLaM's divergence on the
+  *time-varying* one-peer graph (its 1/lr-scaled correction assumes a
+  static W — verified against the lockstep oracle, not an engine artifact)
+  is expected and must carry nulled metrics, as is decentlam-sa's at
+  gap 0 where it coincides with plain decentlam.
 
 Exit code 1 on any violation.
 """
@@ -61,6 +71,10 @@ ALGORITHMS = ("dsgd", "dmsgd", "decentlam", "decentlam-sa")
 SWEEP_COMPRESSIONS = ("bf16", "int8", "topk:0.1")
 SWEEP_SCENARIOS = ("homogeneous", "stale_gossip_k2", "straggler_1slow_async")
 SWEEP_ALGORITHMS = ("dmsgd", "decentlam-sa")
+
+FLEET_SIZES = ("64", "256", "1024")
+FLEET_SCENARIOS = ("homogeneous", "straggler_tail", "stale_gossip_k2")
+FLEET_ALGORITHMS = ("dmsgd", "decentlam", "decentlam-sa")
 
 # a physically plausible per-node step rate ceiling: the wallclock model
 # floors the step price at ~1 ms, so > ~1k steps/s/node means the floor
@@ -188,6 +202,60 @@ def main() -> int:
                     "ratio not recorded"
                 )
 
+    # fleet sweep (ISSUE 6): sizes present, no divergence, claims hold
+    fleet = bench.get("fleet", {}).get("results", {})
+    if not fleet:
+        errors.append("fleet: missing (run benchmarks/sim_scenarios.py)")
+    for size in FLEET_SIZES:
+        if size not in fleet:
+            errors.append(f"fleet: missing size n={size}")
+            continue
+        for scen in FLEET_SCENARIOS:
+            for algo in FLEET_ALGORITHMS:
+                entry = fleet[size].get(scen, {}).get(algo)
+                if entry is None:
+                    errors.append(f"fleet/{size}: missing cell {scen}/{algo}")
+                    continue
+                if entry.get("diverged"):
+                    # plain decentlam's divergence on the time-varying
+                    # one-peer graph is the recorded finding (its 1/lr-scaled
+                    # correction assumes a static W); decentlam-sa inherits
+                    # it only at gap 0 (homogeneous == decentlam).  DmSGD
+                    # must never diverge, and the staleness-aware repair must
+                    # hold on the scenarios it is claimed for.
+                    expected = algo == "decentlam" or (
+                        algo == "decentlam-sa" and scen == "homogeneous"
+                    )
+                    if not expected:
+                        errors.append(f"fleet/{size}/{scen}/{algo}: diverged")
+                    for key in ("bias_vs_x_star", "consensus"):
+                        if entry.get(key) is not None:
+                            errors.append(
+                                f"fleet/{size}/{scen}/{algo}: diverged but "
+                                f"reports {key} (must be null)"
+                            )
+                if entry.get("device_hours") is None:
+                    errors.append(
+                        f"fleet/{size}/{scen}/{algo}: device_hours not recorded"
+                    )
+    fc = bench.get("fleet_claims", {})
+    if not fc:
+        errors.append("fleet_claims: missing")
+    else:
+        sa_claim = fc.get("sa_no_worse_at_256_stale", {})
+        if not sa_claim.get("holds"):
+            errors.append(
+                "fleet_claims: decentlam-sa bias "
+                f"{sa_claim.get('decentlam_sa_bias')} worse than DmSGD "
+                f"{sa_claim.get('dmsgd_bias')} at n=256 under stale gossip"
+            )
+        if not fc.get("engine_within_budget"):
+            errors.append(
+                "fleet_claims: vectorized engine "
+                f"{fc.get('engine_n1024_s_per_node_step')} s/node-step at "
+                f"n=1024 over budget {fc.get('engine_budget_s_per_node_step')}"
+            )
+
     n_nodes = bench.get("config", {}).get("n", 0)
     for name, algos in scenarios.items():
         for algo, entry in algos.items():
@@ -204,7 +272,10 @@ def main() -> int:
             print(f"  {e}")
         return 1
     n_claims = len(bench.get("claims", {})) + len(bench.get("sa_claims", {}))
-    print(f"SIM BENCH GATE: ok ({len(scenarios)} scenarios, {n_claims} claims hold)")
+    print(
+        f"SIM BENCH GATE: ok ({len(scenarios)} scenarios, {n_claims} claims, "
+        f"fleet sizes {'/'.join(sorted(fleet, key=int))} hold)"
+    )
     return 0
 
 

@@ -5,6 +5,7 @@ cleanly when hypothesis isn't installed so bare-environment collection
 still works.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -300,3 +301,98 @@ def test_plane_pack_roundtrip_and_parity_any_tree(tree, algo):
                 )
             )
         ), sk
+
+
+# ---------------------------------------------------------------------------
+# Simulator invariants: sparse neighbor maps + engine parity
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    st.sampled_from(["ring", "torus", "exp", "full", "one-peer-exp",
+                     "one-peer-ring", "random-match"]),
+    st.sampled_from([4, 6, 8, 16]),
+    st.integers(0, 5),
+)
+def test_sparse_in_neighbors_match_dense_union(family, n, seed):
+    """The engines' sparse per-edge neighbor map (derived from
+    ``Topology.edge_classes``) must equal the dense reference union over
+    period phases (``repro.sim.runner._in_neighbors`` scans every W(t) row)
+    — for every family, including the time-varying ones, at random sizes."""
+    from repro.core.topology import TopologySpec
+    from repro.sim.runner import _in_neighbors
+
+    if family == "torus" and int(np.sqrt(n)) ** 2 != n:
+        n = 16
+    if family == "one-peer-exp":
+        n = 1 << (n - 1).bit_length()  # power-of-two hypercube matchings
+    if family in ("one-peer-ring", "random-match") and n % 2:
+        n += 1
+    spec = TopologySpec(family=family, seed=seed) if family == "random-match" \
+        else TopologySpec(family=family)
+    topo = spec.build(n)
+    dense = _in_neighbors(topo)
+    sparse = topo.in_neighbors()
+    assert len(sparse) == topo.n
+    for i in range(topo.n):
+        assert set(sparse[i]) == dense[i], (family, n, i)
+        assert list(sparse[i]) == sorted(sparse[i])
+    # CSR form agrees with the tuple form
+    indptr, indices = topo.in_neighbor_csr()
+    for i in range(topo.n):
+        assert list(indices[indptr[i]:indptr[i + 1]]) == list(sparse[i])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 10_000),
+    st.sampled_from([1, 2, 4, 8]),
+    st.lists(st.sampled_from([1.0, 1.5, 2.0, 3.0]), min_size=8, max_size=8),
+    st.booleans(),
+    st.booleans(),
+)
+def test_event_engines_bit_exact_on_random_scenarios(
+    seed, max_staleness, speeds, with_failstop, with_linkdeg
+):
+    """Vectorized vs per-node engine on *randomized* scenarios: arbitrary
+    constant speed mixes (full ties, partial ties, no ties), random SSP
+    bounds, optional fail-stop (reroute) and link degradation.  Full
+    SimResult bit-equality — the generative version of the pinned registry
+    parity test."""
+    from repro.core import OptimizerConfig, make_optimizer
+    from repro.sim import FailStop, LinkDegrade, Scenario, SimSpec, simulate
+    from repro.sim.clock import ConstantDuration
+
+    events = ()
+    if with_failstop:
+        events += (FailStop(at_step=4, nodes=(3,)),)
+    if with_linkdeg:
+        events += (LinkDegrade(at_step=3, edges=((0, 1), (5, 6)), delay=1.75),)
+    sc = Scenario(
+        name="rand", max_staleness=max_staleness, events=events,
+        speeds=lambda n, _sp=tuple(speeds): [ConstantDuration(s) for s in _sp],
+    )
+    opt = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
+    x0 = jnp.zeros((8, 5), jnp.float32)
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((8, 5, 5)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+
+    def grad_fn(x, _s):
+        return jnp.einsum("nij,nj->ni", A, x) + b
+
+    kw = dict(topology="ring", n=8, n_steps=12, lr=1e-2, scenario=sc,
+              seed=seed, record_dt=2.5)
+    r1 = simulate(opt, SimSpec(engine="pernode", **kw), x0, grad_fn)
+    r2 = simulate(opt, SimSpec(engine="vectorized", **kw), x0, grad_fn)
+    assert bool(jnp.all(r1.params == r2.params))
+    assert all(
+        bool(jnp.all(a == b2)) for a, b2 in
+        zip(jax.tree.leaves(r1.opt_state), jax.tree.leaves(r2.opt_state))
+    )
+    assert (r1.steps == r2.steps).all()
+    assert (r1.stall_time == r2.stall_time).all()
+    assert r1.sim_time == r2.sim_time
+    assert r1.trace == r2.trace
+    assert r1.events_log == r2.events_log

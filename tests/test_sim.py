@@ -35,6 +35,7 @@ from repro.sim import (
     LognormalDuration,
     PeriodicStragglerDuration,
     Scenario,
+    SimSpec,
     delay_matrix,
     effective_batch_fraction,
     get_scenario,
@@ -46,6 +47,12 @@ from repro.sim import (
 
 N, D, M = 4, 4, 6
 TOPOLOGIES = ["ring", "torus", "exp", "one-peer-exp", "random-match", "full"]
+# every scenario the discrete-event loop executes (the delayed-engine
+# stale_gossip_k* entries run synchronous rounds and have no event loop)
+EVENT_SCENARIOS = [
+    "homogeneous", "straggler_1slow", "straggler_1slow_async",
+    "failstop_quarter", "churn", "straggler_tail",
+]
 
 
 @pytest.fixture(scope="module")
@@ -69,6 +76,11 @@ def _tree_equal(a, b) -> bool:
     )
 
 
+def _sim(opt, topology, n, x0, grad_fn, **kw):
+    """simulate() through the SimSpec front door (the supported API)."""
+    return simulate(opt, SimSpec(topology=topology, n=n, **kw), x0, grad_fn)
+
+
 # ---------------------------------------------------------------------------
 # The oracle remains the oracle (acceptance criterion)
 # ---------------------------------------------------------------------------
@@ -83,7 +95,7 @@ def test_event_engine_matches_oracle(problem, algorithm, topology):
     p_ref, s_ref, _ = run_stacked(
         opt, build_topology(topology, N), x0, _grad(problem), lr=1e-2, n_steps=4
     )
-    res = simulate(
+    res = _sim(
         opt, topology, N, x0, _grad(problem), lr=1e-2, n_steps=4,
         scenario="homogeneous",
     )
@@ -180,7 +192,7 @@ def test_delayed_engine_reports_version_gaps(problem):
     at the scenario's configured gossip delay."""
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((N, D), jnp.float32)
-    r = simulate(
+    r = _sim(
         opt, "ring", N, x0, _grad(problem), lr=1e-2, n_steps=6,
         scenario="stale_gossip_k2", record_dt=2.0,
     )
@@ -232,12 +244,12 @@ def test_straggler_deterministic_from_seed(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
     kw = dict(lr=1e-2, n_steps=20, scenario="straggler_1slow", seed=5)
-    r1 = simulate(opt, "ring", 8, x0, _grad(problem8), **kw)
-    r2 = simulate(opt, "ring", 8, x0, _grad(problem8), **kw)
+    r1 = _sim(opt, "ring", 8, x0, _grad(problem8), **kw)
+    r2 = _sim(opt, "ring", 8, x0, _grad(problem8), **kw)
     assert (r1.steps == r2.steps).all()
     assert r1.sim_time == r2.sim_time
     assert _tree_equal(r1.params, r2.params)
-    r3 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+    r3 = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
                   scenario="straggler_1slow", seed=6)
     assert r3.sim_time != r1.sim_time  # different draws actually happened
 
@@ -246,7 +258,7 @@ def test_straggler_ssp_neighbor_gap_bounded(problem8):
     scenario = get_scenario("straggler_1slow_async", 8, 30)
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=30,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=30,
                  scenario=scenario, seed=0)
     topo = build_topology("ring", 8)
     W = topo.W(0)
@@ -264,9 +276,9 @@ def test_straggler_bsp_preserves_quality(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
     metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
-    r_h = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=60,
+    r_h = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=60,
                    scenario="homogeneous", metric_fn=metric)
-    r_s = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=60,
+    r_s = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=60,
                    scenario="straggler_1slow", seed=0, metric_fn=metric)
     assert r_s.stall_time.sum() > 0 and r_s.sim_time > r_h.sim_time
     assert r_s.final_metric == pytest.approx(r_h.final_metric, rel=0.05)
@@ -279,9 +291,9 @@ def test_straggler_stall_accounting_pinned(problem8):
     became ready; the flush must count it)."""
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    r_h = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+    r_h = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
                    scenario="homogeneous")
-    r_s = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+    r_s = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
                    scenario="straggler_1slow", seed=0)
     assert r_s.stall_time.sum() > 0
     assert r_s.sim_time > r_h.sim_time
@@ -313,7 +325,7 @@ def test_failstop_within_budget_reroutes(problem8):
     sc = Scenario(name="fs1", events=(FailStop(at_step=4, nodes=(3,)),))
     opt = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12, scenario=sc)
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12, scenario=sc)
     assert r.recovery_mode == "reroute"
     assert r.n_nodes == 8 and r.dead == (3,)
     assert r.steps[3] <= 5  # frozen at failure
@@ -326,7 +338,7 @@ def test_failstop_quarter_rescales(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
     metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
                  scenario="failstop_quarter", metric_fn=metric,
                  restrict=_restrict_for(problem8))
     assert r.recovery_mode == "rescale"
@@ -336,7 +348,7 @@ def test_failstop_quarter_rescales(problem8):
     assert (r.steps >= 15).all()
     assert np.isfinite(r.final_metric)
     # deterministic end to end
-    r2 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
+    r2 = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
                   scenario="failstop_quarter", metric_fn=metric,
                   restrict=_restrict_for(problem8))
     assert _tree_equal(r.params, r2.params) and r.final_metric == r2.final_metric
@@ -346,14 +358,14 @@ def test_rescale_without_restrict_raises(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((8, 6), jnp.float32)
     with pytest.raises(ValueError, match="restrict"):
-        simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
+        _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=15,
                  scenario="failstop_quarter")
 
 
 def test_churn_rejoin_recovers(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=24,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=24,
                  scenario="churn", seed=1)
     kinds = [e["event"] for e in r.events_log]
     assert any(k.startswith("failstop") for k in kinds)
@@ -376,7 +388,7 @@ def test_rejoin_does_not_double_schedule(problem8):
     )
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20, scenario=sc)
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20, scenario=sc)
     assert r.dead == ()
     # the flapping node runs at the same rate as everyone else afterwards
     assert int(r.steps[1]) <= int(r.steps.max()) + 1
@@ -386,7 +398,7 @@ def test_rejoin_does_not_double_schedule(problem8):
 def test_trace_has_no_duplicate_final_tick(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12,
                  scenario="homogeneous", record_dt=4.0)
     ticks = [e["t"] for e in r.trace]
     assert len(ticks) == len(set(ticks))
@@ -397,7 +409,7 @@ def test_trace_recording(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
     x0 = jnp.zeros((8, 6), jnp.float32)
     metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12,
                  scenario="homogeneous", record_dt=4.0, metric_fn=metric)
     assert len(r.trace) >= 3
     for e in r.trace:
@@ -418,9 +430,9 @@ def test_wallclock_projection_orders_scenarios(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
     topo = build_topology("ring", 8)
-    r_h = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+    r_h = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
                    scenario="homogeneous")
-    r_s = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+    r_s = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
                    scenario="straggler_1slow", seed=0)
     p_h = project_wallclock(r_h, topo, opt=opt, grad_fn=_grad(problem8))
     p_s = project_wallclock(r_s, topo, opt=opt, grad_fn=_grad(problem8))
@@ -443,7 +455,7 @@ def test_wallclock_price_floor_is_physically_plausible(problem8):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
     topo = build_topology("ring", 8)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
                  scenario="homogeneous")
     p = project_wallclock(r, topo, opt=opt, grad_fn=_grad(problem8))
     assert p["step_time_s"] >= MIN_STEP_S
@@ -471,7 +483,7 @@ def test_wallclock_calibration_from_dryrun_pinned(problem8, tmp_path):
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
     topo = build_topology("ring", 8)
-    r = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
+    r = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=20,
                  scenario="straggler_1slow", seed=0)
 
     measured = 0.05  # 50 ms/step, as launch.train --measure-json reports it
@@ -505,19 +517,19 @@ def test_event_engine_compression_threads_channel_state(problem8):
     x0 = jnp.zeros((8, 6), jnp.float32)
     metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.8))
-    base = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+    base = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
                     scenario="straggler_1slow_async", seed=0, metric_fn=metric)
-    again = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+    again = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
                      scenario="straggler_1slow_async", seed=0, metric_fn=metric,
                      compression=None)
     np.testing.assert_array_equal(np.asarray(base.params), np.asarray(again.params))
-    bf16 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+    bf16 = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
                     scenario="straggler_1slow_async", seed=0, metric_fn=metric,
                     compression="bf16")
     assert np.isfinite(bf16.final_metric)
     assert bf16.final_metric <= base.final_metric * 2.0 + 1e-3
     # delayed engine too (stale_gossip_* scenarios)
-    k2 = simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
+    k2 = _sim(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=40,
                   scenario="stale_gossip_k2", seed=0, metric_fn=metric,
                   compression="int8")
     assert np.isfinite(k2.final_metric)
@@ -530,12 +542,12 @@ def test_event_engine_decentlam_sa_async_straggler_converges(problem8):
     x0 = jnp.zeros((8, 6), jnp.float32)
     metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
     sa = make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.8))
-    r = simulate(sa, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=80,
+    r = _sim(sa, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=80,
                  scenario="straggler_1slow_async", seed=0, metric_fn=metric)
     assert np.isfinite(r.final_metric) and r.final_metric < 1.0
     assert np.isfinite(r.final_consensus)
     dm = make_optimizer(OptimizerConfig(algorithm="dmsgd", momentum=0.8))
-    r_dm = simulate(dm, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=80,
+    r_dm = _sim(dm, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=80,
                     scenario="straggler_1slow_async", seed=0, metric_fn=metric)
     assert r.final_metric <= r_dm.final_metric * 1.5
 
@@ -556,9 +568,137 @@ def test_is_diverged_marks_unrankable_runs():
 
 def test_scenario_registry_contents():
     for name in ("homogeneous", "straggler_1slow", "failstop_quarter", "churn",
+                 "straggler_tail",
                  "stale_gossip_k1", "stale_gossip_k2", "stale_gossip_k4"):
         sc = get_scenario(name, 8, 100)
         assert sc.name == name
         assert len(sc.duration_models(8)) == 8
     with pytest.raises(ValueError, match="unknown scenario"):
         get_scenario("nope", 8, 100)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized engine == per-node reference engine (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+
+def _full_result_equal(r1, r2) -> bool:
+    return (
+        _tree_equal(r1.params, r2.params)
+        and _tree_equal(r1.opt_state, r2.opt_state)
+        and (r1.steps == r2.steps).all()
+        and (r1.stall_time == r2.stall_time).all()
+        and r1.sim_time == r2.sim_time
+        and r1.n_nodes == r2.n_nodes
+        and r1.recovery_mode == r2.recovery_mode
+        and r1.dead == r2.dead
+        and r1.kept == r2.kept
+        and r1.trace == r2.trace
+        and r1.events_log == r2.events_log
+        and r1.final_metric == r2.final_metric
+        and r1.final_consensus == r2.final_consensus
+    )
+
+
+@pytest.mark.parametrize("algorithm", ALGORITHMS)
+def test_vectorized_engine_bit_exact_with_pernode(problem8, algorithm):
+    """The node-batched engine must reproduce the per-node reference loop
+    bit-for-bit — every algorithm x every event scenario in the registry,
+    full SimResult (params, state, steps, stall accounting, trace, events).
+    The two engines are independent implementations (ring mailboxes +
+    grouped jitted steps vs deque mailboxes + one launch per event), so
+    agreement here pins the whole execution model."""
+    opt = make_optimizer(OptimizerConfig(algorithm=algorithm, momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    metric = functools.partial(bias_to_optimum, x_star=problem8.x_star)
+    for scenario in EVENT_SCENARIOS:
+        kw = dict(lr=1e-2, n_steps=15, scenario=scenario, seed=3,
+                  record_dt=3.0, metric_fn=metric,
+                  restrict=_restrict_for(problem8))
+        r_ref = _sim(opt, "ring", 8, x0, _grad(problem8), engine="pernode", **kw)
+        r_vec = _sim(opt, "ring", 8, x0, _grad(problem8), engine="vectorized", **kw)
+        assert _full_result_equal(r_ref, r_vec), (algorithm, scenario)
+
+
+def test_vectorized_engine_bit_exact_on_time_varying_topology(problem8):
+    """Same pin on a sparse time-varying graph (phase indices + edge-class
+    neighbor maps must agree between the engines) and under compression
+    (channel-state rows thread through the ring mailboxes)."""
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam-sa", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    for topology, comp in [("one-peer-exp", None), ("one-peer-ring", None),
+                           ("ring", "topk:0.5")]:
+        kw = dict(lr=1e-2, n_steps=20, scenario="straggler_1slow_async",
+                  seed=0, compression=comp)
+        r_ref = _sim(opt, topology, 8, x0, _grad(problem8), engine="pernode", **kw)
+        r_vec = _sim(opt, topology, 8, x0, _grad(problem8), engine="vectorized", **kw)
+        assert _full_result_equal(r_ref, r_vec), (topology, comp)
+
+
+# ---------------------------------------------------------------------------
+# SimSpec front door + deprecation shim
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_kwargs_shim_warns_and_matches(problem8):
+    """The pre-SimSpec signature still works for one release: it must emit
+    a DeprecationWarning and produce the identical result."""
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    spec = SimSpec(topology="ring", n=8, lr=1e-2, n_steps=12,
+                   scenario="straggler_1slow", seed=4)
+    r_new = simulate(opt, spec, x0, _grad(problem8))
+    with pytest.warns(DeprecationWarning, match="SimSpec"):
+        r_old = simulate(opt, "ring", 8, x0, _grad(problem8),
+                         lr=1e-2, n_steps=12, scenario="straggler_1slow", seed=4)
+    assert _full_result_equal(r_new, r_old)
+    # unknown kwargs are rejected, not silently dropped
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError, match="unknown simulate"):
+            simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, typo=1)
+
+
+def test_simspec_validation_and_call_shape(problem8):
+    opt = make_optimizer(OptimizerConfig(algorithm="dsgd"))
+    x0 = jnp.zeros((8, 6), jnp.float32)
+    with pytest.raises(ValueError, match="unknown engine"):
+        SimSpec(engine="warp")
+    spec = SimSpec(topology="ring", n=8, n_steps=5)
+    # SimSpec calls take exactly (opt, spec, params0, grad_fn) — no kwargs
+    with pytest.raises(TypeError, match="exactly four"):
+        simulate(opt, spec, x0, _grad(problem8), lr=1e-2)
+    with pytest.raises(TypeError, match="exactly four"):
+        simulate(opt, spec, x0)
+    # engine="pernode"/"auto" both run; spec is reusable (frozen value)
+    r1 = simulate(opt, spec, x0, _grad(problem8))
+    r2 = simulate(opt, spec, x0, _grad(problem8))
+    assert _full_result_equal(r1, r2)
+
+
+# ---------------------------------------------------------------------------
+# Mailbox semantics (pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_mailbox_retained_depth_semantics():
+    """Publication keeps exactly the last ``depth`` snapshots (oldest
+    evicted, O(1) via deque maxlen) and ``_visible`` scans newest-first
+    under the publication deadline and the SSP version cap, falling back to
+    the oldest retained entry."""
+    from repro.sim.runner import _new_mailboxes, _visible
+
+    depth = 3
+    boxes = _new_mailboxes(2, depth)
+    box = boxes[0]
+    for v in range(5):  # versions 0..4 published at t = v
+        box.append((v, float(v), f"x{v}", f"s{v}", f"c{v}"))
+    # retained-depth: exactly the last `depth`, oldest first
+    assert [snap[0] for snap in box] == [2, 3, 4]
+    # newest visible under deadline + version cap
+    assert _visible(box, deadline=10.0, version_cap=10)[0] == 4
+    assert _visible(box, deadline=3.5, version_cap=10)[0] == 3
+    assert _visible(box, deadline=10.0, version_cap=3)[0] == 3
+    assert _visible(box, deadline=3.0, version_cap=2)[0] == 2  # pub == deadline ok
+    # nothing qualifies -> oldest retained (the SSP fallback)
+    assert _visible(box, deadline=0.5, version_cap=10)[0] == 2
+    assert boxes[1] is not box and len(boxes[1]) == 0

@@ -127,3 +127,72 @@ def test_metropolis_irregular_graph():
 def test_disconnected_is_identity():
     t = build_topology("none", 8)
     np.testing.assert_array_equal(t.W(0), np.eye(8))
+
+
+# ---------------------------------------------------------------------------
+# TopologySpec registry + sparse/time-varying generators (fleet PR)
+# ---------------------------------------------------------------------------
+
+
+def test_topology_spec_builds_and_validates():
+    from repro.core.topology import TopologySpec
+
+    t = TopologySpec(family="one-peer-exp", period=2).build(16)
+    t.validate()
+    assert t.period == 2  # truncated distance cycle
+    with pytest.raises(ValueError, match="unknown topology family"):
+        TopologySpec(family="warp")
+    # params a family doesn't accept are an error, not silently dropped
+    with pytest.raises(ValueError, match="does not take"):
+        TopologySpec(family="ring", seed=3).build(8)
+
+
+def test_build_topology_accepts_spec_string_and_passthrough():
+    from repro.core.topology import Topology, TopologySpec
+
+    via_spec = build_topology(TopologySpec(family="random-match", seed=3), 8)
+    via_str = build_topology("random-match", 8, seed=3)
+    for s in range(via_spec.period):
+        np.testing.assert_array_equal(via_spec.W(s), via_str.W(s))
+    # an already-built Topology passes straight through
+    assert build_topology(via_spec, 8) is via_spec
+    with pytest.raises(ValueError, match="built for n=8"):
+        build_topology(via_spec, 16)  # n mismatch must not pass silently
+    with pytest.raises(TypeError, match="factory kwargs"):
+        build_topology(via_spec, 8, seed=3)
+
+
+def test_one_peer_ring_matchings():
+    t = build_topology("one-peer-ring", 8)
+    t.validate()
+    assert t.period == 2
+    union = set()
+    for s in range(t.period):
+        W = t.W(s)
+        off = W - np.diag(np.diag(W))
+        # degree-1 matching per phase
+        assert (np.count_nonzero(off, axis=1) == 1).all()
+        union |= {(i, j) for i, j in zip(*np.nonzero(off))}
+    # union over the period is the full ring
+    ring = {(i, (i + 1) % 8) for i in range(8)} | {((i + 1) % 8, i) for i in range(8)}
+    assert union == ring
+
+
+def test_symmetric_exponential_degree_truncation():
+    full = build_topology("exp", 16)
+    trunc = build_topology("exp", 16, degree=2)
+    off_full = np.count_nonzero(full.W(0) - np.diag(np.diag(full.W(0))), axis=1)
+    off_trunc = np.count_nonzero(trunc.W(0) - np.diag(np.diag(trunc.W(0))), axis=1)
+    assert (off_trunc < off_full).all()
+    assert (off_trunc <= 4).all()  # +-2^0, +-2^1
+    trunc.validate()
+    assert trunc.rho() > full.rho()  # sparser graph mixes slower
+
+
+def test_in_neighbor_csr_shapes():
+    t = build_topology("one-peer-exp", 16)
+    nbrs = t.in_neighbors()
+    indptr, indices = t.in_neighbor_csr()
+    assert indptr.shape == (17,) and indptr[0] == 0
+    assert indptr[-1] == sum(len(x) for x in nbrs)
+    assert all(len(nbrs[i]) == indptr[i + 1] - indptr[i] for i in range(16))
