@@ -3,10 +3,12 @@
 ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
 
 ``kernel_microbench`` additionally writes ``BENCH_kernels.json``
-(per-algorithm fused/unfused tail timings) and ``sim_scenarios`` writes
+(per-algorithm fused/unfused tail timings), ``sim_scenarios`` writes
 ``BENCH_sim.json`` (per-scenario bias/throughput under the cluster
-simulator) so the perf/robustness trajectory is machine-readable across
-PRs; both are gated in CI (``tests/ci/check_bench_sim.py``).
+simulator), and ``serving_microbench`` writes ``BENCH_serve.json``
+(request throughput, snapshot-handoff cost, publish-rate-vs-gap-threshold)
+so the perf/robustness trajectory is machine-readable across PRs; all
+three are gated in CI (``tests/ci/check_bench_*.py``).
 
 Prints ``name,...`` CSV blocks per benchmark:
 
@@ -17,6 +19,7 @@ batchsize_accuracy          Tables 1/3/4 proxy (batch-size sweep)
 topology_sweep              Table 5 (topology robustness)
 comm_volume                 Fig. 6 (communication cost model)
 kernel_microbench           kernel hot-spot timings
+serving_microbench          serving throughput + publication handoff
 sim_scenarios               cluster-scenario bias + throughput
 ==========================  ====================================
 """
@@ -62,6 +65,11 @@ def main() -> None:
         default="BENCH_sim.json",
         help="where sim_scenarios writes its machine-readable table",
     )
+    p.add_argument(
+        "--serve-json",
+        default="BENCH_serve.json",
+        help="where serving_microbench writes its machine-readable table",
+    )
     args = p.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     for name in names:
@@ -71,6 +79,8 @@ def main() -> None:
             BENCHES[name](json_path=args.kernels_json)
         elif name == "sim_scenarios":
             BENCHES[name](json_path=args.sim_json)
+        elif name == "serving_microbench":
+            BENCHES[name](json_path=args.serve_json)
         else:
             BENCHES[name]()
         print(f"# {name} done in {time.time()-t0:.1f}s")

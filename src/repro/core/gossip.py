@@ -82,6 +82,7 @@ __all__ = [
     "AllgatherChannel",
     "build_channel",
     "delay_matrix",
+    "fleet_node_gaps",
     "make_stacked_mean",
     "make_psum_mean",
     "gossip_bytes_per_step",
@@ -129,6 +130,38 @@ def _delayed_version_gaps(state: Tree, masked_D: np.ndarray) -> jax.Array:
     recorded payload; round 0 is fresh)."""
     last = jnp.maximum(jnp.int32(state["delay"]["s0"]["count"]) - 1, 0)
     return jnp.minimum(jnp.asarray(masked_D, jnp.int32), last)
+
+
+def _incident_gaps(gaps: jax.Array) -> jax.Array:
+    """Per-node worst *incident*-edge gap from an ``(n, n)`` gap matrix —
+    both directions (see :meth:`GossipChannel.node_gaps` for why the
+    out-edge direction counts)."""
+    return jnp.maximum(jnp.max(gaps, axis=1), jnp.max(gaps, axis=0))
+
+
+def fleet_node_gaps(channel: "GossipChannel", state: Tree) -> np.ndarray:
+    """Host-side ``(n,)`` per-node consensus gaps for the whole fleet.
+
+    :meth:`GossipChannel.node_gaps` indexes the incident-gap vector by
+    ``axis_index`` and is therefore only callable *inside* the shard_map
+    region.  The serving publisher gates on the same signal from the
+    training loop on the host, where the channel state is at hand either
+    in stacked layout (the sim / oracle channels) or as the TrainState's
+    ``"channel"`` bucket whose leaves carry a leading node axis.  This
+    helper accepts both: distributed-channel states are un-stacked by
+    taking node 0's replica (the ring-buffer ``count`` advances in
+    lockstep on every node — it is the only leaf the gap rule reads).
+
+    Returns the exact vector ``node_gaps`` would distribute: entry ``i``
+    is the worst version gap on any edge incident to node ``i``, in
+    either direction.  Staleness-free channels return all zeros.
+    """
+    n = channel.topology.n
+    if getattr(channel, "_depth", 0) == 0:
+        return np.zeros(n, np.int32)
+    if not channel._stacked_layout:
+        state = jax.tree.map(lambda x: np.asarray(x)[0], state)
+    return np.asarray(_incident_gaps(channel.version_gaps(state)), dtype=np.int32)
 
 
 def _edge_mask(topology: Topology) -> np.ndarray:
@@ -286,8 +319,7 @@ class GossipChannel:
         (:func:`repro.core.update_spec.staleness_damping`)."""
         if getattr(self, "_depth", 0) == 0:
             return jnp.int32(0)
-        gaps = self.version_gaps(state)
-        incident = jnp.maximum(jnp.max(gaps, axis=1), jnp.max(gaps, axis=0))
+        incident = _incident_gaps(self.version_gaps(state))
         if self._stacked_layout:
             return incident
         return incident[jax.lax.axis_index(self.node_axes)]

@@ -254,6 +254,66 @@ class PlaneLayout:
                 out[seg.index] = flat.reshape(lead + seg.shape).astype(dt)
         return self.treedef.unflatten(out)
 
+    # -- host-side pack / zero-copy views (the serving handoff path) --------
+
+    def host_pack(self, tree: Tree, out: dict | None = None) -> dict:
+        """Pack ``tree`` into **host** (numpy) plane buffers.
+
+        The device ``pack`` builds a fresh traced buffer per call; the
+        serving publisher instead wants to refill a *preallocated* host
+        buffer (its standby half — readers keep views on the active half
+        while this writes).  Pass ``out`` to reuse buffers; padding rows
+        are zeroed once at allocation and never written again (segment
+        writes cover exactly ``seg.size`` elements).
+
+        Leaves may be jax arrays (fetched to host, one transfer per leaf)
+        or numpy arrays.  Dtypes must match the template's — the plane
+        buffer *is* the byte-exact concatenation of the leaves.
+        """
+        leaves = self.treedef.flatten_up_to(tree)
+        if out is None:
+            out = {
+                key: np.zeros((self.rows[key], LANES), np.dtype(key))
+                for key in self.segments
+            }
+        for key, segs in self.segments.items():
+            buf = out[key]
+            assert buf.shape == (self.rows[key], LANES) and buf.flags.c_contiguous
+            flat = buf.reshape(-1)
+            for seg in segs:
+                leaf = np.asarray(leaves[seg.index])
+                assert leaf.dtype == seg.dtype, (leaf.dtype, seg)
+                start = seg.row_start * LANES
+                flat[start: start + seg.size] = leaf.reshape(-1)
+        return out
+
+    def view_unpack(self, planes: dict) -> Tree:
+        """Zero-copy **views** of host plane buffers in template structure.
+
+        Each leaf is a read-only numpy view sliced out of the contiguous
+        ``(rows, LANES)`` buffer via the static segment metadata — no bytes
+        move (``np.shares_memory(leaf, planes[bucket])`` holds for every
+        leaf).  This is the serving hot path: a published snapshot hands
+        the whole parameter tree to the request scheduler in O(leaves)
+        metadata work instead of O(bytes) copies.  The views alias the
+        buffer, so they are valid exactly as long as the buffer is not
+        rewritten (the publisher's double buffer guarantees one publish of
+        grace).  Bit-exactness with :meth:`unpack` of the same planes is
+        pinned in ``tests/test_serve_publisher.py`` and spot-checked at
+        publish time when the publisher's consistency check is on.
+        """
+        out: list = [None] * self.n_leaves
+        for key, segs in self.segments.items():
+            buf = np.asarray(planes[key])
+            assert buf.flags.c_contiguous, "plane buffers must be contiguous"
+            flat = buf.reshape(-1)
+            for seg in segs:
+                start = seg.row_start * LANES
+                v = flat[start: start + seg.size].reshape(seg.shape)
+                v.flags.writeable = False
+                out[seg.index] = v
+        return self.treedef.unflatten(out)
+
     # -- per-leaf scalars as row-indexed segment scalars --------------------
 
     def row_scalars(self, scalar_tree: Tree) -> dict:

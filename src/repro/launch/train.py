@@ -70,6 +70,22 @@ def _parse():
     p.add_argument("--resume", action="store_true")
     p.add_argument("--failure-drill", dest="failure_drill", action="store_true",
                    help="halfway: checkpoint, elastic-shrink to n/2, resume")
+    p.add_argument("--serve-while-training", dest="serve_while_training",
+                   action="store_true",
+                   help="cooperative serving demo (README §'Serving while "
+                   "training'): publish node 0's weights through the "
+                   "consensus-gated WeightPublisher every --publish-every "
+                   "steps and advance a continuous-batching ServeEngine one "
+                   "tick per train step over a synthetic request load; "
+                   "requires --tp 1")
+    p.add_argument("--publish-every", dest="publish_every", type=int,
+                   default=20, help="steps between publication offers")
+    p.add_argument("--publish-gap-threshold", dest="publish_gap_threshold",
+                   type=int, default=1,
+                   help="max incident gossip version gap a node may carry "
+                   "and still publish (see fleet_node_gaps)")
+    p.add_argument("--serve-requests", dest="serve_requests", type=int,
+                   default=8, help="synthetic requests for the serve demo")
     p.add_argument("--log-every", dest="log_every", type=int, default=10)
     p.add_argument("--track-consensus", dest="track_consensus",
                    action="store_true")
@@ -194,6 +210,44 @@ def main() -> None:
         b = data.batch(start + k)
         return {kk: jnp.asarray(v) for kk, v in b.items()}
 
+    serve = None
+    if args.serve_while_training:
+        import numpy as np
+
+        from ..core.gossip import fleet_node_gaps
+        from ..serve import Request, ServeEngine, WeightPublisher
+
+        assert tp == 1, "--serve-while-training requires --tp 1"
+        pub = WeightPublisher(
+            layout or model_plane_layout(cfg, tp),
+            gap_threshold=args.publish_gap_threshold,
+        )
+        engine = ServeEngine(
+            cfg, mesh, slots=4, max_prompt=32, max_new=16,
+            runtime=tcfg.runtime, publisher=pub,
+        )
+        srng = np.random.default_rng(7)
+        for i in range(args.serve_requests):
+            n = int(srng.integers(4, 33))
+            engine.submit(Request(
+                rid=i,
+                tokens=srng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                max_new_tokens=16,
+            ))
+
+        def serve(step, state):
+            """One cooperative slice: maybe publish, then one engine tick."""
+            if step % args.publish_every == 0:
+                gaps = fleet_node_gaps(channel, state["channel"])
+                # node 0 publishes its own iterate (params stay tree-form in
+                # the TrainState even under --flat-planes; only opt/channel
+                # hot state is plane-packed)
+                src = jax.tree.map(lambda x: np.asarray(x)[0], state["params"])
+                shipped = pub.offer(src, version=step + 1, gap=int(gaps[0]))
+                print(f"publish v{step + 1} gap={int(gaps[0])} -> "
+                      f"{'shipped' if shipped else 'held (gate)'}", flush=True)
+            engine.tick()
+
     import time
 
     t0 = time.time()
@@ -205,6 +259,8 @@ def main() -> None:
         if k == 0:
             jax.block_until_ready(metrics["loss"])
             t_warm = time.time()
+        if serve is not None:
+            serve(step, state)
         if step % args.log_every == 0 or step == args.steps - 1:
             msg = (f"step {step:5d} loss {float(metrics['loss']):.4f} "
                    f"lr {float(metrics['lr']):.2e}")
@@ -249,6 +305,16 @@ def main() -> None:
     dt = time.time() - t0
     print(f"done: {args.steps - start} steps in {dt:.1f}s "
           f"({(args.steps - start) / dt:.2f} steps/s)")
+    if serve is not None:
+        # drain whatever the cooperative ticks left in flight (unless the
+        # gate never cleared a single version — nothing to serve with)
+        done = engine.run_until_drained() if pub.current else engine.completions
+        ps, es = pub.stats(), engine.stats()
+        print(f"serve: {len(done)}/{args.serve_requests} requests done, "
+              f"{es['swaps']} weight swap(s); published "
+              f"{ps['published']}/{ps['offers']} offers "
+              f"(rate {ps['publish_rate']:.2f}, threshold "
+              f"{ps['gap_threshold']}, final v{ps['current_version']})")
     if args.measure_json:
         import json
         n_steps = args.steps - start

@@ -575,15 +575,18 @@ def decode_step(
     params, tokens, cache, t, cfg: ModelConfig, tp_ctx: TPContext, rt: RuntimeConfig,
     *, target_len: int,
 ):
-    """One-token decode.  tokens: (B, 1); t: scalar int32 absolute position.
-    Returns (logits (B, Vp), new_cache)."""
+    """One-token decode.  tokens: (B, 1); t: absolute position of the new
+    token, int32 scalar or per-slot ``(B,)`` vector (continuous batching
+    serves requests whose timelines are independent — each slot carries its
+    own position).  Returns (logits (B, Vp), new_cache)."""
     dt = rt.cdtype
     B = tokens.shape[0]
     vp_local = params["embed"]["table"].shape[0]
     vp = vp_local * (tp_ctx.size if tp_ctx.enabled else 1)
     x = embed_lookup(tokens, params["embed"]["table"].astype(dt), tp_ctx, vp)
     if cfg.rope_theta == 0:
-        x = x + _sinusoid(jnp.asarray(t)[None, None], cfg.d_model).astype(dt)
+        tvec = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+        x = x + _sinusoid(tvec[:, None], cfg.d_model).astype(dt)
 
     new_cache: Tree = {}
     for gi, g in enumerate(block_groups(cfg)):

@@ -1,0 +1,26 @@
+"""Live weight publication + serving from the training fleet.
+
+The publication-and-serving subsystem (README §"Serving while training"):
+
+* :mod:`repro.serve.publisher` — consensus-gated, double-buffered,
+  versioned plane-snapshot handoff (:class:`WeightPublisher`);
+* :mod:`repro.serve.scheduler` — continuous-batching request scheduler
+  driving the serve step builders under concurrent load
+  (:class:`ServeEngine`), with snapshot swaps between decode batches;
+* :mod:`repro.serve.sampling` — shared greedy sampling / decode-loop
+  drivers used by both the scheduler and the serving benchmark.
+"""
+
+from .publisher import Snapshot, WeightPublisher
+from .sampling import greedy_decode_loop, greedy_token
+from .scheduler import Completion, Request, ServeEngine
+
+__all__ = [
+    "Completion",
+    "Request",
+    "ServeEngine",
+    "Snapshot",
+    "WeightPublisher",
+    "greedy_decode_loop",
+    "greedy_token",
+]

@@ -1,0 +1,178 @@
+"""Consensus-gated weight publication from the training fleet.
+
+The decentralized average — not any single node's iterate — is the model
+you ship (Lian et al., arXiv 1705.09056); what makes a *node's* iterate an
+acceptable stand-in is a tight consensus distance, and DecentLaM's §3
+inconsistency bias is exactly what grows when gossip goes stale.  The
+:class:`WeightPublisher` turns that into an admission policy: a node offers
+its parameters every publish interval together with its consensus signal
+(the ``GossipChannel`` incident version gap — ``node_gaps`` inside the
+step, :func:`repro.core.gossip.fleet_node_gaps` on the host), and the offer
+is **rejected** whenever the gap exceeds the configured threshold, so a
+stale straggler never ships a biased model.
+
+Publication is a double-buffered, versioned plane-snapshot handoff:
+
+* the parameter tree is packed into its :class:`~repro.core.planes.PlaneLayout`
+  host buffers — one contiguous array per dtype bucket, the same layout the
+  flat-plane training path gossips in, so a plane-form source is a straight
+  per-bucket ``memcpy``;
+* the serving side reads the snapshot as a parameter tree of **zero-copy
+  views** over those buffers (:meth:`PlaneLayout.view_unpack` — O(leaves)
+  segment-metadata slicing, no full unpack on the hot path), bit-exact with
+  ``PlaneLayout.unpack`` of the same buffers (pinned test; optionally
+  re-verified per publish with ``check_consistency=True``);
+* two buffers alternate: the writer fills the standby buffer while readers
+  keep views on the active one, then flips.  A reader that re-reads
+  :attr:`WeightPublisher.current` at every swap point (the scheduler does,
+  between decode batches) therefore never observes a torn snapshot; holding
+  a snapshot across **two** accepted publishes is the documented hazard —
+  its buffer gets rewritten.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from ..core.planes import LANES, PlaneLayout
+
+Tree = Any
+
+__all__ = ["Snapshot", "WeightPublisher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One published weight version.
+
+    ``params`` is the zero-copy view tree over ``planes`` (read-only numpy
+    leaves aliasing the bucket buffers); ``gap`` is the consensus signal
+    the publish was admitted at.
+    """
+
+    version: int
+    gap: int
+    planes: dict[str, np.ndarray]
+    params: Tree
+
+
+class WeightPublisher:
+    """Double-buffered, versioned, consensus-gated weight handoff.
+
+    ``offer(source, version=..., gap=...)`` publishes iff ``gap <=
+    gap_threshold`` and ``version`` advances monotonically; ``source`` is a
+    parameter tree in the layout's template structure **or** an
+    already-packed plane dict (recognized by its keys being the layout's
+    dtype-bucket names, the same convention ``reconcile_plane_state``
+    uses).  ``current`` is the newest accepted :class:`Snapshot` (None
+    before the first publish).
+
+    ``check_consistency=True`` re-verifies every publish byte-for-byte:
+    the view tree must equal a full :meth:`PlaneLayout.unpack` of the same
+    buffers (the bit-exactness contract of the zero-copy handoff).  Stats
+    (`offers`, `published`, `rejected`) feed the publish-rate benchmark.
+    """
+
+    def __init__(
+        self,
+        layout: PlaneLayout,
+        *,
+        gap_threshold: int = 0,
+        check_consistency: bool = False,
+    ):
+        self.layout = layout
+        self.gap_threshold = int(gap_threshold)
+        self.check_consistency = bool(check_consistency)
+        self._bufs: list[dict[str, np.ndarray] | None] = [None, None]
+        self._standby = 0
+        self._current: Snapshot | None = None
+        self.offers = 0
+        self.published = 0
+        self.rejected = 0
+        self.last_rejected_gap: int | None = None
+
+    # -- protocol -----------------------------------------------------------
+
+    @property
+    def current(self) -> Snapshot | None:
+        return self._current
+
+    def offer(self, source: Tree, *, version: int, gap: int) -> bool:
+        """Gate + publish one weight version; returns whether it shipped."""
+        self.offers += 1
+        version = int(version)
+        gap = int(gap)
+        if self._current is not None and version <= self._current.version:
+            raise ValueError(
+                f"publish version must advance: got {version}, current is "
+                f"{self._current.version}"
+            )
+        if gap > self.gap_threshold:
+            self.rejected += 1
+            self.last_rejected_gap = gap
+            return False
+
+        buf = self._fill_standby(source)
+        params = self.layout.view_unpack(buf)
+        if self.check_consistency:
+            self._verify(buf, params)
+        self._current = Snapshot(version=version, gap=gap, planes=buf, params=params)
+        self._standby ^= 1
+        self.published += 1
+        return True
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "offers": self.offers,
+            "published": self.published,
+            "rejected": self.rejected,
+            "publish_rate": self.published / self.offers if self.offers else 0.0,
+            "gap_threshold": self.gap_threshold,
+            "current_version": None if self._current is None else self._current.version,
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _is_plane_dict(self, source: Tree) -> bool:
+        return isinstance(source, dict) and set(source) == set(self.layout.segments)
+
+    def _fill_standby(self, source: Tree) -> dict[str, np.ndarray]:
+        layout = self.layout
+        buf = self._bufs[self._standby]
+        if buf is None:
+            buf = {
+                key: np.zeros((layout.rows[key], LANES), np.dtype(key))
+                for key in layout.segments
+            }
+            self._bufs[self._standby] = buf
+        if self._is_plane_dict(source):
+            # plane-form source (the flat-planes training payload): one
+            # contiguous host copy per dtype bucket
+            for key, dst in buf.items():
+                src = np.asarray(source[key])
+                assert src.shape == dst.shape, (key, src.shape, dst.shape)
+                np.copyto(dst, src.astype(dst.dtype, copy=False))
+        else:
+            layout.host_pack(source, out=buf)
+        return buf
+
+    def _verify(self, buf: dict[str, np.ndarray], params: Tree) -> None:
+        """The handoff contract: views == full unpack, byte for byte."""
+        import jax
+
+        full = self.layout.unpack({k: np.asarray(v) for k, v in buf.items()})
+        for view, ref in zip(jax.tree.leaves(params), jax.tree.leaves(full)):
+            ref = np.asarray(ref)
+            if (
+                view.dtype != ref.dtype
+                or view.shape != ref.shape
+                or view.tobytes() != ref.tobytes()
+            ):
+                raise AssertionError(
+                    "zero-copy snapshot diverged from PlaneLayout.unpack "
+                    f"(dtype {view.dtype} vs {ref.dtype}, shape {view.shape} "
+                    f"vs {ref.shape})"
+                )

@@ -1,0 +1,54 @@
+"""Shared sampling / decode-loop drivers for the serving paths.
+
+One place for the greedy next-token rule and the step-the-cache loop that
+both the serving microbenchmark and the continuous-batching scheduler
+drive — previously duplicated ad hoc in ``benchmarks/serving_microbench``.
+
+``decode_fn`` is anything with the ``build_decode_step`` calling shape
+``(params, tokens, cache, t) -> (logits, cache)`` — the jitted shard_map
+step or a bare ``T.decode_step`` closure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+DecodeFn = Callable[[Tree, jax.Array, Tree, jax.Array], tuple[jax.Array, Tree]]
+
+__all__ = ["greedy_token", "greedy_decode_loop"]
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    """Greedy sampling: ``(B, V) -> (B,)`` int32 argmax token ids."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def greedy_decode_loop(
+    decode_fn: DecodeFn,
+    params: Tree,
+    cache: Tree,
+    first_tokens: jax.Array,
+    t0,
+    n_steps: int,
+) -> tuple[jax.Array, Tree]:
+    """Autoregressive greedy generation for ``n_steps`` tokens.
+
+    ``first_tokens`` is the ``(B, 1)`` token batch to feed first (typically
+    the argmax of the prefill logits); ``t0`` is its absolute position,
+    scalar or per-slot ``(B,)``.  Returns the ``(B, n_steps)`` generated
+    tokens (``first_tokens``' successors; the first column is the token
+    sampled *from* ``first_tokens``' logits) and the final cache.
+    """
+    tok = first_tokens
+    t = jnp.asarray(t0, jnp.int32)
+    cols = []
+    for _ in range(n_steps):
+        logits, cache = decode_fn(params, tok, cache, t)
+        tok = greedy_token(logits)[:, None]
+        cols.append(tok)
+        t = t + 1
+    return jnp.concatenate(cols, axis=1), cache

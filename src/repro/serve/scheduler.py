@@ -1,0 +1,328 @@
+"""Continuous-batching request scheduler over the serve step builders.
+
+Drives ``build_prefill_step`` / ``build_decode_step`` under concurrent
+load: a request queue feeds a fixed set of in-flight **decode slots**; each
+engine tick admits waiting requests into free slots (one right-padded
+prefill for the admission wave, merged per-slot into the live KV cache)
+and then advances every active slot one token in a single batched decode
+step with **per-slot positions** (``per_slot_t`` — request timelines are
+independent).  Completed requests free their slot for the next admission.
+
+Weight swaps happen at the tick boundary — *between* decode batches, never
+inside one — by re-reading the :class:`~repro.serve.publisher.WeightPublisher`'s
+current snapshot: a newer published version is transferred to device once
+(the measured "swap stall") and every subsequent prefill/decode runs on it.
+In-flight requests continue on the new weights, the standard
+continuous-batching trade (a mid-request swap changes the sampling
+distribution, not the cache layout — the KV cache stays valid because the
+model architecture is fixed).
+
+Correctness of the slot mechanics — right-padded admission, re-feeding the
+last prompt token at its true position, per-slot timelines, cache merging —
+is pinned against per-request sequential greedy decoding in
+``tests/test_serve_engine.py``.
+
+Mechanics worth spelling out:
+
+* **Right-padded prefill.**  An admission wave pads prompts to the
+  engine's static ``max_prompt`` with token 0.  The pad tail *is* written
+  to the KV cache, but decode masks cache entries by true position
+  (``pos <= t``), so pad entries are invisible until the slot's timeline
+  reaches them — at which point the generated token overwrites exactly
+  that slot (write slot is ``t % capacity``).
+* **First decode re-feeds the last prompt token.**  Prefill returns
+  logits for the *padded* last column, which is wrong for any prompt
+  shorter than ``max_prompt``; instead of special-casing, admission seeds
+  the slot with ``tokens[len-1]`` at ``t = len-1``.  The decode step
+  rewrites position ``len-1`` with identical K/V and returns the logits
+  the first generated token is sampled from — uniform for all lengths.
+* **Idle slots decode garbage.**  They run in the batch (shapes are
+  static) with ``t`` pinned to 0 and their outputs ignored; admission
+  replaces their entire per-slot cache via the merge mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..train import serve as serve_mod
+from .publisher import WeightPublisher
+from .sampling import greedy_token
+
+Tree = Any
+
+__all__ = ["Request", "Completion", "ServeEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    tokens: np.ndarray  # (len,) int32 prompt token ids
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray  # (n_generated,) int32
+    submitted_s: float  # perf_counter timestamps
+    admitted_s: float
+    finished_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.submitted_s
+
+
+class ServeEngine:
+    """Continuous-batching serving engine (see module docstring).
+
+    ``slots`` is the decode batch size (static — it is the jit shape);
+    ``max_prompt``/``max_new`` bound request sizes, and the KV capacity is
+    ``max_prompt + max_new`` so any admissible request fits its slot.
+    ``publisher`` (optional) supplies weight snapshots; without one, pass
+    the initial ``params`` tree explicitly.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh,
+        *,
+        slots: int,
+        max_prompt: int,
+        max_new: int,
+        runtime=None,
+        publisher: WeightPublisher | None = None,
+        params: Tree | None = None,
+        eos_id: int | None = None,
+        node_axes: tuple[str, ...] = ("data",),
+        model_axis: str = "model",
+    ):
+        from ..models import transformer as T
+
+        rt = runtime if runtime is not None else T.RuntimeConfig(
+            dtype="float32", remat=False
+        )
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_prompt = int(max_prompt)
+        self.max_new = int(max_new)
+        self.eos_id = eos_id
+        target_len = self.max_prompt + self.max_new
+        scfg = serve_mod.ServeConfig(runtime=rt, target_len=target_len)
+        self._prefill, (pspecs, _, _) = serve_mod.build_prefill_step(
+            cfg, mesh, scfg, global_batch=self.slots,
+            node_axes=node_axes, model_axis=model_axis,
+        )
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        self._pshard = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspecs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        self._decode, _ = serve_mod.build_decode_step(
+            cfg, mesh, scfg, global_batch=self.slots, target_len=target_len,
+            per_slot_t=True, node_axes=node_axes, model_axis=model_axis,
+        )
+
+        # cache merge: keep the old per-slot cache except where admitted.
+        # every cache leaf is layer-stacked (Lg, B, ...) — init_cache pins
+        # the batch at axis 1 for kv/ssm/mlstm/slstm/cross_kv alike
+        def merge(old: Tree, new: Tree, admit: jax.Array) -> Tree:
+            def leaf(o, n):
+                assert o.ndim >= 2 and o.shape[1] == self.slots, (
+                    o.shape, self.slots,
+                )
+                m = admit.reshape((1, self.slots) + (1,) * (o.ndim - 2))
+                return jnp.where(m, n, o)
+
+            return jax.tree.map(leaf, old, new)
+
+        self._merge = jax.jit(merge)
+
+        if publisher is None and params is None:
+            raise ValueError("pass a publisher or an initial params tree")
+        self._publisher = publisher
+        self._params: Tree | None = None
+        self.version: int | None = None
+        if params is not None:
+            self._params = jax.tree.map(
+                lambda x, sh: jax.device_put(jnp.asarray(x), sh),
+                params, self._pshard,
+            )
+        self._cache: Tree | None = None
+
+        # per-slot bookkeeping (host side)
+        self._slot_req: list[Request | None] = [None] * self.slots
+        self._slot_gen: list[list[int]] = [[] for _ in range(self.slots)]
+        self._slot_admitted: list[float] = [0.0] * self.slots
+        self._slot_submitted: list[float] = [0.0] * self.slots
+        self._t = np.zeros(self.slots, np.int32)  # position of the fed token
+        self._feed = np.zeros(self.slots, np.int32)  # token to feed next
+        self._active = np.zeros(self.slots, bool)
+        self._queue: deque[tuple[Request, float]] = deque()
+        self.completions: list[Completion] = []
+
+        # counters for the bench
+        self.ticks = 0
+        self.waiting_ticks = 0
+        self.decode_batches = 0
+        self.prefills = 0
+        self.swaps = 0
+        self.swap_stall_s = 0.0
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        tokens = np.asarray(req.tokens, np.int32).reshape(-1)
+        assert 1 <= tokens.size <= self.max_prompt, (tokens.size, self.max_prompt)
+        assert 1 <= req.max_new_tokens <= self.max_new
+        self._queue.append(
+            (dataclasses.replace(req, tokens=tokens), time.perf_counter())
+        )
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def in_flight(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._active.any()
+
+    def tick(self) -> bool:
+        """One engine step: swap point -> admission -> one decode batch.
+
+        Returns False when there was nothing to do (engine idle).
+        """
+        if self.idle:
+            return False
+        self.ticks += 1
+        self._maybe_swap()
+        if self._params is None:
+            # waiting on the publisher's first admitted version (the
+            # consensus gate may hold back early offers)
+            self.waiting_ticks += 1
+            return True
+        self._admit()
+        if self._active.any():
+            self._decode_batch()
+        return True
+
+    def run_until_drained(self, max_ticks: int = 100_000) -> list[Completion]:
+        for _ in range(max_ticks):
+            if not self.tick():
+                break
+        else:
+            raise RuntimeError(f"not drained after {max_ticks} ticks")
+        return self.completions
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "ticks": self.ticks,
+            "decode_batches": self.decode_batches,
+            "prefills": self.prefills,
+            "completed": len(self.completions),
+            "swaps": self.swaps,
+            "swap_stall_s": self.swap_stall_s,
+            "version": self.version,
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _maybe_swap(self) -> None:
+        """Snapshot-swap point (between decode batches, never inside one)."""
+        if self._publisher is None:
+            return
+        snap = self._publisher.current
+        if snap is None or snap.version == self.version:
+            return
+        t0 = time.perf_counter()
+        # one device transfer per leaf off the zero-copy snapshot views,
+        # committed to the serve sharding (params replicated over node
+        # axes, sharded over model); jitted steps then reuse the committed
+        # arrays every call with no per-call resharding
+        params = jax.tree.map(
+            lambda x, sh: jax.device_put(np.asarray(x), sh),
+            snap.params, self._pshard,
+        )
+        jax.block_until_ready(params)
+        self.swap_stall_s += time.perf_counter() - t0
+        if self.version is not None:
+            self.swaps += 1
+        self._params = params
+        self.version = snap.version
+
+    def _admit(self) -> None:
+        free = [i for i in range(self.slots) if not self._active[i]]
+        if not free or not self._queue:
+            return
+        toks = np.zeros((self.slots, self.max_prompt), np.int32)
+        admit = np.zeros(self.slots, bool)
+        now = time.perf_counter()
+        for i in free:
+            if not self._queue:
+                break
+            req, submitted = self._queue.popleft()
+            n = req.tokens.size
+            toks[i, :n] = req.tokens  # right-padded with token 0
+            admit[i] = True
+            self._slot_req[i] = req
+            self._slot_gen[i] = []
+            self._slot_submitted[i] = submitted
+            self._slot_admitted[i] = now
+            self._t[i] = n - 1
+            self._feed[i] = req.tokens[n - 1]
+        if not admit.any():
+            return
+        batch = {"tokens": jnp.asarray(toks)}
+        _, new_cache = self._prefill(self._params, batch)
+        self.prefills += 1
+        if self._cache is None:
+            self._cache = new_cache
+        else:
+            self._cache = self._merge(
+                self._cache, new_cache, jnp.asarray(admit)
+            )
+        self._active |= admit
+
+    def _decode_batch(self) -> None:
+        tokens = jnp.asarray(self._feed[:, None])
+        t = jnp.asarray(np.where(self._active, self._t, 0).astype(np.int32))
+        logits, self._cache = self._decode(self._params, tokens, self._cache, t)
+        self.decode_batches += 1
+        nxt = np.asarray(greedy_token(logits))
+        now = time.perf_counter()
+        for i in range(self.slots):
+            if not self._active[i]:
+                continue
+            tok = int(nxt[i])
+            self._slot_gen[i].append(tok)
+            self._t[i] += 1
+            self._feed[i] = tok
+            req = self._slot_req[i]
+            done = len(self._slot_gen[i]) >= req.max_new_tokens or (
+                self.eos_id is not None and tok == self.eos_id
+            )
+            if done:
+                self.completions.append(Completion(
+                    rid=req.rid,
+                    tokens=np.asarray(self._slot_gen[i], np.int32),
+                    submitted_s=self._slot_submitted[i],
+                    admitted_s=self._slot_admitted[i],
+                    finished_s=now,
+                ))
+                self._active[i] = False
+                self._slot_req[i] = None

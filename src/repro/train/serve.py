@@ -1,11 +1,15 @@
 """Serve step builders (prefill / decode) over the production mesh.
 
 Serving uses the *consensus* model: parameters are replicated across the
-node axes (the decentralized average is the model you ship) and sharded only
-over the model axis; request batches shard across the node axes when
-divisible (long_500k has global_batch=1, which stays replicated — noted in
-EXPERIMENTS.md).  KV caches are sequence-sharded over the model axis
-(split-K decode, DESIGN.md §4).
+node axes (the decentralized average is the model you ship — see README
+§"Serving while training" for how snapshots are published off the training
+fleet) and sharded only over the model axis.  Request batches shard across
+the node axes when divisible; otherwise they stay replicated — the
+``_batch_axes`` fallback, hit e.g. by a single-request batch on a multi-node
+mesh (``tests/test_serve_specs.py`` + ``tests/scripts/distributed_serve.py``
+pin both paths).  KV caches are sequence-sharded over the model axis:
+each model shard owns a contiguous slice of cache slots and decode merges
+partial attention with a split-K softmax reduction (``models/attention.py``).
 """
 
 from __future__ import annotations
@@ -85,9 +89,13 @@ def build_prefill_step(
 
 def build_decode_step(
     cfg: ModelConfig, mesh, scfg: ServeConfig, *, global_batch: int,
-    target_len: int,
+    target_len: int, per_slot_t: bool = False,
     node_axes: tuple[str, ...] = ("data",), model_axis: str = "model",
 ):
+    """One-token decode step.  With ``per_slot_t`` the position argument is
+    a ``(global_batch,)`` int32 vector (sharded with the batch) instead of
+    a shared scalar — the continuous-batching scheduler runs slots whose
+    request timelines are independent."""
     tp = mesh.shape[model_axis]
     tp_ctx = TPContext(axis=model_axis, size=tp, in_shard_map=True)
     pspecs, cspecs, tok_spec, ba = serve_specs(
@@ -101,10 +109,11 @@ def build_decode_step(
             target_len=target_len,
         )
 
+    t_spec = P(ba) if per_slot_t else P()
     sm = shard_map(
         fn,
         mesh=mesh,
-        in_specs=(pspecs, tok_spec, cspecs, P()),
+        in_specs=(pspecs, tok_spec, cspecs, t_spec),
         out_specs=(P(ba, model_axis), cspecs),  # logits vocab-sharded
         axis_names=set(node_axes) | {model_axis},
     )

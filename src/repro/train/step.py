@@ -317,6 +317,13 @@ def build_train_step(
         out_metrics = {
             "loss": jax.lax.pmean(loss, node_axes),
             "lr": lr,
+            # fleet-worst consensus gap this round (0 on undelayed
+            # channels) — the signal the serving publisher gates on; the
+            # per-node vector is recovered host-side from the channel
+            # state via core.gossip.fleet_node_gaps
+            "gossip_gap": jax.lax.pmax(
+                jnp.float32(gossip.node_gaps(comp_state)), node_axes
+            ),
             **{k: jax.lax.pmean(v, node_axes) for k, v in metrics.items()},
         }
         if tcfg.track_consensus:
@@ -336,7 +343,7 @@ def build_train_step(
         cfg, opt, tp, node_axes, model_axis, gossip, layout
     )
     bspecs = batch_specs(cfg, node_axes)
-    mspecs = {"loss": P(), "lr": P(), "xent": P(),
+    mspecs = {"loss": P(), "lr": P(), "gossip_gap": P(), "xent": P(),
               "moe_load_balance": P(), "moe_router_z": P()}
     if tcfg.track_consensus:
         mspecs["consensus_sq"] = P()

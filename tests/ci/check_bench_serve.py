@@ -1,0 +1,123 @@
+"""CI gate for BENCH_serve.json (live weight publication + serving).
+
+Usage::
+
+    python tests/ci/check_bench_serve.py BENCH_serve.json
+
+Validates the machine-readable invariants the serving subsystem promises
+(ISSUE 7 acceptance criteria):
+
+* ``handoff.bit_exact`` — the zero-copy plane-snapshot view tree equals a
+  full ``PlaneLayout.unpack`` byte-for-byte (the handoff contract; if this
+  flips, serving reads torn or misaligned weights);
+* the engine **completed every request** under concurrent load, generated
+  tokens at a nonzero rate, and its latency percentiles are ordered
+  (p50 <= p95);
+* a weight version was published **mid-load** and swapped in (``swaps >=
+  1``) and the measured swap stall stayed a small fraction of the run —
+  serving never pauses for training longer than ``MAX_SWAP_STALL_FRAC``
+  of wall-clock in this CPU-scaled scenario;
+* the consensus gate: ``stale_never_publish_over_threshold`` holds (a
+  node whose incident gossip gap exceeds the threshold never ships), the
+  fresh node publishes at rate 1.0 at every threshold, the stale node's
+  publish rate is monotonically non-decreasing in the threshold, and at
+  a threshold >= the configured delay everyone publishes freely.
+
+Exit code 1 on any violation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+MAX_SWAP_STALL_FRAC = 0.25  # swap stalls must stay a minor fraction of wall
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+
+    errors: list[str] = []
+
+    handoff = bench.get("handoff", {})
+    if not handoff:
+        errors.append("missing handoff section")
+    elif not handoff.get("bit_exact"):
+        errors.append("handoff: zero-copy views diverged from full unpack")
+
+    tp = bench.get("throughput", {})
+    if not tp:
+        errors.append("missing throughput section")
+    else:
+        if tp.get("completed") != tp.get("requests"):
+            errors.append(
+                f"throughput: completed {tp.get('completed')} != submitted "
+                f"{tp.get('requests')}"
+            )
+        if not tp.get("tok_per_s", 0) > 0:
+            errors.append("throughput: zero generated-token rate")
+        if tp.get("latency_p50_s", 0) > tp.get("latency_p95_s", 0):
+            errors.append("throughput: latency p50 > p95")
+        if tp.get("swaps", 0) < 1:
+            errors.append(
+                "throughput: no snapshot swap measured (the bench publishes "
+                "a new version mid-load)"
+            )
+        if tp.get("swap_stall_frac", 1.0) > MAX_SWAP_STALL_FRAC:
+            errors.append(
+                f"throughput: swap stalls {tp.get('swap_stall_frac'):.3f} of "
+                f"wall-clock exceed {MAX_SWAP_STALL_FRAC}"
+            )
+
+    gate = bench.get("publish_gate", {})
+    sweep = gate.get("sweep", [])
+    if not sweep:
+        errors.append("missing publish_gate sweep")
+    else:
+        if not gate.get("stale_never_publish_over_threshold"):
+            errors.append(
+                "publish_gate: a node with gap > threshold published — the "
+                "consensus gate leaked a stale model"
+            )
+        delay = gate.get("delay", 0)
+        prev = -1.0
+        for row in sweep:
+            thr = row.get("gap_threshold")
+            if row.get("fresh_node_rate") != 1.0:
+                errors.append(
+                    f"publish_gate thr={thr}: fresh node rate "
+                    f"{row.get('fresh_node_rate')} != 1.0"
+                )
+            rate = row.get("stale_node_rate", -1.0)
+            if rate < prev:
+                errors.append(
+                    f"publish_gate thr={thr}: stale publish rate {rate} "
+                    f"decreased vs threshold {thr - 1} ({prev})"
+                )
+            prev = rate
+            if thr is not None and thr >= delay and rate != 1.0:
+                errors.append(
+                    f"publish_gate thr={thr} >= delay {delay}: stale rate "
+                    f"{rate} != 1.0 (gate should be fully open)"
+                )
+
+    if errors:
+        print(f"SERVE BENCH GATE: {len(errors)} violation(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(
+        f"SERVE BENCH GATE: ok ({tp.get('completed')} requests at "
+        f"{tp.get('tok_per_s', 0):.0f} tok/s, {tp.get('swaps')} swap(s) "
+        f"stalling {tp.get('swap_stall_frac', 0):.1%} of wall, handoff "
+        f"bit-exact, {len(sweep)} gate thresholds swept)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

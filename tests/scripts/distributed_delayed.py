@@ -16,6 +16,11 @@ B. Delay-0 channels are **bit-exact** with the pre-redesign ppermute gossip
    match too).  The old closure is inlined below as a frozen regression
    oracle (the shipped ``make_ppermute_gossip`` shim was removed after its
    grace period, so this inline copy is the only remaining reference).
+
+C. The serving consensus gate on the real mesh: ``fleet_node_gaps`` read
+   off the live channel's distributed state drives a ``WeightPublisher``
+   that ships only while the warmup gap is under threshold and never once
+   the mesh runs at its configured staleness.
 """
 
 import jax
@@ -95,7 +100,7 @@ def legacy_ppermute_gossip(topology, node_axes, *, compression=None,
 # --- shard_map harness (mirrors train/step.py's state layout) --------------
 
 
-def run_distributed(opt, gossip, chstate0, n_steps):
+def run_distributed(opt, gossip, chstate0, n_steps, on_step=None):
     """Iterate opt over the mesh; returns the gathered (n, d) params."""
 
     def body(st, Al, bl):
@@ -141,6 +146,8 @@ def run_distributed(opt, gossip, chstate0, n_steps):
     bd = jax.device_put(prob.b, NamedSharding(mesh, dspecs[1]))
     for _ in range(n_steps):
         state = step_sm(state, Ad, bd)
+        if on_step is not None:
+            on_step(state)
     return np.asarray(state["x"])
 
 
@@ -182,5 +189,43 @@ for algorithm in ALGORITHMS:
     assert np.array_equal(got, ref), (
         algorithm, float(np.max(np.abs(got - ref))))
     print(f"B {algorithm}: OK (bit-exact)")
+
+# --- C: the consensus gate on the real-mesh channel ------------------------
+# fleet_node_gaps reads the TrainState-layout channel bucket (leaves with a
+# leading node axis) of the live DelayedPpermuteChannel and reports the
+# warmup-ruled gap min(delay, round-1) on every node; a WeightPublisher
+# gating on it ships only the warmup rounds at threshold 1 and holds every
+# offer once the mesh runs at its configured staleness.
+
+from repro.core.gossip import fleet_node_gaps
+from repro.core.planes import PlaneLayout
+from repro.serve import WeightPublisher
+
+STEPS_C, DELAY_C, THR_C = 6, 2, 1
+opt = make_optimizer(OptimizerConfig(algorithm="dsgd", momentum=0.8))
+channel = DelayedPpermuteChannel(
+    topo, ("data",), DELAY_C, calls_per_step=opt.gossips_per_step
+)
+tree = {"w": jnp.zeros((D,), jnp.float32)}
+pub = WeightPublisher(PlaneLayout.build(tree), gap_threshold=THR_C)
+rounds = [0]
+
+
+def gate(state):
+    rounds[0] += 1
+    gaps = fleet_node_gaps(channel, state["ch"])
+    expect = min(DELAY_C, rounds[0] - 1)
+    assert gaps.shape == (N,) and (gaps == expect).all(), (rounds[0], gaps)
+    pub.offer(tree, version=rounds[0], gap=int(gaps[0]))
+
+
+run_distributed(
+    opt, channel, channel.init(jnp.zeros((D,), jnp.float32)), STEPS_C,
+    on_step=gate,
+)
+warmup = sum(min(DELAY_C, r) <= THR_C for r in range(STEPS_C))
+assert pub.published == warmup and pub.rejected == STEPS_C - warmup, pub.stats()
+assert pub.current.version == warmup
+print(f"C gate: OK (published {pub.published}/{STEPS_C} warmup rounds only)")
 
 print(f"delayed-ppermute: OK ({3 + len(ALGORITHMS)} cases)")

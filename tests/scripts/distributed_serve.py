@@ -48,3 +48,20 @@ for name, a, b in [("prefill", lg_or, lg_d), ("decode", lg_or2, lg_d2)]:
     rel = err / (np.max(np.abs(np.asarray(a))) + 1e-9)
     assert rel < 5e-4, (name, rel)
     print(f"{name}: OK rel={rel:.2e}")
+
+# --- replicated fallback: global_batch=1 is indivisible by the 4-way node
+# axis, so the batch stays replicated (_batch_axes -> None) while params
+# remain model-sharded — both prefill and decode must still match the
+# oracle's first request ---
+_, _, _, ba1 = serve_mod.serve_specs(cfg, mesh, global_batch=1)
+assert ba1 is None, ba1
+pre1, _ = serve_mod.build_prefill_step(cfg, mesh, scfg, global_batch=1)
+dec1, _ = serve_mod.build_decode_step(
+    cfg, mesh, scfg, global_batch=1, target_len=S + 4, per_slot_t=True)
+lg_r, cache_r = pre1(pp, {"tokens": toks[:1, :S]})
+lg_r2, _ = dec1(pp, toks[:1, S:S + 1], cache_r, jnp.full((1,), S, jnp.int32))
+for name, a, b in [("prefill-b1", lg_or[:1], lg_r), ("decode-b1", lg_or2[:1], lg_r2)]:
+    err = np.max(np.abs(np.asarray(a) - np.asarray(b)))
+    rel = err / (np.max(np.abs(np.asarray(a))) + 1e-9)
+    assert rel < 5e-4, (name, rel)
+    print(f"{name}: OK rel={rel:.2e}")

@@ -59,12 +59,15 @@ def test_delayed_ppermute_channel():
     from repro.core.optimizers import ALGORITHMS
 
     assert out.count("(bit-exact)") == len(ALGORITHMS)
+    # part C: consensus gate off the live mesh channel's fleet_node_gaps —
+    # only the warmup rounds (gap <= threshold) ship, nothing after
+    assert "C gate: OK (published 2/6 warmup rounds only)" in out
     assert f"delayed-ppermute: OK ({3 + len(ALGORITHMS)} cases)" in out
 
 
 def test_distributed_serve_matches_oracle():
     out = _run("distributed_serve.py")
-    assert out.count("OK") == 2
+    assert out.count("OK") == 4
 
 
 def test_dryrun_cell_end_to_end():
