@@ -5,10 +5,12 @@
 ``kernel_microbench`` additionally writes ``BENCH_kernels.json``
 (per-algorithm fused/unfused tail timings), ``sim_scenarios`` writes
 ``BENCH_sim.json`` (per-scenario bias/throughput under the cluster
-simulator), and ``serving_microbench`` writes ``BENCH_serve.json``
-(request throughput, snapshot-handoff cost, publish-rate-vs-gap-threshold)
-so the perf/robustness trajectory is machine-readable across PRs; all
-three are gated in CI (``tests/ci/check_bench_*.py``).
+simulator), ``serving_microbench`` writes ``BENCH_serve.json``
+(request throughput, snapshot-handoff cost, publish-rate-vs-gap-threshold),
+and ``sparse_gossip`` writes ``BENCH_gossip.json`` (row-sparse vs dense
+comm volume + bit-exactness and accounting cross-checks) so the
+perf/robustness trajectory is machine-readable across PRs; all four are
+gated in CI (``tests/ci/check_bench_*.py``).
 
 Prints ``name,...`` CSV blocks per benchmark:
 
@@ -21,6 +23,7 @@ comm_volume                 Fig. 6 (communication cost model)
 kernel_microbench           kernel hot-spot timings
 serving_microbench          serving throughput + publication handoff
 sim_scenarios               cluster-scenario bias + throughput
+sparse_gossip               row-sparse vs dense comm volume
 ==========================  ====================================
 """
 
@@ -36,6 +39,7 @@ from . import (
     kernel_microbench,
     serving_microbench,
     sim_scenarios,
+    sparse_gossip,
     table2_bias_scaling,
     topology_sweep,
 )
@@ -49,6 +53,7 @@ BENCHES = {
     "kernel_microbench": kernel_microbench.run,
     "serving_microbench": serving_microbench.run,
     "sim_scenarios": sim_scenarios.run,
+    "sparse_gossip": sparse_gossip.run,
 }
 
 
@@ -70,6 +75,11 @@ def main() -> None:
         default="BENCH_serve.json",
         help="where serving_microbench writes its machine-readable table",
     )
+    p.add_argument(
+        "--gossip-json",
+        default="BENCH_gossip.json",
+        help="where sparse_gossip writes its machine-readable table",
+    )
     args = p.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     for name in names:
@@ -81,6 +91,8 @@ def main() -> None:
             BENCHES[name](json_path=args.sim_json)
         elif name == "serving_microbench":
             BENCHES[name](json_path=args.serve_json)
+        elif name == "sparse_gossip":
+            BENCHES[name](json_path=args.gossip_json)
         else:
             BENCHES[name]()
         print(f"# {name} done in {time.time()-t0:.1f}s")

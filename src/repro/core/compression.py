@@ -4,9 +4,21 @@ Decentralized methods compose naturally with communication compression
 (paper Sec. 2 cites QSGD [2], signSGD [5], Choco-SGD [20], DoubleSqueeze
 [47]).  We provide three compressors for the ppermute payloads:
 
-* ``bf16``   — stateless downcast (2x bytes saved, fp32 accumulation).
-* ``int8``   — stateless per-tensor absmax affine quantization (4x).
-* ``topk``   — top-k magnitude sparsification with *error feedback*
+* ``bf16``     — stateless downcast (2x bytes saved, fp32 accumulation).
+* ``int8``     — stateless per-tensor absmax affine quantization (4x).
+* ``int8-row`` — stateless per-*row* absmax quantization: one scale per
+               leading-axis row instead of one per tensor.  On flat plane
+               payloads (``(rows, LANES)`` buckets) a row belongs to exactly
+               one pytree leaf by the :mod:`repro.core.planes` layout
+               invariant, so per-row scales are per-tensor *or finer* —
+               restoring the per-tensor error characteristics that PR 5's
+               per-bucket ``int8`` lost, at + 4 bytes per 4096-byte row.
+* ``int8-row-ef`` — the same quantizer with an error-feedback residual
+               (re-injected next round).  The row-sparse gossip channels
+               keep the residual row-sparse: rows that were not shipped keep
+               their residual untouched (masked writeback in
+               :mod:`repro.sparse.channel`).
+* ``topk``     — top-k magnitude sparsification with *error feedback*
                (Stich et al.); the residual is carried in compressor state
                and re-injected next round, which is what makes sparsified
                gossip converge.
@@ -69,6 +81,44 @@ def _int8() -> Compressor:
     return Compressor(name="int8", init=lambda x: (), encode=encode, decode=decode)
 
 
+def _row_scale(x):
+    """Per-row absmax scale: one per leading-axis row for ndim >= 2 (shape
+    ``x.shape[:1] + (1,) * rest`` — broadcasts back over the row), falling
+    back to the per-tensor scale for flat/scalar leaves."""
+    if x.ndim >= 2:
+        amax = jnp.max(jnp.abs(x), axis=tuple(range(1, x.ndim)), keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
+def _int8_row() -> Compressor:
+    def encode(x, s):
+        scale = _row_scale(x)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32)}, s
+
+    def decode(m, like):
+        return (m["q"].astype(jnp.float32) * m["scale"]).astype(like.dtype)
+
+    return Compressor(name="int8-row", init=lambda x: (), encode=encode, decode=decode)
+
+
+def _int8_row_ef() -> Compressor:
+    base = _int8_row()
+
+    def init(x):
+        return jnp.zeros_like(x, dtype=jnp.float32)  # error-feedback residual
+
+    def encode(x, err):
+        x32 = x.astype(jnp.float32) + err
+        msg, _ = base.encode(x32, ())
+        decoded = msg["q"].astype(jnp.float32) * msg["scale"]
+        return msg, x32 - decoded
+
+    return Compressor(name="int8-row-ef", init=init, encode=encode, decode=base.decode)
+
+
 def _topk(rate: float) -> Compressor:
     assert 0.0 < rate <= 1.0
 
@@ -93,13 +143,18 @@ def _topk(rate: float) -> Compressor:
 
 
 def get_compressor(spec: str | None) -> Compressor:
-    """Parse ``None | "none" | "bf16" | "int8" | "topk:<rate>"``."""
+    """Parse ``None | "none" | "bf16" | "int8" | "int8-row" | "int8-row-ef"
+    | "topk:<rate>"``."""
     if spec is None or spec == "none":
         return _identity()
     if spec == "bf16":
         return _bf16()
     if spec == "int8":
         return _int8()
+    if spec == "int8-row":
+        return _int8_row()
+    if spec == "int8-row-ef":
+        return _int8_row_ef()
     if spec.startswith("topk"):
         rate = float(spec.split(":", 1)[1]) if ":" in spec else 0.01
         return _topk(rate)
@@ -114,6 +169,9 @@ def wire_bytes(nbytes_fp32: int, spec: str | None) -> float:
         return nbytes_fp32 / 2.0
     if spec == "int8":
         return nbytes_fp32 / 4.0 + 4.0
+    if spec in ("int8-row", "int8-row-ef"):
+        # one int8 per element + one f32 scale per 1024-lane (4 KiB) row
+        return nbytes_fp32 / 4.0 + max(4.0, nbytes_fp32 / 1024.0)
     if spec.startswith("topk"):
         rate = float(spec.split(":", 1)[1]) if ":" in spec else 0.01
         n = nbytes_fp32 / 4.0

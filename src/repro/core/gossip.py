@@ -8,7 +8,7 @@ ring buffers, telemetry) is a single checkpointable pytree::
 
     channel.init(template)              -> state          # zeros / residuals
     channel.apply(state, tree, step)    -> (state, tree)  # one gossip round
-    channel.bytes_per_step(payload)     -> {egress_bytes, hops}
+    channel.bytes_per_step(payload[, state]) -> {egress_bytes, hops}
     channel.version_gaps(state)         -> (n, n) int32   # per-edge staleness
     channel.state_specs(param_specs)    -> per-node PartitionSpec tree
 
@@ -261,15 +261,30 @@ class GossipChannel:
             state = self._tick(state, step, self._phase_bytes(tree)[step % period])
         return state
 
-    def bytes_per_step(self, payload_bytes: float) -> dict[str, float]:
-        """Analytic per-node egress bytes + latency hops of one round."""
+    def bytes_per_step(
+        self, payload_bytes: float, state: Tree | None = None
+    ) -> dict[str, float]:
+        """Per-node egress bytes + latency hops of one round.
+
+        ``state`` is the channel state after some number of ``apply``
+        rounds: channels whose wire volume is *state-dependent* (the
+        row-sparse channels — dirty-row counts change every round) report
+        the measured per-round average from it; fixed-payload channels
+        ignore it and return the analytic count, which for them is exact.
+        With ``state=None`` every channel returns the dense analytic
+        volume — an upper bound for sparse channels, exact otherwise.
+        """
         return gossip_bytes_per_step(
             self.topology, payload_bytes, impl=self._impl,
             compression=self.compression,
         )
 
-    def collectives_per_round(self, payload: Tree) -> float:
+    def collectives_per_round(self, payload: Tree, state: Tree | None = None) -> float:
         """Collective ops one ``apply`` issues for this payload (period mean).
+
+        ``state`` follows the same contract as :meth:`bytes_per_step`:
+        fixed-schedule channels ignore it; state-dependent channels may use
+        it to report the realized count.
 
         The wire path ships one message *component* per payload leaf per
         edge class (compressors with multi-part messages — int8's
@@ -843,7 +858,7 @@ class AllgatherChannel(GossipChannel):
             state = self._tick(state, step, (n - 1) * self._payload_nbytes(tree))
         return state, mixed
 
-    def collectives_per_round(self, payload: Tree) -> float:
+    def collectives_per_round(self, payload: Tree, state: Tree | None = None) -> float:
         # one raw-f32 all_gather per payload leaf, whatever the topology
         return float(len(jax.tree.leaves(payload)))
 

@@ -127,6 +127,15 @@ def moe_forward(
     )
     table, gtable = table[:E], gtable[:E]
 
+    # touched-expert hits for row-sparse gossip tracking: expert e is hit iff
+    # any *kept* assignment routes to it (capacity-dropped tokens produce no
+    # gradient on the expert — slot_e already maps them to the OOB row)
+    aux["moe_expert_hits"] = (
+        jnp.zeros((E,), jnp.float32)
+        .at[slot_e]
+        .max(jnp.ones_like(slot_e, jnp.float32), mode="drop")
+    )
+
     # ---- local expert slab ----
     E_local = params["w_in"].shape[0]
     if E_local < E:  # expert-parallel: slice this device's rows

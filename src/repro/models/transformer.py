@@ -345,11 +345,19 @@ def _block_fwd(
 
 def _run_groups(
     x, groups_params, cfg, tp_ctx, rt, groups, *, positions, causal=True,
-    enc_out=None, serve=False,
+    enc_out=None, serve=False, collect_rows=False,
 ):
-    """Scan each block group; returns (x, aux_totals, per-group cache stacks)."""
+    """Scan each block group; returns (x, aux_totals, per-group cache stacks).
+
+    ``collect_rows=True`` adds ``aux_totals["_row_info"]``: per-MoE-group
+    layer-stacked ``(Lg, E)`` expert-hit masks (keyed ``"moe/g<gi>"`` — the
+    :class:`repro.sparse.RowTracker` source names), feeding the row-sparse
+    gossip channels.  Off by default; the extra aux leaf is dead code XLA
+    eliminates when unused.
+    """
     aux_tot = {"moe_load_balance": jnp.float32(0.0), "moe_router_z": jnp.float32(0.0)}
     entries = {}
+    row_info = {}
     for gi, g in enumerate(groups):
         gp = groups_params[f"g{gi}"]
 
@@ -368,8 +376,12 @@ def _run_groups(
         for k in aux_tot:
             if auxs and k in auxs:
                 aux_tot[k] = aux_tot[k] + jnp.sum(auxs[k])
+        if collect_rows and auxs and "moe_expert_hits" in auxs:
+            row_info[f"moe/g{gi}"] = auxs["moe_expert_hits"]  # (Lg, E)
         if serve:
             entries[f"g{gi}"] = entry_stack
+    if collect_rows:
+        aux_tot["_row_info"] = row_info
     return x, aux_tot, entries
 
 
@@ -412,8 +424,12 @@ def _lm_head_w(params, cfg, tp_ctx, rt):
     return params["lm_head"]["w"].astype(rt.cdtype)
 
 
-def forward_loss(params, batch, cfg: ModelConfig, tp_ctx: TPContext, rt: RuntimeConfig):
-    """batch: tokens (B,S), targets (B,S) [, patch_embeds, enc_frames, mask]."""
+def forward_loss(params, batch, cfg: ModelConfig, tp_ctx: TPContext, rt: RuntimeConfig,
+                 *, collect_rows=False):
+    """batch: tokens (B,S), targets (B,S) [, patch_embeds, enc_frames, mask].
+
+    ``collect_rows=True`` adds ``metrics["_row_info"]`` (see
+    :func:`_run_groups`) for row-sparse gossip tracking."""
     x = _embed_inputs(params, batch, cfg, tp_ctx, rt)
     B, S = batch["tokens"].shape
     positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
@@ -423,6 +439,7 @@ def forward_loss(params, batch, cfg: ModelConfig, tp_ctx: TPContext, rt: Runtime
     x, aux, _ = _run_groups(
         x, params["groups"], cfg, tp_ctx, rt, block_groups(cfg),
         positions=positions, causal=True, enc_out=enc_out,
+        collect_rows=collect_rows,
     )
     x = norm_apply(x, params["final_norm"], cfg.norm_type)
     logits = lm_head_logits(x, _lm_head_w(params, cfg, tp_ctx, rt))

@@ -65,6 +65,10 @@ class SimResult:
     kept: tuple[int, ...] = ()  # original indices of the final cluster's nodes
     final_metric: float | None = None  # metric_fn on final stacked params
     final_consensus: float | None = None
+    # sparse-gossip byte accounting (SimSpec.sparse only): wire egress of
+    # the sparse channel vs its dense equivalent, plus — pernode engine —
+    # the row-delta mailbox volume vs always-full snapshots
+    comm: dict | None = None
 
     @property
     def alive(self) -> np.ndarray:

@@ -54,7 +54,6 @@ Known modeling choices (documented, asserted where relevant):
 
 from __future__ import annotations
 
-import warnings
 from collections import deque
 from typing import Any, Callable
 
@@ -99,8 +98,7 @@ def _mean_rows(tree: Tree, idx: list[int]) -> Tree:
 
 
 def _make_step(
-    opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn,
-    compression: str | None = None,
+    opt: Optimizer, topology: Topology, grad_fn: GradFn, lr_fn, spec,
 ) -> Callable:
     """The jitted stacked one-step — same computation as ``run_stacked``.
 
@@ -110,19 +108,41 @@ def _make_step(
     step explicitly rather than through a delayed channel — staleness-aware
     algorithms (``decentlam-sa``) damp on it, everything else ignores it.
 
-    ``compression`` encodes/decodes every node's payload around the mix
-    (the stacked analogue of wire compression); the channel state —
+    ``spec.compression`` encodes/decodes every node's payload around the
+    mix (the stacked analogue of wire compression); the channel state —
     error-feedback residuals for top-k — is threaded per node exactly like
     the optimizer state, so EF x staleness interactions are simulated
     faithfully.  ``None`` keeps the channel stateless and the signature's
     ``chstate`` an empty dict (bit-exact with the pre-compression engine).
+
+    ``spec.sparse`` swaps in a :class:`~repro.sparse.channel.
+    SparseStackedChannel` and marks each node's touched rows from its
+    gradient support before the mix; the row masks live in ``chstate`` with
+    every leaf leading-n, so the event engines thread them per node exactly
+    like error-feedback residuals (a node's mask rides its snapshot — a
+    reader always sees a (payload, mask) pair that was consistent when
+    published, which is what keeps exact mode sound under staleness).
     """
-    channel = StackedChannel(topology, compression=compression)
+    if spec.sparse:
+        from ..sparse import SparseStackedChannel, grad_row_masks
+
+        channel = SparseStackedChannel(
+            topology,
+            mode=spec.sparse,
+            crossover=spec.sparse_crossover,
+            calls_per_step=opt.gossips_per_step,
+            compression=spec.compression,
+        )
+        mark = lambda ch, g: channel.mark(ch, grad_row_masks(g))  # noqa: E731
+    else:
+        channel = StackedChannel(topology, compression=spec.compression)
+        mark = lambda ch, g: ch  # noqa: E731
     mean = make_stacked_mean(topology.n)
 
     @jax.jit
     def one(params, state, chstate, step, node_gaps):
         grads = grad_fn(params, step)
+        chstate = mark(chstate, grads)
         params, state, chstate = opt.step(
             params,
             grads,
@@ -190,59 +210,152 @@ def _visible(box, deadline: float, version_cap: int):
     return box[0]
 
 
+class _DeltaMailbox:
+    """Row-delta codec for the pernode engine's snapshot parameter payloads.
+
+    Under ``spec.sparse`` a published parameter snapshot is stored as the
+    rows (leaf axis 0) changed since the node's *pinned base* snapshot, not
+    as a full copy — the host-side analogue of the sparse channel's
+    touched-row shipping, and the event-engine model of what a real
+    publication would put on the wire.  Decode is bit-exact: the pinned
+    base with the changed rows overwritten.  A node re-pins (stores a full
+    snapshot) whenever its changed-row fraction reaches ``crossover`` —
+    the same dense-fallback rule as the wire channel — so delta chains
+    never form: every delta references exactly one pinned full.  Retained
+    mailbox entries reference at most the last ``depth + 1`` fulls (each
+    entry references the newest full at-or-before it, and entries span at
+    most ``depth`` publishes), so older bases are pruned.
+
+    ``dense_bytes`` / ``actual_bytes`` account what always-full mailboxes
+    would have stored vs what this codec stored (4 bytes per shipped row
+    index), reported in ``SimResult.comm``; the *wire* egress of the gossip
+    rounds is accounted separately by the sparse channel itself.
+    """
+
+    def __init__(self, n: int, depth: int, crossover: float):
+        self.depth = depth
+        self.crossover = crossover
+        self.bases: list[dict[int, list]] = [{} for _ in range(n)]
+        self.cur_bid: list[int | None] = [None] * n
+        self.next_bid = 0
+        self.treedef = None
+        self.dense_bytes = 0.0
+        self.actual_bytes = 0.0
+
+    def reset(self, n: int) -> None:
+        """Drop every pinned base (rescale restart: mailboxes are fresh)."""
+        self.bases = [{} for _ in range(n)]
+        self.cur_bid = [None] * n
+
+    def _pin(self, i: int, leaves: list) -> tuple:
+        bid = self.next_bid
+        self.next_bid += 1
+        self.bases[i][bid] = leaves
+        while len(self.bases[i]) > self.depth + 1:
+            self.bases[i].pop(next(iter(self.bases[i])))
+        self.cur_bid[i] = bid
+        return ("full", leaves)
+
+    def encode(self, i: int, row: Tree) -> tuple:
+        leaves = [np.asarray(v) for v in jax.tree.leaves(row)]
+        if self.treedef is None:
+            self.treedef = jax.tree.structure(row)
+        dense = float(sum(v.nbytes for v in leaves))
+        self.dense_bytes += dense
+        bid = self.cur_bid[i]
+        if bid is not None:
+            base = self.bases[i][bid]
+            deltas, actual, changed, total = [], 0.0, 0, 0
+            for b, v in zip(base, leaves):
+                if v.ndim == 0:  # scalar leaf: always shipped raw
+                    deltas.append((None, v))
+                    actual += v.nbytes
+                    changed += int(v != b)
+                    total += 1
+                    continue
+                diff = v != b
+                if v.ndim > 1:
+                    diff = diff.any(axis=tuple(range(1, v.ndim)))
+                idx = np.nonzero(diff)[0].astype(np.int32)
+                deltas.append((idx, v[idx]))
+                actual += v[idx].nbytes + 4.0 * idx.size
+                changed += int(idx.size)
+                total += v.shape[0]
+            if changed < self.crossover * max(total, 1):
+                self.actual_bytes += min(actual, dense)
+                return ("delta", bid, deltas)
+        self.actual_bytes += dense
+        return self._pin(i, leaves)
+
+    def encode_full(self, i: int, row: Tree) -> tuple:
+        """Force a full publish + re-pin (rejoin backfill).  Accounted once
+        even when the caller replays the entry under several versions — the
+        backfill is one real publication read at multiple version caps."""
+        leaves = [np.asarray(v) for v in jax.tree.leaves(row)]
+        if self.treedef is None:
+            self.treedef = jax.tree.structure(row)
+        dense = float(sum(v.nbytes for v in leaves))
+        self.dense_bytes += dense
+        self.actual_bytes += dense
+        return self._pin(i, leaves)
+
+    def decode(self, i: int, enc: tuple) -> Tree:
+        if enc[0] == "full":
+            return self.treedef.unflatten(enc[1])
+        _, bid, deltas = enc
+        out = []
+        for b, (idx, vals) in zip(self.bases[i][bid], deltas):
+            if idx is None:
+                out.append(vals)
+            elif idx.size == 0:
+                out.append(b)
+            else:
+                v = b.copy()
+                v[idx] = vals
+                out.append(v)
+        return self.treedef.unflatten(out)
+
+
+def _comm_summary(spec: SimSpec, chstate: Tree, codec=None) -> dict | None:
+    """``SimResult.comm`` from the sparse channel's volume counters (egress
+    bytes actually shipped vs the dense equivalent of the same rounds) and,
+    when the pernode engine compacted its mailboxes, the codec's totals."""
+    if not spec.sparse:
+        return None
+    vol = jax.device_get(chstate["rows"]["vol"])
+    out = {
+        "wire_sparse_bytes": float(np.sum(vol["sparse"])),
+        "wire_dense_bytes": float(np.sum(vol["dense"])),
+        "gossip_rounds": int(np.sum(vol["rounds"])),
+    }
+    if codec is not None:
+        out["mailbox_bytes"] = float(codec.actual_bytes)
+        out["mailbox_dense_bytes"] = float(codec.dense_bytes)
+    return out
+
+
 def simulate(opt: Optimizer, spec, *args, **kwargs) -> SimResult:
     """Run one scenario; terminates when every alive node has completed
     ``spec.n_steps`` steps (fast nodes may have done more).
 
-    The supported signature is ``simulate(opt, spec, params0, grad_fn)``
-    with a :class:`SimSpec` carrying everything else (topology, scenario,
-    compression, recording, seed, restrict, engine — see
+    The signature is ``simulate(opt, spec, params0, grad_fn)`` with a
+    :class:`SimSpec` carrying everything else (topology, scenario,
+    compression, sparse mode, recording, seed, restrict, engine — see
     :mod:`repro.sim.spec`).
-
-    The pre-SimSpec signature ``simulate(opt, topology_name, n, params0,
-    grad_fn, *, lr=..., n_steps=..., scenario=..., seed=..., record_dt=...,
-    metric_fn=..., restrict=..., compression=...)`` still works for one
-    release behind a :class:`DeprecationWarning`; it is repacked into a
-    ``SimSpec`` verbatim, so results are identical.
     """
-    if isinstance(spec, SimSpec):
-        if kwargs or len(args) != 2:
-            raise TypeError(
-                "simulate(opt, spec, params0, grad_fn) takes exactly four "
-                "arguments when called with a SimSpec"
-            )
-        params0, grad_fn = args
-        return _simulate(opt, spec, params0, grad_fn)
-
-    # --- deprecated kwargs-pile signature ---------------------------------
-    if len(args) != 3:
+    if not isinstance(spec, SimSpec):
         raise TypeError(
-            "legacy simulate(opt, topology_name, n, params0, grad_fn, ...) "
-            f"takes three positional arguments after the topology, got {len(args)}"
+            "simulate(opt, spec, params0, grad_fn) requires a repro.sim."
+            f"SimSpec as its second argument, got {type(spec).__name__}: "
+            "the pre-SimSpec kwargs-pile signature was removed after its "
+            "one-release deprecation window"
         )
-    warnings.warn(
-        "simulate(opt, topology_name, n, params0, grad_fn, ...) is "
-        "deprecated; build a repro.sim.SimSpec and call "
-        "simulate(opt, spec, params0, grad_fn) instead",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    n, params0, grad_fn = args
-    legacy = dict(kwargs)
-    spec = SimSpec(
-        topology=spec,
-        n=int(n),
-        lr=legacy.pop("lr", 1e-3),
-        n_steps=legacy.pop("n_steps", 100),
-        scenario=legacy.pop("scenario", None),
-        seed=legacy.pop("seed", 0),
-        record_dt=legacy.pop("record_dt", 0.0),
-        metric_fn=legacy.pop("metric_fn", None),
-        restrict=legacy.pop("restrict", None),
-        compression=legacy.pop("compression", None),
-    )
-    if legacy:
-        raise TypeError(f"unknown simulate() kwargs: {sorted(legacy)}")
+    if kwargs or len(args) != 2:
+        raise TypeError(
+            "simulate(opt, spec, params0, grad_fn) takes exactly four "
+            "arguments when called with a SimSpec"
+        )
+    params0, grad_fn = args
     return _simulate(opt, spec, params0, grad_fn)
 
 
@@ -274,13 +387,12 @@ def _run_event_pernode(
     n_steps = spec.n_steps
     metric_fn = spec.metric_fn
     restrict = spec.restrict
-    compression = spec.compression
     record_dt = spec.record_dt
     topology_ref = spec.topology
 
     base_topology = build_topology(topology_ref, n)
     topo = base_topology
-    one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+    one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
     nbrs = topo.in_neighbors()
 
     x = params0
@@ -303,13 +415,17 @@ def _run_event_pernode(
 
     depth = scenario.max_staleness + 4
     mailbox = _new_mailboxes(n, depth)
+    codec = _DeltaMailbox(n, depth, spec.sparse_crossover) if spec.sparse else None
     events_log: list[dict] = []
     trace: list[dict] = []
     next_record = record_dt if record_dt > 0 else None
 
     def publish(i: int, t: float) -> None:
+        row_x = _row(x, i)
+        if codec is not None:
+            row_x = codec.encode(i, jax.device_get(row_x))
         mailbox[i].append(
-            (int(steps[i]), t, _row(x, i), _row(state, i), _row(chstate, i))
+            (int(steps[i]), t, row_x, _row(state, i), _row(chstate, i))
         )
 
     def alive_nodes() -> list[int]:
@@ -402,7 +518,7 @@ def _run_event_pernode(
                 )
                 if plan.mode == "reroute":
                     topo = plan.topology
-                    one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+                    one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
                     nbrs = topo.in_neighbors()
                 else:
                     _rescale(plan, t)
@@ -432,6 +548,8 @@ def _run_event_pernode(
                     # across re-entry)
                     row_x, row_s = _row(x, i), _row(state, i)
                     row_c = _row(chstate, i)
+                    if codec is not None:
+                        row_x = codec.encode_full(i, jax.device_get(row_x))
                     mailbox[i] = deque(
                         (
                             (v, t, row_x, row_s, row_c)
@@ -444,7 +562,7 @@ def _run_event_pernode(
                 plan = plan_recovery(topology_ref, n_cur, sorted(dead)) if dead else None
                 topo = plan.topology if plan else base_topology
                 recovery_mode = plan.mode if plan else "reroute"
-                one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+                one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
                 nbrs = topo.in_neighbors()
                 events_log.append({"t": t, "event": f"rejoin{tuple(back)}"})
                 for i in back:
@@ -488,9 +606,11 @@ def _run_event_pernode(
         kept_indices = tuple(kept_indices[i] for i in kept)
         grad_fn = restrict(kept_indices)
         topo = plan.topology
-        one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+        one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
         nbrs = topo.in_neighbors()
         mailbox[:] = _new_mailboxes(new_n, depth)
+        if codec is not None:
+            codec.reset(new_n)
         waiting.clear()
         # drop every pending completion (the collapse is a sync barrier)
         while queue:
@@ -532,7 +652,9 @@ def _run_event_pernode(
                 snap = _visible(
                     mailbox[j], st - link_delay.get((j, i), 0.0), int(steps[i])
                 )
-                rows_x.append(snap[2])
+                rows_x.append(
+                    codec.decode(j, snap[2]) if codec is not None else snap[2]
+                )
                 rows_s.append(snap[3])
                 rows_c.append(snap[4])
                 vers[j] = snap[0]
@@ -616,6 +738,7 @@ def _run_event_pernode(
         events_log=events_log,
         final_metric=final_metric,
         final_consensus=final_consensus,
+        comm=_comm_summary(spec, chstate, codec),
     )
 
 
@@ -628,10 +751,24 @@ def _run_delayed_engine(
     metric_fn = spec.metric_fn
     record_dt = spec.record_dt
     topology = build_topology(spec.topology, n)
-    channel = DelayedStackedChannel(
-        topology, scenario.gossip_delay, calls_per_step=opt.gossips_per_step,
-        compression=spec.compression,
-    )
+    if spec.sparse:
+        # exact-mode sparse composes with the delay ring (delta raises in
+        # the ctor); the wd-stationarity requirement is on the *optimizer*
+        # given to us — documented at the channel, not checkable here
+        from ..sparse import SparseStackedChannel, grad_row_masks
+
+        channel = SparseStackedChannel(
+            topology, scenario.gossip_delay, mode=spec.sparse,
+            crossover=spec.sparse_crossover,
+            calls_per_step=opt.gossips_per_step, compression=spec.compression,
+        )
+        mark = lambda ch, g: channel.mark(ch, grad_row_masks(g))  # noqa: E731
+    else:
+        channel = DelayedStackedChannel(
+            topology, scenario.gossip_delay, calls_per_step=opt.gossips_per_step,
+            compression=spec.compression,
+        )
+        mark = lambda ch, g: ch  # noqa: E731
     mean = make_stacked_mean(n)
     chstate = channel.init(params0)
     state = opt.init(params0)
@@ -639,6 +776,7 @@ def _run_delayed_engine(
     @jax.jit
     def one(params, state, chstate, step):
         grads = grad_fn(params, step)
+        chstate = mark(chstate, grads)
         params, state, chstate = opt.step(
             params, grads, state,
             lr=lr_fn(step), step_idx=step, gossip=channel, mean=mean,
@@ -680,4 +818,5 @@ def _run_delayed_engine(
         kept=tuple(range(n)),
         final_metric=(float(metric_fn(params)) if metric_fn is not None else None),
         final_consensus=float(consensus_distance(jax.tree.leaves(params)[0])),
+        comm=_comm_summary(spec, chstate),
     )

@@ -55,6 +55,14 @@ class SimSpec:
     * ``engine`` — ``"auto"`` | ``"vectorized"`` | ``"pernode"`` event-loop
       strategy (ignored by ``engine="delayed"`` scenarios, which run
       synchronous rounds either way).
+    * ``sparse`` — ``None`` (dense gossip) or a row-sparse channel mode
+      (``"exact"`` | ``"delta"``, see :mod:`repro.sparse.channel`): every
+      gossip payload ships only the touched rows, with touch sets derived
+      from the per-step gradient support (``grad_row_masks``).  The
+      ``pernode`` engine additionally row-delta-compacts its snapshot
+      mailboxes and accounts the bytes in ``SimResult.comm``.
+    * ``sparse_crossover`` — dirty-row fraction past which a bucket ships
+      dense (see ``SparseStackedChannel``).
     """
 
     topology: str | TopologySpec | Topology = "ring"
@@ -68,6 +76,8 @@ class SimSpec:
     restrict: Callable[[tuple[int, ...]], GradFn] | None = None
     compression: str | None = None
     engine: str = "auto"
+    sparse: str | None = None
+    sparse_crossover: float = 0.9
 
     def __post_init__(self):
         assert self.n >= 1, f"n must be >= 1, got {self.n}"
@@ -76,4 +86,13 @@ class SimSpec:
         if self.engine not in _ENGINES:
             raise ValueError(
                 f"unknown engine {self.engine!r}; available: {_ENGINES}"
+            )
+        if self.sparse not in (None, "exact", "delta"):
+            raise ValueError(
+                f"unknown sparse mode {self.sparse!r}; available: "
+                "None | 'exact' | 'delta'"
+            )
+        if not 0.0 < self.sparse_crossover <= 1.0:
+            raise ValueError(
+                f"sparse_crossover must be in (0, 1], got {self.sparse_crossover}"
             )

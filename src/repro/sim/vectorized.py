@@ -33,6 +33,17 @@ a few dozen nodes.  This engine runs the same model node-batched:
    the reference loop's cost — the win is the homogeneous/tied regime,
    which is exactly where fleet-scale sweeps run.
 
+Row-sparse gossip (``SimSpec.sparse``) needs no structural change here:
+the sparse channel's row masks and volume counters are ordinary chstate
+leaves with a leading node axis, so ``_ring_init`` (which preserves dtype —
+bool masks included) threads them through the snapshot rings exactly like
+error-feedback residuals, and a reader's virtual view gathers each
+neighbor's (payload, mask) pair from one consistent snapshot.  The rings
+themselves stay dense — they are this engine's *storage*, not its wire
+model; shipped-byte accounting lives in the channel's volume counters
+(``SimResult.comm``), and the pernode engine additionally models mailbox
+row-delta compaction host-side.
+
 Snapshot selection is memoized per ``(start_time, version_cap,
 link-delay-adjustment)`` key — under lockstep that is one O(n * depth)
 numpy selection per round, shared by all n members.  A memoized selection
@@ -57,7 +68,7 @@ from ..launch.elastic import plan_recovery
 from .clock import EventQueue, node_rngs
 from .events import FailStop, LinkDegrade, Rejoin, Scenario, Slowdown
 from .metrics import SimResult
-from .runner import _make_step, _mean_rows, _row, _set_row, _stack_rows
+from .runner import _comm_summary, _make_step, _mean_rows, _row, _set_row, _stack_rows
 from .spec import SimSpec
 
 Tree = Any
@@ -91,13 +102,12 @@ def run_event_vectorized(
     n_steps = spec.n_steps
     metric_fn = spec.metric_fn
     restrict = spec.restrict
-    compression = spec.compression
     record_dt = spec.record_dt
     topology_ref = spec.topology
 
     base_topology = build_topology(topology_ref, n)
     topo = base_topology
-    one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+    one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
 
     x = params0
     state = opt.init(params0)
@@ -351,7 +361,7 @@ def run_event_vectorized(
                 )
                 if plan.mode == "reroute":
                     topo = plan.topology
-                    one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+                    one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
                     nbrs = topo.in_neighbors()
                     rebuild_edges()
                 else:
@@ -380,7 +390,7 @@ def run_event_vectorized(
                 plan = plan_recovery(topology_ref, n_cur, sorted(dead)) if dead else None
                 topo = plan.topology if plan else base_topology
                 recovery_mode = plan.mode if plan else "reroute"
-                one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+                one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
                 nbrs = topo.in_neighbors()
                 rebuild_edges()
                 events_log.append({"t": t, "event": f"rejoin{tuple(back)}"})
@@ -423,7 +433,7 @@ def run_event_vectorized(
         kept_indices = tuple(kept_indices[i] for i in kept)
         grad_fn = restrict(kept_indices)
         topo = plan.topology
-        one, channel = _make_step(opt, topo, grad_fn, lr_fn, compression)
+        one, channel = _make_step(opt, topo, grad_fn, lr_fn, spec)
         nbrs = topo.in_neighbors()
         rebuild_edges()
         # fresh rings for the restarted cluster: slot 0 = the collapsed row
@@ -566,4 +576,5 @@ def run_event_vectorized(
         events_log=events_log,
         final_metric=final_metric,
         final_consensus=final_consensus,
+        comm=_comm_summary(spec, chstate),
     )

@@ -1,0 +1,27 @@
+"""Row-sparse gossip: ship only the touched rows of each plane bucket.
+
+See :mod:`repro.sparse.channel` for the channel semantics (exact vs delta
+modes, crossover, byte accounting) and :mod:`repro.sparse.tracker` for the
+model-side touched-row derivation.
+"""
+
+from .channel import (
+    SparseDelayedPpermuteChannel,
+    SparseGossipChannel,
+    SparsePpermuteChannel,
+    SparseStackedChannel,
+    build_sparse_channel,
+    grad_row_masks,
+)
+from .tracker import RowSource, RowTracker
+
+__all__ = [
+    "SparseStackedChannel",
+    "SparsePpermuteChannel",
+    "SparseDelayedPpermuteChannel",
+    "SparseGossipChannel",
+    "build_sparse_channel",
+    "grad_row_masks",
+    "RowSource",
+    "RowTracker",
+]

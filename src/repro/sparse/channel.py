@@ -1,0 +1,889 @@
+"""Row-sparse gossip channels: ship only the touched rows of each bucket.
+
+The dense channels ship the entire payload every round even when a step
+touches a tiny fraction of it (embedding tables, MoE expert slabs).  These
+channels carry a *dirty-row mask* per payload leaf in the channel state and
+ship only ``(row_indices, row_payload)`` per bucket per edge class.  Masks
+are fed by :meth:`mark` (typically from :class:`repro.sparse.RowTracker`,
+or from gradient support via :func:`grad_row_masks`); a "row" is a slice of
+a leaf's first per-node axis — a ``(rows, LANES)`` plane bucket's plane row,
+a stacked sim parameter's coordinate.
+
+Two sparsity modes:
+
+* ``mode="exact"`` — provably equivalent to dense gossip.  The mask is
+  **global and monotone**: a row touched by *any* node is dirty on *every*
+  node forever after (stacked: union over the node axis; mesh: one tiny
+  ``psum`` per leaf).  Clean rows are identical on all nodes by induction
+  (they started from a broadcast and have only ever received equal,
+  deterministic local updates), so the mix may skip them entirely: the
+  output is ``where(dirty, dense_mix, own_row)`` — dirty rows get the
+  literal dense-channel bits, clean rows are untouched.  When every row is
+  dirty this is *bit-exact* with the dense channel by construction (the
+  ``where`` selects the dense result everywhere).  Works at any delay: with
+  monotone masks a receiver can reconstruct every sender's ring entry for
+  currently-clean rows from its own ring (they were in consensus at
+  publication time), which is what the delayed mesh variant does on the
+  wire.  Caveats: exactness of *skipping* a clean row requires the row to
+  actually stay equal across nodes — per-step weight decay or a per-node lr
+  keeps that true at delay 0 (the drift is identical everywhere) but breaks
+  it under delay (the delayed mix combines different versions of a drifting
+  row), so delayed exact sparsity requires untouched rows to be stationary
+  (zero weight decay — :func:`repro.train.step.build_gossip_channel`
+  enforces this).
+
+* ``mode="delta"`` — the aggressive saver: per-*sender*, per-phase masks
+  with heal-after-delivery.  A touched row becomes dirty for every topology
+  phase; when phase ``t % period`` ships, the rows delivered to that
+  phase's peers are marked clean again for them — exactly the tracker
+  contract "a row is clean for a peer only after that peer has received
+  it".  Receivers substitute their *own* current row for anything a sender
+  did not ship (the parameter-client mirror assumption: an unshipped row is
+  in consensus).  This is lossy relative to dense gossip whenever the
+  assumption is violated mid-flight; it is bit-exact when every row ships
+  (the hybrid falls back to the dense einsum for all-shipped rows) and its
+  convergence bias is benchmarked in ``BENCH_gossip.json`` rather than
+  claimed.  Delay must be 0 (healing after delivery is unsound when
+  deliveries themselves are stale).
+
+Dirty-mask sparsity is **not** top-k sparsification: the mask is derived
+from which rows the training step actually touched, so with exact tracking
+nothing is dropped and no error-feedback is needed for the *selection*
+(compression on top of the selected rows may still carry EF).  ``topk``
+compression is rejected on these channels — it selects entries across the
+whole bucket and would silently break the row framing.
+
+Crossover: when a leaf's dirty fraction reaches ``crossover`` the round
+ships the leaf dense (mask forced all-true — same static shapes, dense
+accounting), bounding the per-row index overhead.  In exact mode a
+crossover round marks everything dirty (mixed rows leave consensus), so a
+saturated leaf degenerates to dense gossip — which is the right asymptote.
+
+Byte accounting is *state-dependent* (the satellite fix this PR makes to
+``GossipChannel.bytes_per_step``): every ``apply`` accumulates measured
+sparse and dense-equivalent egress into ``state["rows"]["vol"]``, and
+``bytes_per_step(payload_bytes, state)`` reports the realized per-round
+average.  A shipped row is priced at its compressed wire bytes + 4 (i32 row
+index), capped at the leaf's dense wire cost (a real transport would switch
+to dense framing when indices stop paying).  Delayed channels account at
+push time (the payload pushed now ships ``d`` rounds later with exactly
+this mask) — time-amortized identical to ship-time accounting.
+
+On the mesh, XLA's static shapes mean the "wire" is the full buffer with
+clean rows zeroed; the *accounting* counts only dirty rows, which is what a
+dynamic transport would ship.  In exact mode the mask is globally agreed
+(psum union) so nothing extra travels; in delta mode each sender's mask
+rides along as one extra (rows,)-u8 ppermute per leaf per class.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compression import wire_bytes
+from ..core.gossip import (
+    DelayedPpermuteChannel,
+    DelayedStackedChannel,
+    PpermuteChannel,
+    _register_static,
+    _rotate_slots,
+    delay_matrix,
+)
+from ..core.topology import Topology
+
+Tree = Any
+
+__all__ = [
+    "SparseStackedChannel",
+    "SparsePpermuteChannel",
+    "SparseDelayedPpermuteChannel",
+    "SparseGossipChannel",
+    "build_sparse_channel",
+    "grad_row_masks",
+]
+
+_MODES = ("exact", "delta")
+
+
+def grad_row_masks(grads: Tree) -> Tree:
+    """Per-node touched-row masks from gradient support: leaf ``(n, R, ...)``
+    -> ``(n, R)`` bool (any nonzero in the row).  ``(n,)`` leaves are one
+    row per node.  Feed the result to :meth:`mark` on stacked channels."""
+
+    def leaf(g):
+        m = jnp.abs(g) > 0
+        if g.ndim == 1:
+            return m[:, None]
+        if g.ndim > 2:
+            m = jnp.any(m, axis=tuple(range(2, g.ndim)))
+        return m
+
+    return jax.tree.map(leaf, grads)
+
+
+def _rows_of(per_node_shape: tuple[int, ...]) -> int:
+    return int(per_node_shape[0]) if per_node_shape else 1
+
+
+def _row_wire(per_node_shape: tuple[int, ...], compression: str | None) -> float:
+    """Wire bytes of one shipped row: compressed row payload + i32 index."""
+    tail = int(np.prod(per_node_shape[1:])) if len(per_node_shape) > 1 else 1
+    return wire_bytes(4.0 * tail, compression) + 4.0
+
+
+def _leaf_wire(per_node_shape: tuple[int, ...], compression: str | None) -> float:
+    """Dense wire bytes of the whole leaf (the sparse-framing cost cap)."""
+    size = int(np.prod(per_node_shape)) if per_node_shape else 1
+    return wire_bytes(4.0 * size, compression)
+
+
+def _exp_node(m, x):
+    """(R,) mask -> broadcastable against a per-node leaf (R, ...)."""
+    if x.ndim == 0:
+        return m.reshape(())
+    return m.reshape((m.shape[0],) + (1,) * (x.ndim - 1))
+
+
+def _exp_stacked(m, x):
+    """(R,) mask -> broadcastable against a stacked leaf (n, R, ...)."""
+    if x.ndim == 1:  # (n,) leaf: R == 1
+        return m.reshape((1,))
+    return m.reshape((1, m.shape[0]) + (1,) * (x.ndim - 2))
+
+
+def _exp_sender(m, x):
+    """(n, R) per-sender mask -> broadcastable against stacked (n, R, ...)."""
+    if x.ndim == 1:
+        return m[:, 0]
+    return m.reshape(m.shape + (1,) * (x.ndim - 2))
+
+
+class _RowMaskMixin:
+    """Shared dirty-row plumbing for the sparse channels (state layout,
+    ``mark``, crossover, accounting).  Mask row dimension per leaf is the
+    first *per-node* axis; ``_stacked_layout`` decides where that is."""
+
+    mode: str
+    crossover: float
+
+    def _check_sparse_args(self, mode: str, crossover: float, calls_per_step: int = 1):
+        if mode not in _MODES:
+            raise ValueError(f"mode={mode!r}; expected one of {_MODES}")
+        if not (0.0 < crossover <= 1.0):
+            raise ValueError(f"crossover must be in (0, 1], got {crossover}")
+        if self._compressor.name.startswith("topk"):
+            raise ValueError(
+                "row-sparse channels reject top-k compression: top-k selects "
+                "entries across the whole bucket and breaks the row framing "
+                "(dirty-mask sparsity is not top-k — see module docstring)"
+            )
+        if mode == "delta" and self._stateful_comp:
+            raise ValueError(
+                "mode='delta' requires a stateless compressor: error "
+                "feedback on rows a peer never receives is unsound"
+            )
+        self.mode = mode
+        self.crossover = float(crossover)
+        # multi-gossip algorithms (e.g. da-dmsgd) send several payloads per
+        # step; delta mode may heal a shipped row only after the step's LAST
+        # send — earlier sends of the step still owe the row to the peers
+        self.sparse_calls = max(1, int(calls_per_step))
+
+    def _leaf_rows(self, x) -> int:
+        shape = x.shape[1:] if self._stacked_layout else x.shape
+        return _rows_of(shape)
+
+    def _per_node_shape(self, x) -> tuple[int, ...]:
+        return tuple(x.shape[1:] if self._stacked_layout else x.shape)
+
+    def _rows_init(self, template: Tree) -> dict:
+        n = self.topology.n
+        period = self.topology.period
+
+        def dirty(x):
+            r = self._leaf_rows(x)
+            if self._stacked_layout:
+                shape = (n, period, r) if self.mode == "delta" else (n, r)
+            else:
+                shape = (period, r) if self.mode == "delta" else (r,)
+            return jnp.zeros(shape, bool)
+
+        def pending(x):
+            r = self._leaf_rows(x)
+            shape = (n, r) if self._stacked_layout else (r,)
+            return jnp.zeros(shape, bool)
+
+        def scal(dtype):
+            return (
+                jnp.zeros((n,), dtype) if self._stacked_layout else jnp.zeros((), dtype)
+            )
+
+        rows = {
+            "dirty": jax.tree.map(dirty, template),
+            "pending": jax.tree.map(pending, template),
+            "vol": {
+                "sparse": scal(jnp.float32),
+                "dense": scal(jnp.float32),
+                "rounds": scal(jnp.int32),
+            },
+        }
+        if self.mode == "delta":
+            # which gossip call of the step this is (heal on the last one)
+            rows["call"] = scal(jnp.int32)
+        return rows
+
+    def mark(self, state: Tree, masks: Tree) -> Tree:
+        """OR row masks into the pending set (jit-safe; call any number of
+        times before ``apply``).  Mask leaves match the payload structure:
+        ``(R,)`` bool per leaf (or ``(n, R)`` per-sender on the stacked
+        layout; a ``(R,)`` leaf broadcasts to all senders).  Non-bool leaves
+        are treated as hit counts (``!= 0``)."""
+
+        def one(p, m):
+            m = jnp.asarray(m)
+            if m.dtype != jnp.bool_:
+                m = m != 0
+            if m.ndim == p.ndim - 1:
+                m = jnp.broadcast_to(m[None], p.shape)
+            return p | m
+
+        rows = dict(state["rows"])
+        rows["pending"] = jax.tree.map(one, rows["pending"], masks)
+        out = dict(state)
+        out["rows"] = rows
+        return out
+
+    def _with_crossover(self, D: Tree) -> Tree:
+        """Dense fallback: force a leaf's mask all-true once its dirty
+        fraction reaches the threshold (value-driven, computed from the
+        globally-agreed mask so every node takes the same branch)."""
+
+        def leaf(m):
+            frac = jnp.mean(m.astype(jnp.float32))
+            return m | (frac >= self.crossover)
+
+        return jax.tree.map(leaf, D)
+
+    def _sparse_egress(self, masks: Tree, tree: Tree, step, *, per_sender: bool):
+        """Measured egress bytes this round: shipped rows x (row wire + 4B
+        index), capped per leaf at its dense wire cost; times the phase's
+        send count.  ``per_sender``: masks are (n, R) and the result is a
+        per-node (n,) vector (delta stacked); else scalar."""
+        sends = jnp.asarray(
+            [
+                float(len(self.topology.edge_classes(t)))
+                for t in range(self.topology.period)
+            ],
+            jnp.float32,
+        )[step % self.topology.period]
+        total = jnp.float32(0.0)
+        for m, x in zip(jax.tree.leaves(masks), jax.tree.leaves(tree)):
+            shape = self._per_node_shape(x)
+            rw = _row_wire(shape, self.compression)
+            cap = _leaf_wire(shape, self.compression)
+            count = jnp.sum(m.astype(jnp.float32), axis=-1 if per_sender else None)
+            total = total + jnp.minimum(count * rw, cap)
+        return sends * total
+
+    def _dense_egress(self, tree: Tree, step):
+        """Dense-equivalent per-node egress this round (the baseline the
+        sparse savings are measured against)."""
+        return self._phase_bytes(tree)[step % self.topology.period]
+
+    def _vol_tick(self, rows: dict, sparse_eg, dense_eg) -> dict:
+        vol = rows["vol"]
+        ones = jnp.ones_like(vol["rounds"])
+        rows = dict(rows)
+        rows["vol"] = {
+            "sparse": vol["sparse"] + jnp.broadcast_to(
+                jnp.asarray(sparse_eg, jnp.float32), vol["sparse"].shape
+            ),
+            "dense": vol["dense"] + jnp.broadcast_to(
+                jnp.asarray(dense_eg, jnp.float32), vol["dense"].shape
+            ),
+            "rounds": vol["rounds"] + ones,
+        }
+        return rows
+
+    def bytes_per_step(
+        self, payload_bytes: float, state: Tree | None = None
+    ) -> dict[str, float]:
+        base = super().bytes_per_step(payload_bytes)
+        if state is None or "rows" not in state:
+            return base  # dense analytic count — an upper bound
+        vol = state["rows"]["vol"]
+        rounds = max(float(np.mean(np.asarray(vol["rounds"]))), 1.0)
+        return {
+            "egress_bytes": float(np.mean(np.asarray(vol["sparse"]))) / rounds,
+            "hops": base["hops"],
+            "dense_egress_bytes": float(np.mean(np.asarray(vol["dense"]))) / rounds,
+        }
+
+    def state_specs(self, param_specs: Tree) -> Tree:
+        from jax.sharding import PartitionSpec as P
+
+        specs = super().state_specs(param_specs)
+        is_p = lambda s: isinstance(s, P)
+        dirty_spec = P(None, None) if self.mode == "delta" else P(None)
+        specs["rows"] = {
+            "dirty": jax.tree.map(lambda s: dirty_spec, param_specs, is_leaf=is_p),
+            "pending": jax.tree.map(lambda s: P(None), param_specs, is_leaf=is_p),
+            "vol": {"sparse": P(), "dense": P(), "rounds": P()},
+        }
+        if self.mode == "delta":
+            specs["rows"]["call"] = P()
+        return specs
+
+
+# ---------------------------------------------------------------------------
+# Stacked (sim / oracle) layout
+# ---------------------------------------------------------------------------
+
+
+@_register_static
+class SparseStackedChannel(_RowMaskMixin, DelayedStackedChannel):
+    """Row-sparse gossip in the stacked ``(n, ...)`` layout (sim + oracle).
+
+    Subclasses :class:`DelayedStackedChannel`, so delay 0 runs the exact
+    :class:`StackedChannel` mix underneath and ``delay > 0`` reuses the
+    ring-buffer machinery unchanged — the sparse layer is a mask around the
+    parent's mixed result (exact mode) or its own hybrid einsum (delta).
+    See the module docstring for semantics.
+    """
+
+    name = "sparse-stacked"
+
+    def __init__(
+        self,
+        topology: Topology,
+        delay=0,
+        *,
+        mode: str = "exact",
+        crossover: float = 0.9,
+        calls_per_step: int = 1,
+        compression: str | None = None,
+        telemetry: bool = False,
+    ):
+        super().__init__(
+            topology, delay, calls_per_step=calls_per_step,
+            compression=compression, telemetry=telemetry,
+        )
+        self._check_sparse_args(mode, crossover, calls_per_step)
+        if mode == "delta" and (delay_matrix(topology.n, delay) != 0).any():
+            raise ValueError(
+                "mode='delta' requires delay=0: healing a row after delivery "
+                "is unsound when the delivery itself is stale (use "
+                "mode='exact' for delayed sparse gossip)"
+            )
+
+    def _init_extra(self, template: Tree) -> dict:
+        extra = super()._init_extra(template)
+        extra["rows"] = self._rows_init(template)
+        return extra
+
+    # -- exact mode ---------------------------------------------------------
+
+    def _exact_apply(self, state: Tree, tree: Tree, step):
+        rows = state["rows"]
+        # union pending marks over senders, fold into the monotone global mask
+        D = jax.tree.map(
+            lambda d, p: jnp.any(d, axis=0) | jnp.any(p, axis=0),
+            rows["dirty"], rows["pending"],
+        )
+        D = self._with_crossover(D)
+        old_comp = state.get("comp") if self._stateful_comp else None
+        sub = {k: v for k, v in state.items() if k != "rows"}
+        sub, mixed = super().apply(sub, tree, step)
+        # dirty rows take the dense-channel bits; clean rows are identity
+        out = jax.tree.map(
+            lambda m, y, x: jnp.where(_exp_stacked(m, x), y, x), D, mixed, tree
+        )
+        if self._stateful_comp and old_comp is not None and "comp" in sub:
+            # row-sparse error feedback: rows that were not shipped keep
+            # their residual untouched
+            sub["comp"] = jax.tree.map(
+                lambda m, cn, co: jnp.where(_exp_stacked(m, cn), cn, co),
+                D, sub["comp"], old_comp,
+            )
+        sparse_eg = self._sparse_egress(D, tree, step, per_sender=False)
+        dense_eg = self._dense_egress(tree, step)
+        if "t" in sub:  # parent ticked dense bytes; correct to measured sparse
+            t = dict(sub["t"])
+            t["bytes"] = state["t"]["bytes"] + sparse_eg
+            sub["t"] = t
+        n = self.topology.n
+        new_rows = self._vol_tick(rows, sparse_eg, dense_eg)
+        new_rows["dirty"] = jax.tree.map(
+            lambda m: jnp.broadcast_to(m[None], (n,) + m.shape), D
+        )
+        new_rows["pending"] = jax.tree.map(jnp.zeros_like, rows["pending"])
+        sub["rows"] = new_rows
+        return sub, out
+
+    # -- delta mode ---------------------------------------------------------
+
+    def _delta_phase(self, t: int, tree: Tree, M: Tree, comp: Tree):
+        """Hybrid mix: rows every sender shipped take the dense einsum bits;
+        otherwise each receiver substitutes its own row for unshipped
+        senders (the mirror assumption)."""
+        diag, Woff, W = self._diag[t], self._Woff[t], self._Ws[t]
+        leaves, treedef = jax.tree.flatten(tree)
+        masks = treedef.flatten_up_to(M)
+        compressed = self._compressor.name != "none"
+        outs = []
+        for x, m in zip(leaves, masks):
+            x32 = x.astype(jnp.float32)
+            mb = _exp_sender(m, x32)
+            if compressed:
+                msg = jax.vmap(lambda xi: self._compressor.encode(xi, ())[0])(x32)
+                src = jax.vmap(self._compressor.decode)(msg, x32).astype(jnp.float32)
+                d = diag.reshape((-1,) + (1,) * (x32.ndim - 1))
+                dense = d * x32 + jnp.einsum("ij,j...->i...", Woff, src)
+            else:
+                src = x32
+                dense = jnp.einsum("ij,j...->i...", W, x32)
+
+            def recv(xi, wrow, worow, dg):
+                subst = jnp.where(mb, src, xi[None])
+                if compressed:
+                    return dg * xi + jnp.einsum("j,j...->...", worow, subst)
+                return jnp.einsum("j,j...->...", wrow, subst)
+
+            sparse = jax.vmap(recv)(x32, W, Woff, diag)
+            all_ship = jnp.all(m, axis=0)
+            outs.append(
+                jnp.where(_exp_stacked(all_ship, x32), dense, sparse).astype(x.dtype)
+            )
+        return treedef.unflatten(outs), comp
+
+    def _delta_apply(self, state: Tree, tree: Tree, step):
+        rows = state["rows"]
+        period = self.topology.period
+        tau = step % period
+        # a touched row is dirty for every phase until that phase ships it
+        dirty = jax.tree.map(
+            lambda d, p: d | p[:, None, :], rows["dirty"], rows["pending"]
+        )
+        M = jax.tree.map(lambda d: jnp.take(d, tau, axis=1), dirty)  # (n, R)
+        M = self._with_crossover(M)
+        comp = state.get("comp", ())
+        if period == 1:
+            mixed, comp = self._delta_phase(0, tree, M, comp)
+        else:
+            branches = [
+                functools.partial(self._delta_phase, t) for t in range(period)
+            ]
+            mixed, comp = jax.lax.switch(tau, branches, tree, M, comp)
+        # heal: the rows just delivered to this phase's peers are clean again
+        # — but only once the step's LAST gossip call has shipped them (a
+        # multi-gossip step sends several payloads over the same rows)
+        oh = (jnp.arange(period) == tau)[None, :, None]
+        last = (rows["call"] + 1) % self.sparse_calls == 0  # (n,)
+        sparse_eg = self._sparse_egress(M, tree, step, per_sender=True)  # (n,)
+        new_rows = self._vol_tick(rows, sparse_eg, self._dense_egress(tree, step))
+        new_rows["dirty"] = jax.tree.map(
+            lambda d: jnp.where(last[:, None, None], d & ~oh, d), dirty
+        )
+        new_rows["pending"] = jax.tree.map(
+            lambda p: jnp.where(last[:, None], jnp.zeros_like(p), p),
+            rows["pending"],
+        )
+        new_rows["call"] = (rows["call"] + 1) % self.sparse_calls
+        new_state = {k: v for k, v in state.items() if k != "rows"}
+        new_state = self._finish(new_state, tree, step, comp=comp)
+        if "t" in new_state:
+            t = dict(new_state["t"])
+            t["bytes"] = state["t"]["bytes"] + jnp.mean(sparse_eg)
+            new_state["t"] = t
+        new_state["rows"] = new_rows
+        return new_state, mixed
+
+    def apply(self, state: Tree, tree: Tree, step):
+        if self.mode == "delta":
+            return self._delta_apply(state, tree, step)
+        return self._exact_apply(state, tree, step)
+
+
+# The reference form of the ISSUE's SparseGossipChannel: the stacked
+# (mesh-free) realization every test and sim drives.
+SparseGossipChannel = SparseStackedChannel
+
+
+# ---------------------------------------------------------------------------
+# Mesh (shard_map) layout
+# ---------------------------------------------------------------------------
+
+
+@_register_static
+class SparsePpermuteChannel(_RowMaskMixin, PpermuteChannel):
+    """Row-sparse ppermute gossip (delay 0; production mesh path).
+
+    Exact mode unions pending marks with one tiny psum per leaf so every
+    node holds the identical global mask, ships the buffer with clean rows
+    zeroed (static shapes; accounting counts dirty rows only), and masks
+    the result so clean rows are identity.  Delta mode ships each sender's
+    own mask alongside the payload (one (rows,)-u8 ppermute per leaf per
+    class) and receivers substitute their own rows for unshipped ones.
+    """
+
+    name = "sparse-ppermute"
+
+    def __init__(
+        self,
+        topology: Topology,
+        node_axes,
+        *,
+        mode: str = "exact",
+        crossover: float = 0.9,
+        calls_per_step: int = 1,
+        compression: str | None = None,
+        serialize: bool = True,
+        telemetry: bool = False,
+    ):
+        super().__init__(
+            topology, node_axes, compression=compression, serialize=serialize,
+            telemetry=telemetry,
+        )
+        self._check_sparse_args(mode, crossover, calls_per_step)
+
+    def _init_extra(self, template: Tree) -> dict:
+        extra = super()._init_extra(template)
+        extra["rows"] = self._rows_init(template)
+        return extra
+
+    def _sparse_classes(self, t: int, tree: Tree, comp_state: Tree, D: Tree):
+        """Exact-mode mix: parent's edge-class loop with clean rows zeroed
+        on the wire and identity on the way out."""
+        topology, compressor = self.topology, self._compressor
+        classes = topology.edge_classes(t)
+        self_w = jnp.asarray(topology.self_weight(t), dtype=jnp.float32)
+        idx = jax.lax.axis_index(self.node_axes)
+
+        leaves, treedef = jax.tree.flatten(tree)
+        masks = treedef.flatten_up_to(D)
+        stateless = not jax.tree.leaves(comp_state)
+        states = (
+            [()] * len(leaves) if stateless else treedef.flatten_up_to(comp_state)
+        )
+
+        msgs, new_states = [], []
+        for x, m, st in zip(leaves, masks, states):
+            wire = jnp.where(_exp_node(m, x), x, jnp.zeros((), x.dtype))
+            msg, st_new = compressor.encode(wire, st)
+            if not stateless:
+                # row-sparse error feedback: unshipped rows keep residual
+                st_new = jax.tree.map(
+                    lambda cn, co: jnp.where(_exp_node(m, cn), cn, co), st_new, st
+                )
+            msgs.append(msg)
+            new_states.append(st_new)
+
+        out = [self_w[idx] * x.astype(jnp.float32) for x in leaves]
+        for ci, c in enumerate(classes):
+            w = jnp.asarray(c.recv_weight, dtype=jnp.float32)[idx]
+            for k, (x, msg) in enumerate(zip(leaves, msgs)):
+                if self.serialize and ci > 0:
+                    z = out[k].ravel()[:1].sum() * 0
+                    msg = jax.tree.map(lambda a: a + z.astype(a.dtype), msg)
+                recv = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, self.node_axes, c.pairs), msg
+                )
+                out[k] = out[k] + w * compressor.decode(recv, x).astype(jnp.float32)
+        # dirty rows got the full accumulation; clean rows are identity
+        out = [
+            jnp.where(_exp_node(m, x), o, x.astype(jnp.float32)).astype(x.dtype)
+            for o, x, m in zip(out, leaves, masks)
+        ]
+        comp_out = comp_state if stateless else treedef.unflatten(new_states)
+        return treedef.unflatten(out), comp_out
+
+    def _delta_classes(self, t: int, tree: Tree, comp_state: Tree, M: Tree):
+        """Delta-mode mix: sender masks ride the wire; receivers substitute
+        their own rows for anything unshipped."""
+        topology, compressor = self.topology, self._compressor
+        classes = topology.edge_classes(t)
+        self_w = jnp.asarray(topology.self_weight(t), dtype=jnp.float32)
+        idx = jax.lax.axis_index(self.node_axes)
+
+        leaves, treedef = jax.tree.flatten(tree)
+        masks = treedef.flatten_up_to(M)
+
+        msgs = []
+        for x, m in zip(leaves, masks):
+            wire = jnp.where(_exp_node(m, x), x, jnp.zeros((), x.dtype))
+            msgs.append(compressor.encode(wire, ())[0])
+
+        out = [self_w[idx] * x.astype(jnp.float32) for x in leaves]
+        for ci, c in enumerate(classes):
+            w = jnp.asarray(c.recv_weight, dtype=jnp.float32)[idx]
+            for k, (x, msg, m) in enumerate(zip(leaves, msgs, masks)):
+                if self.serialize and ci > 0:
+                    z = out[k].ravel()[:1].sum() * 0
+                    msg = jax.tree.map(lambda a: a + z.astype(a.dtype), msg)
+                recv = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, self.node_axes, c.pairs), msg
+                )
+                recv_m = (
+                    jax.lax.ppermute(m.astype(jnp.uint8), self.node_axes, c.pairs)
+                    > 0
+                )
+                got = compressor.decode(recv, x).astype(jnp.float32)
+                out[k] = out[k] + w * jnp.where(
+                    _exp_node(recv_m, x), got, x.astype(jnp.float32)
+                )
+        out = [o.astype(x.dtype) for o, x in zip(out, leaves)]
+        return treedef.unflatten(out), comp_state
+
+    def apply(self, state: Tree, tree: Tree, step):
+        rows = state["rows"]
+        period = self.topology.period
+        tau = step % period
+        comp = state.get("comp", ()) if isinstance(state, dict) else state
+        if self.mode == "exact":
+            pend_g = jax.tree.map(
+                lambda p: jax.lax.psum(p.astype(jnp.float32), self.node_axes) > 0,
+                rows["pending"],
+            )
+            D = jax.tree.map(lambda d, p: d | p, rows["dirty"], pend_g)
+            D = self._with_crossover(D)
+            new_dirty = D
+            body = self._sparse_classes
+            ship = D
+        else:
+            dirty = jax.tree.map(
+                lambda d, p: d | p[None, :], rows["dirty"], rows["pending"]
+            )
+            M = jax.tree.map(lambda d: jnp.take(d, tau, axis=0), dirty)
+            M = self._with_crossover(M)
+            # heal only once the step's LAST gossip call has shipped the rows
+            oh = (jnp.arange(period) == tau)[:, None]
+            last = (rows["call"] + 1) % self.sparse_calls == 0
+            new_dirty = jax.tree.map(
+                lambda d: jnp.where(last, d & ~oh, d), dirty
+            )
+            body = self._delta_classes
+            ship = M
+        if period == 1:
+            mixed, comp = body(0, tree, comp, ship)
+        else:
+            branches = [functools.partial(body, t) for t in range(period)]
+            mixed, comp = jax.lax.switch(tau, branches, tree, comp, ship)
+
+        sparse_eg = self._sparse_egress(ship, tree, step, per_sender=False)
+        new_rows = self._vol_tick(rows, sparse_eg, self._dense_egress(tree, step))
+        new_rows["dirty"] = new_dirty
+        if self.mode == "delta":
+            new_rows["pending"] = jax.tree.map(
+                lambda p: jnp.where(last, jnp.zeros_like(p), p),
+                rows["pending"],
+            )
+            new_rows["call"] = (rows["call"] + 1) % self.sparse_calls
+        else:
+            new_rows["pending"] = jax.tree.map(jnp.zeros_like, rows["pending"])
+        new_state = {k: v for k, v in state.items() if k != "rows"}
+        new_state = self._finish(new_state, tree, step, comp=comp)
+        if "t" in new_state:
+            tlm = dict(new_state["t"])
+            tlm["bytes"] = state["t"]["bytes"] + sparse_eg
+            new_state["t"] = tlm
+        new_state["rows"] = new_rows
+        return new_state, mixed
+
+    def collectives_per_round(self, payload: Tree, state: Tree | None = None) -> float:
+        base = super().collectives_per_round(payload)
+        n_leaves = len(jax.tree.leaves(payload))
+        if self.mode == "exact":
+            # + one mask-union psum per leaf (the masks are tiny)
+            return base + n_leaves
+        # + one mask ppermute per leaf per edge class
+        sends = np.mean(
+            [len(self.topology.edge_classes(t)) for t in range(self.topology.period)]
+        )
+        return base + float(sends) * n_leaves
+
+
+@_register_static
+class SparseDelayedPpermuteChannel(_RowMaskMixin, DelayedPpermuteChannel):
+    """Row-sparse delayed ppermute gossip (exact mode only).
+
+    The parent's per-node ring holds raw payload history; the wire ships
+    the delayed payload with currently-clean rows zeroed.  The receiver
+    restores those rows from its *own* ring entry at the same read index —
+    valid because a row clean under the monotone global mask was in
+    consensus at publication time, so every node's ring entry for it is
+    identical.  The output masks clean rows to identity, matching
+    :class:`SparseStackedChannel` exact mode under the same delay.
+    """
+
+    name = "sparse-delayed-ppermute"
+
+    def __init__(
+        self,
+        topology: Topology,
+        node_axes,
+        delay: int,
+        *,
+        crossover: float = 0.9,
+        calls_per_step: int = 1,
+        serialize: bool = True,
+        telemetry: bool = False,
+        compression: str | None = None,
+    ):
+        super().__init__(
+            topology, node_axes, delay, calls_per_step=calls_per_step,
+            serialize=serialize, telemetry=telemetry, compression=compression,
+        )
+        if self.delay < 1:
+            raise ValueError(
+                "SparseDelayedPpermuteChannel requires delay >= 1 (use "
+                "SparsePpermuteChannel for the undelayed wire path)"
+            )
+        self._check_sparse_args("exact", crossover, calls_per_step)
+
+    def _init_extra(self, template: Tree) -> dict:
+        extra = super()._init_extra(template)
+        extra["rows"] = self._rows_init(template)
+        return extra
+
+    def _mix_sparse(self, t: int, tree: Tree, wire: Tree, own: Tree, D: Tree):
+        topology = self.topology
+        classes = topology.edge_classes(t)
+        self_w = jnp.asarray(topology.self_weight(t), dtype=jnp.float32)
+        idx = jax.lax.axis_index(self.node_axes)
+
+        leaves, treedef = jax.tree.flatten(tree)
+        wire_leaves = treedef.flatten_up_to(wire)
+        own_leaves = treedef.flatten_up_to(own)
+        masks = treedef.flatten_up_to(D)
+        out = [self_w[idx] * x.astype(jnp.float32) for x in leaves]
+        for ci, c in enumerate(classes):
+            w = jnp.asarray(c.recv_weight, dtype=jnp.float32)[idx]
+            for k, (m_wire, m_own, dm) in enumerate(
+                zip(wire_leaves, own_leaves, masks)
+            ):
+                if self.serialize and ci > 0:
+                    z = out[k].ravel()[:1].sum() * 0
+                    m_wire = m_wire + z
+                recv = jax.lax.ppermute(m_wire, self.node_axes, c.pairs)
+                # clean rows were zeroed on the wire; restore them from the
+                # receiver's own ring entry (consensus at publication time)
+                recon = jnp.where(_exp_node(dm, recv), recv, m_own)
+                out[k] = out[k] + w * recon
+        out = [o.astype(x.dtype) for o, x in zip(out, leaves)]
+        return treedef.unflatten(out)
+
+    def apply(self, state: Tree, tree: Tree, step):
+        rows = state["rows"]
+        pend_g = jax.tree.map(
+            lambda p: jax.lax.psum(p.astype(jnp.float32), self.node_axes) > 0,
+            rows["pending"],
+        )
+        D = jax.tree.map(lambda d, p: d | p, rows["dirty"], pend_g)
+        D = self._with_crossover(D)
+
+        period = self.topology.period
+        slot = state["delay"]["s0"]
+        count = slot["count"]
+        pos = count % self._ring
+
+        leaves, treedef = jax.tree.flatten(tree)
+        hists = treedef.flatten_up_to(slot["hist"])
+        new_hists = [
+            jax.lax.dynamic_update_index_in_dim(h, x.astype(jnp.float32), pos, axis=0)
+            for h, x in zip(hists, leaves)
+        ]
+        d_eff = jnp.minimum(jnp.int32(self.delay), count)
+        read = (count - d_eff) % self._ring
+        own = treedef.unflatten(
+            [
+                jax.lax.dynamic_index_in_dim(h, read, axis=0, keepdims=False)
+                for h in new_hists
+            ]
+        )
+        wire = jax.tree.map(
+            lambda m, a: jnp.where(_exp_node(m, a), a, jnp.zeros((), a.dtype)), D, own
+        )
+
+        if period == 1:
+            mixed = self._mix_sparse(0, tree, wire, own, D)
+        else:
+            branches = [
+                functools.partial(self._mix_sparse, t) for t in range(period)
+            ]
+            mixed = jax.lax.switch(step % period, branches, tree, wire, own, D)
+        # dirty rows got the delayed mix; clean rows are identity
+        out = jax.tree.map(
+            lambda m, y, x: jnp.where(_exp_node(m, x), y, x), D, mixed, tree
+        )
+
+        new_slot = {"hist": treedef.unflatten(new_hists), "count": count + 1}
+        # push-time accounting: the payload pushed now ships `delay` rounds
+        # later with exactly this mask (time-amortized == ship-time)
+        sparse_eg = self._sparse_egress(D, tree, step, per_sender=False)
+        new_rows = self._vol_tick(rows, sparse_eg, self._dense_egress(tree, step))
+        new_rows["dirty"] = D
+        new_rows["pending"] = jax.tree.map(jnp.zeros_like, rows["pending"])
+        new_state = {k: v for k, v in state.items() if k != "rows"}
+        new_state["delay"] = _rotate_slots(state["delay"], self._slots, new_slot)
+        new_state = self._finish(new_state, tree, step)
+        if "t" in new_state:
+            tlm = dict(new_state["t"])
+            tlm["bytes"] = state["t"]["bytes"] + sparse_eg
+            new_state["t"] = tlm
+        new_state["rows"] = new_rows
+        return new_state, out
+
+    def collectives_per_round(self, payload: Tree, state: Tree | None = None) -> float:
+        # parent wire collectives + one mask-union psum per leaf
+        return super().collectives_per_round(payload) + len(jax.tree.leaves(payload))
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+def build_sparse_channel(
+    impl: str,
+    topology: Topology,
+    node_axes=None,
+    *,
+    mode: str = "exact",
+    crossover: float = 0.9,
+    delay: int = 0,
+    compression: str | None = None,
+    serialize: bool = True,
+    calls_per_step: int = 1,
+    telemetry: bool = False,
+):
+    """Sparse counterpart of :func:`repro.core.gossip.build_channel` for
+    ``impl`` in {stacked, ppermute}; ``delay > 0`` selects the delayed
+    variant (exact mode only)."""
+    if impl == "stacked":
+        return SparseStackedChannel(
+            topology, delay, mode=mode, crossover=crossover,
+            calls_per_step=calls_per_step, compression=compression,
+            telemetry=telemetry,
+        )
+    if node_axes is None:
+        raise ValueError(f"impl={impl!r} needs node_axes")
+    if impl == "ppermute":
+        if delay:
+            if mode != "exact":
+                raise ValueError("delayed sparse gossip supports mode='exact' only")
+            return SparseDelayedPpermuteChannel(
+                topology, node_axes, delay, crossover=crossover,
+                calls_per_step=calls_per_step, serialize=serialize,
+                telemetry=telemetry, compression=compression,
+            )
+        return SparsePpermuteChannel(
+            topology, node_axes, mode=mode, crossover=crossover,
+            calls_per_step=calls_per_step, compression=compression,
+            serialize=serialize, telemetry=telemetry,
+        )
+    raise ValueError(f"unknown sparse gossip impl {impl!r} (stacked | ppermute)")

@@ -1,0 +1,228 @@
+"""RowTracker: from model-level touch events to plane-row dirty masks.
+
+The sparse channels (:mod:`repro.sparse.channel`) consume *row masks* over
+the gossip payload — for the flat-planes path that payload is the
+``{bucket: (rows, LANES)}`` dict of :class:`repro.core.planes.PlaneLayout`,
+whose layout invariant ("every leaf starts at a row boundary, a row belongs
+to exactly one leaf") is what makes row-granular shipping addressable at
+all.  The tracker is the static bridge:
+
+* **dense leaves** (attention, norms, router weights, tied embeddings —
+  anything every token's gradient touches) contribute a *static* base mask:
+  all their rows, every step.  Padding rows stay clean forever (they are
+  zero on every node — consensus by construction).
+* **sparse leaves** are registered as *unit sources*: an embedding table is
+  ``vocab`` units of ``d_model`` elements (touched units = the step's token
+  ids); a layer-stacked MoE expert slab ``(Lg, E, d, f)`` is ``Lg * E``
+  units of ``d * f`` elements (touched units = the router's dispatch hits,
+  shape ``(Lg, E)``).  Per step, :meth:`step_masks` maps each source's
+  touched units to plane rows through the precomputed unit→row interval
+  overlap (a cumsum-gather — O(rows), jit-safe) and ORs them into the base.
+
+The tracker only *derives* the per-step touched set; the accumulation that
+keeps delayed/SSP delivery correct — "a row is clean for a peer only after
+that peer has received it" — lives in the channel state (monotone global
+masks in exact mode, per-phase heal-after-delivery in delta mode), fed via
+``channel.mark(state, tracker.step_masks(...))``.
+
+Tied embeddings are tracked **dense**: the lm-head softmax gradient is
+dense over the vocabulary, so every table row is genuinely touched each
+step and sparse tracking would be a lie.  Only untied input embeddings
+(gather-only access) are row-sparse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.planes import LANES, PlaneLayout
+
+Tree = Any
+
+__all__ = ["RowSource", "RowTracker"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RowSource:
+    """One sparse-tracked leaf: ``units`` logical units of ``unit_size``
+    contiguous elements living at rows ``[row_start, row_start + rows)`` of
+    bucket ``bucket``.  ``starts``/``ends1`` are the static per-row unit
+    interval ``[starts[r], ends1[r])`` each plane row overlaps."""
+
+    name: str  # key into step_masks' units dict ("embed", "moe/g0", ...)
+    kind: str  # "embed" | "moe" (informational)
+    bucket: str
+    row_start: int
+    rows: int
+    units: int
+    unit_size: int
+    starts: np.ndarray  # (rows,) int32
+    ends1: np.ndarray  # (rows,) int32, exclusive
+
+
+def _unit_intervals(rows: int, units: int, unit_size: int):
+    """Static unit-interval bounds per plane row: row ``r`` covers elements
+    ``[r*LANES, (r+1)*LANES)``, unit ``u`` covers ``[u*s, (u+1)*s)``."""
+    r = np.arange(rows, dtype=np.int64)
+    starts = np.minimum((r * LANES) // unit_size, units - 1)
+    ends1 = np.minimum(((r + 1) * LANES - 1) // unit_size + 1, units)
+    return starts.astype(np.int32), ends1.astype(np.int32)
+
+
+class RowTracker:
+    """Static plan mapping touch events to ``{bucket: (rows,) bool}`` masks
+    over a :class:`PlaneLayout` (see module docstring)."""
+
+    def __init__(self, layout: PlaneLayout, sources: tuple[RowSource, ...]):
+        self.layout = layout
+        self.sources = sources
+        sparse_rows: dict[str, set[int]] = {k: set() for k in layout.segments}
+        for src in sources:
+            sparse_rows[src.bucket].update(
+                range(src.row_start, src.row_start + src.rows)
+            )
+        # base mask: every row of every dense-tracked leaf; pad rows clean
+        self._base: dict[str, np.ndarray] = {}
+        for key, segs in layout.segments.items():
+            base = np.zeros(layout.rows[key], bool)
+            for seg in segs:
+                sl = slice(seg.row_start, seg.row_start + seg.rows)
+                if not sparse_rows[key].issuperset(range(sl.start, sl.stop)):
+                    base[sl] = True
+            self._base[key] = base
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def for_model(cls, layout: PlaneLayout, template: Tree,
+                  *, tied_embeddings: bool) -> "RowTracker":
+        """Scan a transformer parameter template (the tree ``layout`` was
+        built from) for sparse-trackable leaves:
+
+        * ``embed/table`` (untied only) -> source ``"embed"``, one unit per
+          vocab row; feed token ids (any int shape) or a (vocab,) hot mask.
+        * ``groups/<g>/moe/{w_in,w_out,w_gate}`` expert slabs ``(Lg, E,
+          ...)`` -> source ``"moe/<g>"``, one unit per (layer, expert);
+          feed the router's ``(Lg, E)`` hit mask.  Router weights stay
+          dense (every token's gradient touches them).
+        """
+        leaves = jax.tree_util.tree_flatten_with_path(template)[0]
+        by_index: dict[int, tuple[str, str, int, int]] = {}
+        for i, (path, leaf) in enumerate(leaves):
+            keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+            shape = tuple(leaf.shape)
+            if keys[-2:] == ["embed", "table"] and not tied_embeddings:
+                by_index[i] = ("embed", "embed", shape[0],
+                               int(np.prod(shape[1:])))
+            elif (
+                len(keys) >= 4
+                and keys[0] == "groups"
+                and keys[2] == "moe"
+                and keys[3] in ("w_in", "w_out", "w_gate")
+                and len(shape) >= 3
+            ):
+                by_index[i] = (
+                    "moe", f"moe/{keys[1]}", shape[0] * shape[1],
+                    int(np.prod(shape[2:])),
+                )
+        sources = []
+        for key, segs in layout.segments.items():
+            for seg in segs:
+                if seg.index not in by_index:
+                    continue
+                kind, name, units, unit_size = by_index[seg.index]
+                starts, ends1 = _unit_intervals(seg.rows, units, unit_size)
+                sources.append(RowSource(
+                    name=name, kind=kind, bucket=key,
+                    row_start=seg.row_start, rows=seg.rows,
+                    units=units, unit_size=unit_size,
+                    starts=starts, ends1=ends1,
+                ))
+        return cls(layout, tuple(sources))
+
+    # -- per-step masks ------------------------------------------------------
+
+    @property
+    def source_names(self) -> tuple[str, ...]:
+        return tuple(dict.fromkeys(s.name for s in self.sources))
+
+    def all_dirty(self) -> dict:
+        """Every non-pad row dirty (the dense-equivalence harness input)."""
+        out = {}
+        for key, segs in self.layout.segments.items():
+            m = np.zeros(self.layout.rows[key], bool)
+            for seg in segs:
+                m[seg.row_start: seg.row_start + seg.rows] = True
+            out[key] = jnp.asarray(m)
+        return out
+
+    def _hot(self, src: RowSource, val) -> jax.Array:
+        """Touched-unit input -> (units,) bool: int arrays are indices
+        (scattered, out-of-range dropped), everything else a hit mask
+        reshaped to (units,)."""
+        val = jnp.asarray(val)
+        if jnp.issubdtype(val.dtype, jnp.integer):
+            return (
+                jnp.zeros((src.units,), bool)
+                .at[val.reshape(-1)]
+                .set(True, mode="drop")
+            )
+        hot = val.reshape(-1) if val.dtype == jnp.bool_ else val.reshape(-1) != 0
+        if hot.shape[0] != src.units:
+            raise ValueError(
+                f"source {src.name!r}: expected {src.units} units, "
+                f"got shape {tuple(val.shape)}"
+            )
+        return hot
+
+    def step_masks(self, units: dict[str, Any]) -> dict:
+        """Touch events -> ``{bucket: (rows,) bool}`` payload row masks.
+
+        ``units`` maps source names to touched-unit inputs (see
+        :meth:`for_model`).  A registered source *missing* from ``units``
+        is marked fully dirty — conservative, never lossy.  Feed the result
+        to ``channel.mark``.
+        """
+        masks = {k: jnp.asarray(v) for k, v in self._base.items()}
+        for src in self.sources:
+            if src.name in units:
+                hot = self._hot(src, units[src.name])
+                c = jnp.concatenate(
+                    [jnp.zeros((1,), jnp.int32), jnp.cumsum(hot.astype(jnp.int32))]
+                )
+                rows = c[jnp.asarray(src.ends1)] - c[jnp.asarray(src.starts)] > 0
+            else:
+                rows = jnp.ones((src.rows,), bool)
+            key = src.bucket
+            masks[key] = masks[key].at[
+                src.row_start: src.row_start + src.rows
+            ].max(rows)
+        return masks
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> dict:
+        """Static accounting for benchmarks: per-bucket total rows, dense
+        base rows, and per-source row spans."""
+        return {
+            "buckets": {
+                key: {
+                    "rows": int(self.layout.rows[key]),
+                    "base_dirty_rows": int(self._base[key].sum()),
+                }
+                for key in self.layout.segments
+            },
+            "sources": [
+                {
+                    "name": s.name, "kind": s.kind, "bucket": s.bucket,
+                    "rows": int(s.rows), "units": int(s.units),
+                    "unit_size": int(s.unit_size),
+                }
+                for s in self.sources
+            ],
+        }

@@ -17,6 +17,13 @@ Storage is .npz per pytree bucket + a JSON manifest; keys are the pytree
 paths, so restore needs no pickled treedefs.  For multi-host pods each
 process would write its address-space shard under ``shard_<proc>/`` — the
 single-process container writes one shard.
+
+Manifest format v3 records every bucket's dtype by name (``"dtypes"``):
+dtypes numpy cannot natively round-trip through npz (bfloat16 saves as an
+opaque 2-byte void) are restored by *declared* dtype, not by sniffing the
+void width.  V2 checkpoints (no ``"dtypes"`` entry) still restore through
+the legacy sniff — bf16 was the only 2-byte void V2 ever stored — pinned
+by a migration test in ``tests/test_checkpoint.py``.
 """
 
 from __future__ import annotations
@@ -51,13 +58,33 @@ def _flatten(tree: Tree) -> dict[str, np.ndarray]:
     return flat
 
 
-def _unflatten(flat: dict[str, np.ndarray]) -> Tree:
+def _resolve_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _unflatten(flat: dict[str, np.ndarray], dtypes: dict | None = None) -> Tree:
+    """Rebuild the pytree; ``dtypes`` is the v3 manifest's per-bucket dtype
+    map (restore-by-declaration).  ``None`` = v2: fall back to sniffing the
+    2-byte void that numpy round-trips bfloat16 into."""
     tree: Tree = {}
     for key, val in flat.items():
-        if val.dtype == np.dtype("V2"):
-            # numpy round-trips bfloat16 through npz as an opaque 2-byte
-            # void; reinterpret (bf16 is the only 2-byte void we store —
-            # flat-plane param buffers keep their bucket dtype)
+        if dtypes is not None:
+            want = _resolve_dtype(dtypes[key])
+            if val.dtype != want:
+                # npz stored an opaque void for a non-native dtype:
+                # reinterpret as the declared bucket dtype
+                assert val.dtype.kind == "V" and val.dtype.itemsize == want.itemsize, (
+                    key, val.dtype, want,
+                )
+                val = val.view(want)
+        elif val.dtype == np.dtype("V2"):
+            # legacy v2 manifest (no "dtypes"): bf16 is the only 2-byte
+            # void v2 ever stored — flat-plane buffers keep bucket dtype
             import ml_dtypes
 
             val = val.view(ml_dtypes.bfloat16)
@@ -77,8 +104,10 @@ def save_checkpoint(directory: str, state: Tree, *, metadata: dict | None = None
         flat = _flatten(state)
         np.savez(os.path.join(tmp, "state.npz"), **flat)
         manifest = {
+            "format": 3,
             "step": step,
             "keys": sorted(flat),
+            "dtypes": {k: v.dtype.name for k, v in flat.items()},
             "n_nodes": int(state["params"][next(iter(state["params"]))]["table"].shape[0])
             if "embed" in state.get("params", {})
             else None,
@@ -115,7 +144,7 @@ def restore_checkpoint(directory: str, step: int | None = None) -> tuple[Tree, d
         manifest = json.load(f)
     with np.load(os.path.join(d, "state.npz")) as z:
         flat = {k: z[k] for k in z.files}
-    state = _unflatten(flat)
+    state = _unflatten(flat, manifest.get("dtypes"))
     # pre-channel checkpoints stored compression error-feedback under "comp";
     # the GossipChannel state bucket nests it as channel["comp"]
     if "comp" in state:

@@ -69,6 +69,15 @@ class TrainConfig:
     flat_planes: bool = False
     gossip_serialize: bool = True  # one recv buffer live at a time (§Perf A-3)
     track_consensus: bool = False
+    # row-sparse gossip (repro.sparse): ship only the touched rows of each
+    # plane bucket per round.  Requires flat_planes (the RowTracker
+    # addresses the payload through the plane row->segment map) and
+    # gossip_impl="ppermute".  "exact" is provably equivalent to dense
+    # gossip; "delta" heals rows after delivery (lossy, delay-0 only,
+    # benchmarked in BENCH_gossip.json).
+    sparse_gossip: bool = False
+    sparse_mode: str = "exact"  # exact | delta
+    sparse_crossover: float = 0.9  # dirty fraction at which a bucket goes dense
 
     def opt_config(self) -> OptimizerConfig:
         return OptimizerConfig(
@@ -96,6 +105,36 @@ def build_gossip_channel(
         )
     if gossips_per_step is None:
         gossips_per_step = make_optimizer(tcfg.opt_config()).gossips_per_step
+    if tcfg.sparse_gossip:
+        if tcfg.gossip_impl != "ppermute":
+            raise ValueError(
+                "sparse_gossip requires gossip_impl='ppermute' (the sparse "
+                "channels ride the edge-class wire path)"
+            )
+        if tcfg.gossip_delay > 0 and tcfg.weight_decay != 0.0:
+            # delayed exact sparsity skips rows that stay in cross-node
+            # consensus; per-step weight decay drifts untouched rows, so the
+            # delayed mix would combine different versions of a row the
+            # channel never re-ships
+            raise ValueError(
+                "sparse_gossip with gossip_delay > 0 requires "
+                "weight_decay == 0 (untouched rows must be stationary for "
+                "delayed exact row-skipping to be lossless)"
+            )
+        from ..sparse import build_sparse_channel
+
+        return build_sparse_channel(
+            "ppermute",
+            topology,
+            node_axes,
+            mode=tcfg.sparse_mode,
+            crossover=tcfg.sparse_crossover,
+            compression=tcfg.compression,
+            delay=tcfg.gossip_delay,
+            serialize=tcfg.gossip_serialize,
+            calls_per_step=gossips_per_step,
+            telemetry=True,
+        )
     return build_channel(
         tcfg.gossip_impl,
         topology,
@@ -172,13 +211,32 @@ def build_train_step(
     # initializer and the resume path (model_plane_layout rejects tp > 1)
     layout = model_plane_layout(cfg, tp) if tcfg.flat_planes else None
 
+    tracker = None
+    if tcfg.sparse_gossip:
+        if not tcfg.flat_planes:
+            raise ValueError(
+                "sparse_gossip requires flat_planes=True: the RowTracker "
+                "addresses the gossip payload through the plane "
+                "row->segment map"
+            )
+        from ..sparse import RowTracker
+
+        abs_params = jax.eval_shape(
+            lambda k: T.init_params(k, cfg, tp), jax.random.key(0)
+        )
+        tracker = RowTracker.for_model(
+            layout, abs_params, tied_embeddings=cfg.tie_embeddings
+        )
+
     gossip = build_gossip_channel(
         tcfg, topology, node_axes, gossips_per_step=opt.gossips_per_step
     )
     mean = make_psum_mean(node_axes, n_nodes)
 
     def loss_fn(params, batch):
-        return T.forward_loss(params, batch, cfg, tp_ctx, rt)
+        return T.forward_loss(
+            params, batch, cfg, tp_ctx, rt, collect_rows=tcfg.sparse_gossip
+        )
 
     # Legacy shard_map AD (pre-vma jax) differs from the modern tracker in
     # two ways that matter inside the fully-manual region:
@@ -244,7 +302,10 @@ def build_train_step(
         g0 = jax.tree.map(lambda x: (x * 0).astype(jnp.float32), params)
         l0 = (batch["tokens"].ravel()[:1].sum() * 0).astype(jnp.float32)
         (g, loss), metrics = jax.lax.scan(micro, (g0, l0), mbs)
-        metrics = jax.tree.map(lambda m: jnp.mean(m), metrics)
+        # mean over the microbatch axis only: scalars stay scalars and the
+        # (accum, Lg, E) row-info hit stacks reduce to (Lg, E) microbatch
+        # unions (any nonzero mean -> hit)
+        metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
         return g, loss, metrics
 
     def step_fn(state: Tree, batch: Tree):
@@ -256,6 +317,13 @@ def build_train_step(
 
         grads, loss, metrics = grads_of(params, batch)
         grads = reduce_replicated_grads(grads)
+
+        # row-info hit stacks are mask material, not scalar metrics: keep
+        # them out of the pmean loop below and feed them to the tracker
+        row_info = metrics.pop("_row_info", None)
+        if tracker is not None:
+            units = {"embed": batch["tokens"], **(row_info or {})}
+            comp_state = gossip.mark(comp_state, tracker.step_masks(units))
 
         if tcfg.flat_planes:
             # flat fast path: pack once, run the whole tail + gossip on

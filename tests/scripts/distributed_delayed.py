@@ -39,7 +39,7 @@ from repro.core import (
     make_psum_mean,
 )
 from repro.core.compression import get_compressor
-from repro.sim import simulate
+from repro.sim import SimSpec, simulate
 
 N, D, M = 8, 6, 10
 LR = 1e-2
@@ -167,8 +167,11 @@ for algorithm in ("dsgd", "dmsgd", "decentlam-sa"):
         opt, channel, channel.init(jnp.zeros((D,), jnp.float32)), STEPS_A
     )
     res = simulate(
-        opt, TOPO, N, jnp.zeros((N, D), jnp.float32), grad_fn,
-        lr=LR, n_steps=STEPS_A, scenario="stale_gossip_k2",
+        opt,
+        SimSpec(topology=TOPO, n=N, lr=LR, n_steps=STEPS_A,
+                scenario="stale_gossip_k2"),
+        jnp.zeros((N, D), jnp.float32),
+        grad_fn,
     )
     ref = np.asarray(res.params)
     err = float(np.max(np.abs(got - ref)))

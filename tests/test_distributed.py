@@ -47,6 +47,28 @@ def test_flat_planes_shard_map_parity_and_collective_count(mode):
     assert "OK bit-exact" in out
 
 
+def test_sparse_gossip_train_step_end_to_end():
+    """Row-sparse gossip on the production train step (granite-moe SMOKE,
+    flat planes): forced dense-fallback is bit-exact with the dense channel
+    end-to-end, and tracked sparsity ships measurably fewer bytes."""
+    out = _run("distributed_equivalence.py", "sparse")
+    assert "sparse: OK bit-exact under forced fallback" in out
+
+
+def test_sparse_mesh_channels_match_dense_parents():
+    """Channel-level mesh pins: all 11 algorithms all-dirty == dense parents
+    (exact + delta + int8 + delayed), partial masks match the stacked sparse
+    reference with clean rows bit-frozen, collective accounting."""
+    out = _run("sparse_distributed.py")
+    from repro.core.optimizers import ALGORITHMS
+
+    assert out.count("A ") == len(ALGORITHMS) + 3  # + drift line, int8, delayed
+    assert "B exact: OK" in out and "B delta: OK" in out
+    assert "B exact-delay2: OK" in out
+    assert "C collectives: OK" in out
+    assert "sparse-distributed: OK" in out
+
+
 def test_delayed_ppermute_channel():
     """The redesign's headline capability: a stale_gossip_k2 scenario through
     the shard_map DelayedPpermuteChannel matches the simulator's SSP

@@ -636,26 +636,18 @@ def test_vectorized_engine_bit_exact_on_time_varying_topology(problem8):
 
 
 # ---------------------------------------------------------------------------
-# SimSpec front door + deprecation shim
+# SimSpec front door
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_kwargs_shim_warns_and_matches(problem8):
-    """The pre-SimSpec signature still works for one release: it must emit
-    a DeprecationWarning and produce the identical result."""
+def test_legacy_kwargs_signature_removed(problem8):
+    """The pre-SimSpec kwargs-pile signature completed its one-release
+    deprecation window: a non-SimSpec second argument is a clean TypeError
+    naming the supported call shape, not a silent misparse."""
     opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
     x0 = jnp.zeros((8, 6), jnp.float32)
-    spec = SimSpec(topology="ring", n=8, lr=1e-2, n_steps=12,
-                   scenario="straggler_1slow", seed=4)
-    r_new = simulate(opt, spec, x0, _grad(problem8))
-    with pytest.warns(DeprecationWarning, match="SimSpec"):
-        r_old = simulate(opt, "ring", 8, x0, _grad(problem8),
-                         lr=1e-2, n_steps=12, scenario="straggler_1slow", seed=4)
-    assert _full_result_equal(r_new, r_old)
-    # unknown kwargs are rejected, not silently dropped
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(TypeError, match="unknown simulate"):
-            simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, typo=1)
+    with pytest.raises(TypeError, match="SimSpec"):
+        simulate(opt, "ring", 8, x0, _grad(problem8), lr=1e-2, n_steps=12)
 
 
 def test_simspec_validation_and_call_shape(problem8):
@@ -663,6 +655,10 @@ def test_simspec_validation_and_call_shape(problem8):
     x0 = jnp.zeros((8, 6), jnp.float32)
     with pytest.raises(ValueError, match="unknown engine"):
         SimSpec(engine="warp")
+    with pytest.raises(ValueError, match="unknown sparse mode"):
+        SimSpec(sparse="topk")
+    with pytest.raises(ValueError, match="sparse_crossover"):
+        SimSpec(sparse="exact", sparse_crossover=0.0)
     spec = SimSpec(topology="ring", n=8, n_steps=5)
     # SimSpec calls take exactly (opt, spec, params0, grad_fn) — no kwargs
     with pytest.raises(TypeError, match="exactly four"):

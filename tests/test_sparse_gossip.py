@@ -1,0 +1,530 @@
+"""Row-sparse gossip: channels, tracker, and sim-engine integration.
+
+The load-bearing claims pinned here:
+
+* **all-dirty == dense, bit-exact** — for every algorithm, in both sparse
+  modes: when every row is marked the sparse channel's trajectory is
+  bit-identical to the dense channel's (exact mode selects the dense bits
+  via ``where``; delta mode's hybrid falls back to the dense einsum).
+* **clean rows are identity** — exact mode never touches a row no node
+  marked; with genuinely sparse gradients on a dyadic-weight ring the
+  whole trajectory stays bit-equal to dense gossip (mixing identical rows
+  with dyadic weights is exact in binary floating point).
+* **delta heals after delivery** — a marked row stays dirty per phase
+  until that phase ships it, then is clean for those peers.
+* **crossover** forces the dense fallback and dense-equivalent accounting.
+* **byte accounting** equals the analytic row-count model.
+* :class:`RowTracker` maps token ids / router hits to exactly the plane
+  rows that hold them; unfed sources degrade to fully-dirty (conservative).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DelayedStackedChannel,
+    OptimizerConfig,
+    StackedChannel,
+    build_topology,
+    make_linear_regression,
+    make_optimizer,
+    make_stacked_mean,
+    wire_bytes,
+)
+from repro.core.optimizers import ALGORITHMS
+from repro.sparse import (
+    RowTracker,
+    SparseGossipChannel,
+    SparseStackedChannel,
+    build_sparse_channel,
+    grad_row_masks,
+)
+
+N = 4
+
+
+def _tree_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def _run(channel, *, algo="decentlam", n_steps=5, mask_fn=None, seed=3,
+         momentum=0.8, weight_decay=0.0, jit=True):
+    """Stacked trajectory through ``opt.step`` with per-step mask marking.
+
+    ``channel`` may be a factory ``opt -> channel`` (to pick up
+    ``opt.gossips_per_step`` for multi-gossip algorithms).  ``mask_fn(step)
+    -> (dim,) bool`` zeroes the gradient off-mask and marks exactly the
+    touched rows; ``None`` runs dense grads + all-dirty marks.
+    """
+    prob = make_linear_regression(n=N, m=6, d=5, noise=0.01, seed=seed)
+    opt = make_optimizer(OptimizerConfig(
+        algorithm=algo, momentum=momentum, weight_decay=weight_decay,
+    ))
+    if callable(channel) and not hasattr(channel, "apply"):
+        channel = channel(opt)
+    mean = make_stacked_mean(N)
+    sparse = isinstance(channel, SparseStackedChannel)
+
+    def one(params, opt_state, chstate, k):
+        grads = prob.grad(params)
+        if mask_fn is not None:
+            grads = jnp.where(mask_fn(k)[None, :], grads, 0.0)
+        if sparse:
+            chstate = channel.mark(chstate, grad_row_masks(grads))
+        return opt.step(
+            params, grads, opt_state, lr=jnp.float32(1e-2), step_idx=k,
+            gossip=channel, mean=mean, comp_state=chstate,
+        )
+
+    if jit:
+        one = jax.jit(one)
+    params = jnp.asarray(
+        np.random.default_rng(seed).standard_normal((N, prob.dim)), jnp.float32
+    )
+    # replicas start in consensus (the broadcast invariant exact mode needs)
+    params = jnp.broadcast_to(params[:1], params.shape)
+    opt_state = opt.init(params)
+    chstate = channel.init(params)
+    for k in range(n_steps):
+        params, opt_state, chstate = one(params, opt_state, chstate, jnp.int32(k))
+    return params, chstate
+
+
+TOPO = build_topology("ring", N)
+
+
+# ---------------------------------------------------------------------------
+# all-dirty == dense: every algorithm, both modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+@pytest.mark.parametrize("mode", ["exact", "delta"])
+def test_all_dirty_bitexact_with_dense(algo, mode):
+    dense, _ = _run(StackedChannel(TOPO), algo=algo)
+    sparse, chstate = _run(
+        lambda opt: SparseStackedChannel(
+            TOPO, mode=mode, calls_per_step=opt.gossips_per_step
+        ),
+        algo=algo,
+    )
+    assert _tree_equal(dense, sparse), (algo, mode)
+    vol = chstate["rows"]["vol"]
+    # dense grads mark every row: accounting must report dense-equivalent
+    np.testing.assert_allclose(
+        np.asarray(vol["sparse"]), np.asarray(vol["dense"]), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("mode", ["exact", "delta"])
+def test_all_dirty_bitexact_with_compression(mode):
+    dense, _ = _run(StackedChannel(TOPO, compression="int8"))
+    sparse, _ = _run(SparseStackedChannel(TOPO, mode=mode, compression="int8"))
+    assert _tree_equal(dense, sparse)
+
+
+def test_all_dirty_bitexact_with_stateful_compression_exact():
+    # int8-row EF residuals ride the row framing (exact mode only)
+    dense, _ = _run(StackedChannel(TOPO, compression="int8-row-ef"))
+    sparse, _ = _run(SparseStackedChannel(TOPO, compression="int8-row-ef"))
+    assert _tree_equal(dense, sparse)
+
+
+def test_delayed_all_dirty_bitexact_with_delayed_dense():
+    dense, _ = _run(DelayedStackedChannel(TOPO, 2), n_steps=7)
+    sparse, _ = _run(SparseStackedChannel(TOPO, 2), n_steps=7)
+    assert _tree_equal(dense, sparse)
+
+
+# ---------------------------------------------------------------------------
+# exact mode: clean rows are identity / dyadic-ring trajectory equality
+# ---------------------------------------------------------------------------
+
+
+def _row_mask(k):
+    # rows {0, 3} touched every step; row 4 from step 2 on; rest never
+    base = jnp.asarray([True, False, False, True, False])
+    return base | (jnp.arange(5) == 4) & (k >= 2)
+
+
+def test_exact_partial_masks_trajectory_equals_dense():
+    """With grads vanishing off-mask (wd=0), exact sparse gossip skips the
+    clean rows entirely — they keep their initial bits — while the dense
+    channel keeps re-mixing them (a no-op up to rounding: the einsum's
+    ``0.5x + 0.25x + 0.25x`` accumulation can round mid-sum even on
+    bit-identical rows).  So the claim is: sparse clean rows are
+    bit-frozen, and the whole trajectory matches dense to accumulation
+    tolerance — not bitwise, which even dense-vs-dense with a reordered
+    sum would fail."""
+    x0 = None
+    for delay in (0, 2):
+        dense_ch = DelayedStackedChannel(TOPO, delay)
+        dense, _ = _run(dense_ch, n_steps=6, mask_fn=_row_mask)
+        sp_ch = SparseStackedChannel(TOPO, delay)
+        sparse, chstate = _run(sp_ch, n_steps=6, mask_fn=_row_mask)
+        np.testing.assert_allclose(
+            np.asarray(dense), np.asarray(sparse), rtol=2e-6, atol=2e-6,
+            err_msg=f"delay={delay}",
+        )
+        if x0 is None:  # reconstruct the shared deterministic init
+            x0 = np.broadcast_to(
+                np.random.default_rng(3).standard_normal((N, 5))[:1], (N, 5)
+            ).astype(np.float32)
+        # rows 1, 2 are never touched: bit-frozen at their initial value
+        np.testing.assert_array_equal(np.asarray(sparse)[:, 1:3], x0[:, 1:3])
+        d = np.asarray(jax.tree.leaves(chstate["rows"]["dirty"])[0])
+        np.testing.assert_array_equal(
+            d[0], [True, False, False, True, True]
+        )
+        vol = chstate["rows"]["vol"]
+        assert float(np.mean(vol["sparse"])) < float(np.mean(vol["dense"]))
+
+
+def test_exact_mask_is_monotone_and_global():
+    ch = SparseStackedChannel(TOPO)
+    x = jnp.zeros((N, 5), jnp.float32)
+    st = ch.init(x)
+    # node 2 alone marks row 1; after one round every node's mask has it
+    m = jnp.zeros((N, 5), bool).at[2, 1].set(True)
+    st = ch.mark(st, m)
+    st, _ = ch.apply(st, x, jnp.int32(0))
+    np.testing.assert_array_equal(
+        np.asarray(st["rows"]["dirty"]), np.broadcast_to(
+            np.asarray([False, True, False, False, False]), (N, 5)
+        ),
+    )
+    # no new marks: the mask never shrinks
+    st, _ = ch.apply(st, x, jnp.int32(1))
+    assert np.asarray(st["rows"]["dirty"])[0, 1]
+
+
+# ---------------------------------------------------------------------------
+# delta mode: per-phase heal-after-delivery
+# ---------------------------------------------------------------------------
+
+
+def test_delta_heals_per_phase():
+    topo = build_topology("one-peer-exp", N)
+    assert topo.period > 1
+    ch = SparseStackedChannel(topo, mode="delta")
+    x = jnp.zeros((N, 3), jnp.float32)
+    st = ch.init(x)
+    st = ch.mark(st, jnp.zeros((N, 3), bool).at[1, 2].set(True))
+    st, _ = ch.apply(st, x, jnp.int32(0))
+    d = np.asarray(st["rows"]["dirty"])  # (n, period, rows)
+    assert not d[1, 0, 2], "phase 0 shipped -> healed for phase 0"
+    assert d[1, 1:, 2].all(), "later phases still owed the row"
+    st, _ = ch.apply(st, x, jnp.int32(1))
+    assert not np.asarray(st["rows"]["dirty"])[1].any(), "all phases served"
+
+
+def test_delta_rejects_delay_and_stateful_compression():
+    with pytest.raises(ValueError, match="delay=0"):
+        SparseStackedChannel(TOPO, 1, mode="delta")
+    with pytest.raises(ValueError, match="stateless"):
+        SparseStackedChannel(TOPO, mode="delta", compression="int8-row-ef")
+    with pytest.raises(ValueError, match="top-k"):
+        SparseStackedChannel(TOPO, compression="topk:0.1")
+    with pytest.raises(ValueError, match="crossover"):
+        SparseStackedChannel(TOPO, crossover=0.0)
+    with pytest.raises(ValueError, match="mode"):
+        SparseStackedChannel(TOPO, mode="topk")
+
+
+# ---------------------------------------------------------------------------
+# crossover: dense fallback
+# ---------------------------------------------------------------------------
+
+
+def test_crossover_forces_dense_fallback():
+    """A tiny crossover makes every round ship dense: trajectory == dense
+    channel bitwise even with sparse marks, and the accounting says dense."""
+    dense, _ = _run(StackedChannel(TOPO), n_steps=4, mask_fn=_row_mask)
+    sparse, chstate = _run(
+        SparseStackedChannel(TOPO, crossover=1e-9), n_steps=4, mask_fn=_row_mask
+    )
+    assert _tree_equal(dense, sparse)
+    vol = chstate["rows"]["vol"]
+    np.testing.assert_allclose(
+        np.asarray(vol["sparse"]), np.asarray(vol["dense"]), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+
+
+def test_bytes_match_analytic_row_model():
+    rows, lanes = 8, 16
+    ch = SparseGossipChannel(TOPO, compression="int8")
+    x = jnp.zeros((N, rows, lanes), jnp.float32)
+    st = ch.init(x)
+    hot = jnp.zeros((rows,), bool).at[jnp.asarray([1, 4, 6])].set(True)
+    st = ch.mark(st, hot[None].repeat(N, 0))
+    st, _ = ch.apply(st, x, jnp.int32(0))
+    # ring phase 0: 2 sends; 3 rows x (int8 wire of 64B + 4B index)
+    row_wire = wire_bytes(4.0 * lanes, "int8") + 4.0
+    expected = 2 * 3 * row_wire
+    np.testing.assert_allclose(
+        np.asarray(st["rows"]["vol"]["sparse"]), expected, rtol=1e-6
+    )
+    got = ch.bytes_per_step(x[0].nbytes, st)
+    assert got["egress_bytes"] == pytest.approx(expected)
+    assert got["dense_egress_bytes"] == pytest.approx(
+        2 * wire_bytes(4.0 * rows * lanes, "int8")
+    )
+    # analytic fallback (no state): dense upper bound
+    assert ch.bytes_per_step(x[0].nbytes)["egress_bytes"] >= got["egress_bytes"]
+
+
+def test_shipped_row_cost_capped_at_dense():
+    # 1-lane rows: per-row index overhead would exceed dense; cap applies
+    ch = SparseGossipChannel(TOPO)
+    x = jnp.zeros((N, 8, 1), jnp.float32)
+    st = ch.mark(ch.init(x), jnp.ones((N, 8), bool))
+    st, _ = ch.apply(st, x, jnp.int32(0))
+    vol = st["rows"]["vol"]
+    np.testing.assert_allclose(np.asarray(vol["sparse"]), np.asarray(vol["dense"]))
+
+
+# ---------------------------------------------------------------------------
+# state plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_state_specs_structure_matches_init():
+    from jax.sharding import PartitionSpec as P
+
+    tmpl = {"a": jnp.zeros((N, 6, 2)), "b": jnp.zeros((N,))}
+    per_node = jax.tree.map(lambda x: x[0], tmpl)
+    for mode in ("exact", "delta"):
+        ch = build_sparse_channel(
+            "ppermute", TOPO, ("data",), mode=mode, telemetry=True
+        )
+        st = ch.init(per_node)
+        specs = ch.state_specs(jax.tree.map(lambda x: P(), per_node))
+        is_p = lambda s: isinstance(s, P)  # noqa: E731
+        assert jax.tree.structure(st) == jax.tree.structure(
+            specs, is_leaf=is_p
+        ), mode
+
+
+def test_grad_row_masks_shapes_and_support():
+    g = {
+        "mat": jnp.zeros((N, 4, 3)).at[2, 1, 0].set(5.0),
+        "vec": jnp.zeros((N,)).at[1].set(-1.0),
+    }
+    m = grad_row_masks(g)
+    assert m["mat"].shape == (N, 4) and m["vec"].shape == (N, 1)
+    assert np.asarray(m["mat"]).sum() == 1 and np.asarray(m["mat"])[2, 1]
+    assert np.asarray(m["vec"]).sum() == 1 and np.asarray(m["vec"])[1, 0]
+
+
+def test_mark_broadcasts_and_accepts_counts():
+    ch = SparseGossipChannel(TOPO)
+    x = jnp.zeros((N, 5), jnp.float32)
+    st = ch.init(x)
+    st = ch.mark(st, jnp.asarray([0, 2, 0, 0, 1], jnp.int32))  # counts, (R,)
+    p = np.asarray(st["rows"]["pending"])
+    assert p.shape == (N, 5)
+    np.testing.assert_array_equal(p, np.broadcast_to(
+        [False, True, False, False, True], (N, 5)
+    ))
+
+
+def test_build_sparse_channel_dispatch():
+    assert isinstance(
+        build_sparse_channel("stacked", TOPO), SparseStackedChannel
+    )
+    from repro.sparse import SparseDelayedPpermuteChannel, SparsePpermuteChannel
+
+    assert isinstance(
+        build_sparse_channel("ppermute", TOPO, ("d",)), SparsePpermuteChannel
+    )
+    assert isinstance(
+        build_sparse_channel("ppermute", TOPO, ("d",), delay=2),
+        SparseDelayedPpermuteChannel,
+    )
+    with pytest.raises(ValueError, match="exact"):
+        build_sparse_channel("ppermute", TOPO, ("d",), delay=2, mode="delta")
+    with pytest.raises(ValueError, match="node_axes"):
+        build_sparse_channel("ppermute", TOPO)
+    with pytest.raises(ValueError, match="unknown"):
+        build_sparse_channel("allgather", TOPO, ("d",))
+
+
+# ---------------------------------------------------------------------------
+# RowTracker on the granite-moe SMOKE model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def moe_tracker():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.train.train_state import model_plane_layout
+
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    layout = model_plane_layout(cfg, 1)
+    tmpl = jax.eval_shape(lambda k: T.init_params(k, cfg, 1), jax.random.key(0))
+    return cfg, layout, RowTracker.for_model(
+        layout, tmpl, tied_embeddings=cfg.tie_embeddings
+    )
+
+
+def test_tracker_discovers_embed_and_moe_sources(moe_tracker):
+    cfg, layout, tracker = moe_tracker
+    names = set(tracker.source_names)
+    assert "embed" in names
+    assert any(n.startswith("moe/") for n in names)
+    summ = tracker.summary()
+    emb = [s for s in summ["sources"] if s["name"] == "embed"]
+    assert emb and emb[0]["units"] == cfg.vocab_size
+    moe = [s for s in summ["sources"] if s["kind"] == "moe"]
+    # each slab source is (layers-in-group x experts) units
+    assert all(s["units"] % cfg.n_experts == 0 for s in moe)
+
+
+def test_tracker_token_ids_hit_exactly_their_rows(moe_tracker):
+    from repro.core.planes import LANES
+
+    cfg, layout, tracker = moe_tracker
+    src = next(s for s in tracker.sources if s.name == "embed")
+    tokens = jnp.asarray([[7, 7, 130]], jnp.int32)
+    masks = tracker.step_masks(
+        {"embed": tokens, **{
+            n: np.zeros(next(s.units for s in tracker.sources if s.name == n))
+            for n in tracker.source_names if n.startswith("moe/")
+        }}
+    )
+    got = np.asarray(masks[src.bucket])[
+        src.row_start: src.row_start + src.rows
+    ]
+    # reference: element-interval overlap computed densely
+    want = np.zeros(src.rows, bool)
+    for u in (7, 130):
+        lo, hi = u * src.unit_size, (u + 1) * src.unit_size
+        want[lo // LANES: (hi - 1) // LANES + 1] = True
+    np.testing.assert_array_equal(got, want)
+    # an unfed moe source would be fully dirty; fed-empty stays clean
+    moe_src = next(s for s in tracker.sources if s.kind == "moe")
+    moe_rows = np.asarray(masks[moe_src.bucket])[
+        moe_src.row_start: moe_src.row_start + moe_src.rows
+    ]
+    assert not moe_rows.any()
+
+
+def test_tracker_missing_source_is_fully_dirty(moe_tracker):
+    cfg, layout, tracker = moe_tracker
+    masks = tracker.step_masks({})  # nothing fed -> conservative
+    for key in layout.segments:
+        covered = np.zeros(layout.rows[key], bool)
+        for seg in layout.segments[key]:
+            covered[seg.row_start: seg.row_start + seg.rows] = True
+        got = np.asarray(masks[key])
+        np.testing.assert_array_equal(got, covered, err_msg=key)
+    assert _tree_equal(masks, tracker.all_dirty())
+
+
+def test_tracker_pad_rows_stay_clean(moe_tracker):
+    cfg, layout, tracker = moe_tracker
+    masks = tracker.step_masks({})
+    for key in layout.segments:
+        got = np.asarray(masks[key])
+        pad = np.ones(layout.rows[key], bool)
+        for seg in layout.segments[key]:
+            pad[seg.row_start: seg.row_start + seg.rows] = False
+        assert not got[pad].any(), key
+
+
+def test_tracker_dense_leaves_always_base_dirty(moe_tracker):
+    cfg, layout, tracker = moe_tracker
+    # feed everything empty: only the dense base + nothing sparse
+    units = {"embed": jnp.zeros((1,), jnp.int32).at[0].set(-1)}  # oob -> drop
+    units.update({
+        n: np.zeros(next(s.units for s in tracker.sources if s.name == n))
+        for n in tracker.source_names if n.startswith("moe/")
+    })
+    masks = tracker.step_masks(units)
+    summ = tracker.summary()
+    for key, info in summ["buckets"].items():
+        base = int(np.asarray(masks[key]).sum())
+        # all dirty rows are exactly the dense base (sparse sources clean,
+        # except the oob token which drops)
+        assert base <= info["base_dirty_rows"] + 1, key
+
+
+def test_tracker_rejects_bad_hit_mask_size(moe_tracker):
+    cfg, layout, tracker = moe_tracker
+    moe_name = next(n for n in tracker.source_names if n.startswith("moe/"))
+    with pytest.raises(ValueError, match="units"):
+        tracker.step_masks({moe_name: np.zeros(3, np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# sim integration (condensed engine pins; the full matrix lives in test_sim)
+# ---------------------------------------------------------------------------
+
+
+def _sim(engine, sparse, gfn, **kw):
+    from repro.sim import SimSpec, simulate
+
+    opt = make_optimizer(OptimizerConfig(algorithm="decentlam", momentum=0.8))
+    spec = SimSpec(topology="ring", n=8, lr=1e-2, n_steps=12, seed=0,
+                   engine=engine, sparse=sparse, **kw)
+    x0 = jnp.zeros((8, 12), jnp.float32)
+    return simulate(opt, spec, x0, gfn)
+
+
+_A = None
+
+
+def _mk_grads():
+    global _A
+    if _A is None:
+        key = jax.random.key(0)
+        _A = (jax.random.normal(key, (8, 12, 12)) * 0.1 + jnp.eye(12),
+              jax.random.normal(jax.random.key(1), (8, 12)))
+
+    def dense(params, step):
+        A, b = _A
+        return jnp.einsum("nij,nj->ni", A, params) - b
+
+    def sparse(params, step):
+        rows = (jnp.arange(12)[None, :] + jnp.asarray(step)) % 3 == 0
+        return jnp.where(rows, dense(params, step), 0.0)
+
+    return dense, sparse
+
+
+def test_sim_all_dirty_sparse_equals_dense_both_engines():
+    dense_g, _ = _mk_grads()
+    for engine in ("pernode", "vectorized"):
+        rd = _sim(engine, None, dense_g)
+        rs = _sim(engine, "exact", dense_g)
+        assert _tree_equal(rd.params, rs.params), engine
+        assert rs.comm is not None and rd.comm is None
+
+
+@pytest.mark.parametrize("mode", ["exact", "delta"])
+def test_sim_engines_bit_equal_under_sparse_grads(mode):
+    _, sparse_g = _mk_grads()
+    rp = _sim("pernode", mode, sparse_g)
+    rv = _sim("vectorized", mode, sparse_g)
+    assert _tree_equal(rp.params, rv.params), mode
+    # pernode additionally models mailbox row-delta compaction
+    assert rp.comm["wire_sparse_bytes"] < rp.comm["wire_dense_bytes"]
+    assert rp.comm["mailbox_bytes"] < rp.comm["mailbox_dense_bytes"]
+    assert "mailbox_bytes" not in rv.comm
+
+
+def test_sim_delayed_engine_composes_with_sparse():
+    dense_g, _ = _mk_grads()
+    r = _sim("pernode", "exact", dense_g, scenario="stale_gossip_k2")
+    assert r.comm["gossip_rounds"] > 0
