@@ -441,6 +441,101 @@ def bench_tree_workload(iters=3):
 
 
 # ---------------------------------------------------------------------------
+# sharded planes: per-rank launch/collective counts at tp > 1 vs tp == 1
+# ---------------------------------------------------------------------------
+#
+# The tentpole claim of the sharded-layout refactor: one mesh column of a
+# tp-sharded plane layout runs the SAME program shape as the tp == 1
+# collapse — O(buckets x stages) pallas_calls per rank, O(buckets x
+# edge-classes) node-axis collectives per rank, and ZERO extra model-axis
+# collectives per step (gossip ships per-rank local shards over the node
+# axes only; nothing in the update tail reduces over the model axis).
+# Counted from the traced jaxpr on the rank-local layout — the distributed
+# tier cross-checks the same counts inside a real shard_map program
+# (tests/scripts/distributed_equivalence.py, mode "planes-tp").
+
+TP_SHARDED = 2
+TP_ALGOS = ("decentlam", "decentlam-sa")
+
+
+def _tree_shardings(template):
+    """PartitionSpecs for ``_tree_template``: megatron-style column/row
+    splits on the matmul weights + vocab-sharded embedding; norm scales
+    replicated (their dims don't divide, and they're tiny)."""
+    from jax.sharding import PartitionSpec as P
+
+    specs = {"embed": {"table": P("model", None)},
+             "final_ln": {"scale": None}}
+    for key in template:
+        if not key.startswith("layer_"):
+            continue
+        specs[key] = {
+            "qkv": P(None, "model"), "o": P("model", None),
+            "up": P(None, "model"), "down": P("model", None),
+            "ln1": None, "ln2": None, "q_norm": None, "k_norm": None,
+        }
+    return specs
+
+
+def bench_tp_sharded(tp: int = TP_SHARDED):
+    template = _tree_template()
+    specs = _tree_shardings(template)
+    topo = build_topology("ring", TREE_N_NODES)
+    wire = PpermuteChannel(topo, "data")
+
+    out: dict = {
+        "tp": tp,
+        # analytic model-axis budget: the sharded plane step adds no
+        # collectives over the model axis (checked: the jaxpr-counted
+        # launches below come from the SAME rank-local program per column)
+        "model_axis_collectives_per_step": 0,
+        "per_algorithm": {},
+    }
+    for algo in TP_ALGOS:
+        cfg = OptimizerConfig(algorithm=algo, momentum=BETA, weight_decay=WD)
+        spec = update_spec(cfg)
+        entry: dict = {"stages": len(stage_plan(cfg))}
+        for label_tp in (1, tp):
+            lay = (
+                PlaneLayout.build(template) if label_tp == 1
+                else PlaneLayout.build(template, tp=label_tp, shardings=specs)
+            )
+            local = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, a.dtype), lay.local_template()
+            )
+            g = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), local
+            )
+            state = make_optimizer(cfg).init(local)
+            kw = dict(lr=0.01, step_idx=jnp.int32(0),
+                      gossip=lambda t, s, c: (t, c), mean=lambda t: t,
+                      comp_state=())
+
+            def plane_fn(x, g, state, _lay=lay, _spec=spec, _cfg=cfg, _kw=kw):
+                xp = _lay.pack(x)
+                gp = _lay.pack(g, dtype=jnp.float32)
+                sp = {k: _lay.pack(v, dtype=jnp.float32)
+                      for k, v in state.items()}
+                return run_update(
+                    _spec, _cfg, x=xp, g=gp, state=sp,
+                    stage=make_plane_stage("pallas_interpret"),
+                    scalars=plane_scalars(_cfg, _lay, x, g), **_kw,
+                )
+
+            entry[f"launches_plane_tp{label_tp}"] = count_primitive(
+                jax.make_jaxpr(plane_fn)(local, g, state), "pallas_call"
+            )
+            # node-axis wire cost per rank: local buckets only
+            entry[f"collectives_plane_tp{label_tp}"] = (
+                wire.collectives_per_round(lay.plane_shapes(jnp.float32))
+                * spec.gossips_per_step
+            )
+            entry["n_buckets"] = len(lay.segments)
+        out["per_algorithm"][algo] = entry
+    return out
+
+
+# ---------------------------------------------------------------------------
 # attention / mlstm reference-path timings (unchanged hot spots)
 # ---------------------------------------------------------------------------
 
@@ -468,6 +563,7 @@ def bench_kernel_refs():
 def run(csv: bool = True, json_path: str | None = None):
     tails = bench_optimizer_tails()
     tree = bench_tree_workload()
+    tree["tp_sharded"] = bench_tp_sharded()
     refs = bench_kernel_refs()
 
     if csv:
@@ -491,6 +587,18 @@ def run(csv: bool = True, json_path: str | None = None):
                 f"{row['collectives_per_leaf']:.0f},{row['collectives_plane']:.0f},"
                 f"{row.get('per_leaf_us', '')},{row.get('plane_us', '')},"
                 f"{row.get('plane_speedup', '')}"
+            )
+        tp = tree["tp_sharded"]["tp"]
+        print(
+            f"algo,launches_plane_tp1,launches_plane_tp{tp},"
+            f"collectives_plane_tp1,collectives_plane_tp{tp}"
+        )
+        for algo, row in tree["tp_sharded"]["per_algorithm"].items():
+            print(
+                f"tp/{algo},{row['launches_plane_tp1']},"
+                f"{row[f'launches_plane_tp{tp}']},"
+                f"{row['collectives_plane_tp1']:.0f},"
+                f"{row[f'collectives_plane_tp{tp}']:.0f}"
             )
         print("name,us_per_call,derived")
         for name, us, d in refs:

@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--only NAME | --all-json]``
 
 ``kernel_microbench`` additionally writes ``BENCH_kernels.json``
 (per-algorithm fused/unfused tail timings), ``sim_scenarios`` writes
@@ -10,7 +10,8 @@ simulator), ``serving_microbench`` writes ``BENCH_serve.json``
 and ``sparse_gossip`` writes ``BENCH_gossip.json`` (row-sparse vs dense
 comm volume + bit-exactness and accounting cross-checks) so the
 perf/robustness trajectory is machine-readable across PRs; all four are
-gated in CI (``tests/ci/check_bench_*.py``).
+gated in CI (``tests/ci/check_bench_*.py``).  ``--all-json`` runs exactly
+those four and re-emits every BENCH_*.json in one invocation.
 
 Prints ``name,...`` CSV blocks per benchmark:
 
@@ -56,10 +57,25 @@ BENCHES = {
     "sparse_gossip": sparse_gossip.run,
 }
 
+# benchmark name -> argparse dest of its JSON output path
+JSON_BENCHES = {
+    "kernel_microbench": "kernels_json",
+    "sim_scenarios": "sim_json",
+    "serving_microbench": "serve_json",
+    "sparse_gossip": "gossip_json",
+}
+
 
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default=None, help="run a single benchmark")
+    p.add_argument(
+        "--all-json",
+        action="store_true",
+        help="re-emit every BENCH_*.json in one invocation: runs exactly "
+        "the JSON-writing benchmarks (kernel/sim/serve/gossip) and skips "
+        "the print-only tables — the one-command refresh CI gates expect",
+    )
     p.add_argument(
         "--kernels-json",
         default="BENCH_kernels.json",
@@ -81,18 +97,19 @@ def main() -> None:
         help="where sparse_gossip writes its machine-readable table",
     )
     args = p.parse_args()
-    names = [args.only] if args.only else list(BENCHES)
+    if args.only and args.all_json:
+        p.error("--only and --all-json are mutually exclusive")
+    if args.only:
+        names = [args.only]
+    elif args.all_json:
+        names = list(JSON_BENCHES)
+    else:
+        names = list(BENCHES)
     for name in names:
         print(f"\n# ===== {name} =====")
         t0 = time.time()
-        if name == "kernel_microbench":
-            BENCHES[name](json_path=args.kernels_json)
-        elif name == "sim_scenarios":
-            BENCHES[name](json_path=args.sim_json)
-        elif name == "serving_microbench":
-            BENCHES[name](json_path=args.serve_json)
-        elif name == "sparse_gossip":
-            BENCHES[name](json_path=args.gossip_json)
+        if name in JSON_BENCHES:
+            BENCHES[name](json_path=getattr(args, JSON_BENCHES[name]))
         else:
             BENCHES[name]()
         print(f"# {name} done in {time.time()-t0:.1f}s")

@@ -53,6 +53,15 @@ int8 uses one global scale and top-k selects across the entire plane — a
 deliberate semantic change of the packed wire format (error feedback still
 applies, now over plane residuals).
 
+On a *sharded* plane layout (tensor parallelism, tp > 1) the payload a
+channel sees inside shard_map is the mesh column's LOCAL bucket set —
+``(local_rows, LANES)`` per dtype — so gossip ships per-rank shards over
+the **node axes only** (the model axis never enters a channel collective)
+and the shape-derived accounting (``_payload_nbytes`` ->
+``bytes_per_step`` and ``collectives_per_round``) is automatically
+*per-rank*: bytes scale with the local shard rows, collective counts stay
+O(buckets x edge classes) per rank, identical to the tp == 1 collapse.
+
 Time-varying topologies (one-peer exponential, bipartite random match) cycle
 through their period with ``lax.switch`` so the step stays a single jitted
 computation.

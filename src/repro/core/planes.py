@@ -42,6 +42,25 @@ friendly) and hashable-by-identity; ``pack``/``unpack`` are pure jnp and
 trace under jit.  A ``leading`` axis count supports the stacked ``(n,
 ...)`` reference layout: build the layout from the per-node template and
 pack with ``leading=1``.
+
+**Sharded layouts (tensor parallelism).**  ``build(template, tp=k,
+shardings=specs)`` plans a *per-mesh-column local* layout: for each leaf
+the ``PartitionSpec`` names which dim (if any) is sharded over the model
+axis, and the segment records the **local** shard shape (global dim ÷ tp)
+next to the global one.  Replicated leaves pack identically on every
+rank; sharded leaves occupy local rows only, so each TP rank's bucket is
+a fully valid ``(rows, LANES)`` plane — ``ROW_MULTIPLE``-aligned like the
+``tp == 1`` case, which is what keeps the fused kernel's 64-row block
+grid (and hence bit-exactness) intact per rank.  The *global* (stacked
+shard) form concatenates the tp per-rank packs along the row axis:
+``pack_global`` emits ``(tp * rows, LANES)`` buffers sliceable by
+``P(model_axis, None)``, so inside shard_map every rank sees exactly its
+local bucket and all the local-tree machinery here (``pack``/``unpack``,
+``row_scalars``, ``host_pack``/``view_unpack``) applies unchanged to the
+local template.  ``unpack_global`` inverts it back to the global tree;
+``global_layout()`` gives the unsharded layout of the global template for
+consumers (checkpoint reconciliation, the serving publisher) that need
+the wire/snapshot format to stay rank-free.
 """
 
 from __future__ import annotations
@@ -63,28 +82,62 @@ ROW_MULTIPLE = 64  # bucket row totals pad to the kernel block height
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
-    """One leaf's slot inside a bucket plane (static metadata)."""
+    """One leaf's slot inside a bucket plane (static metadata).
+
+    ``shape`` is the **local** per-rank leaf shape — identical to the
+    global shape for replicated leaves and for ``tp == 1`` layouts; for
+    leaves sharded over the model axis it is the global shape with
+    ``shard_axis`` divided by ``tp``.  All row arithmetic (``row_start``,
+    ``rows``, ``size``) is in local terms, so every consumer of the local
+    plane form reads ``shape`` and never needs to know about sharding.
+    """
 
     index: int  # leaf position in the template's flatten order
-    shape: tuple[int, ...]  # per-node leaf shape (leading axes excluded)
+    shape: tuple[int, ...]  # LOCAL per-rank leaf shape (leading axes excluded)
     dtype: Any  # template dtype (unpack's default cast target)
     row_start: int  # first plane row of this leaf
     rows: int  # ceil(size / LANES)
     size: int  # true element count (rows * LANES - size is zero pad)
+    # sharding metadata — defaults describe an unsharded segment
+    global_shape: tuple[int, ...] | None = None  # None -> same as ``shape``
+    shard_axis: int | None = None  # dim split over the model axis (or None)
+
+    @property
+    def full_shape(self) -> tuple[int, ...]:
+        """Global (unsharded) leaf shape."""
+        return self.shape if self.global_shape is None else self.global_shape
 
 
 def _bucket_key(dtype) -> str:
     return jnp.dtype(dtype).name
 
 
+def _shard_axis_of(spec, model_axis: str) -> int | None:
+    """Dim of a ``PartitionSpec`` sharded over ``model_axis`` (or None).
+
+    The repo's param specs put at most one mesh axis per dim and shard at
+    most one dim per leaf over the model axis; the first match wins.
+    """
+    if spec is None:
+        return None
+    for dim, entry in enumerate(spec):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if any(n == model_axis for n in names if n is not None):
+            return dim
+    return None
+
+
 class PlaneLayout:
     """Static packing plan for one pytree template (see module docstring)."""
 
     def __init__(self, treedef, segments: dict[str, tuple[Segment, ...]],
-                 rows: dict[str, int]):
+                 rows: dict[str, int], *, tp: int = 1,
+                 model_axis: str = "model"):
         self.treedef = treedef
         self.segments = segments
-        self.rows = rows  # per-bucket row totals (ROW_MULTIPLE aligned)
+        self.rows = rows  # per-bucket LOCAL row totals (ROW_MULTIPLE aligned)
+        self.tp = tp  # mesh-column count the local shapes were planned for
+        self.model_axis = model_axis
         self.n_leaves = treedef.num_leaves
         # row -> segment position within the bucket; tail-pad rows alias
         # segment 0 (their data is zero, so any scalar they pick up is inert)
@@ -98,24 +151,57 @@ class PlaneLayout:
     # -- construction -------------------------------------------------------
 
     @classmethod
-    def build(cls, template: Tree) -> "PlaneLayout":
+    def build(cls, template: Tree, *, tp: int = 1, shardings: Tree | None = None,
+              model_axis: str = "model") -> "PlaneLayout":
         """Plan the packing for ``template`` (arrays or ShapeDtypeStructs;
-        only ``.shape``/``.dtype`` are read)."""
+        only ``.shape``/``.dtype`` are read).
+
+        ``template`` always carries **global** shapes.  At ``tp == 1`` the
+        plan is the flat unsharded layout.  At ``tp > 1``, ``shardings``
+        (a tree of ``PartitionSpec`` matching ``template``) decides which
+        leaves are sharded over ``model_axis``; those segments get local
+        shapes (sharded dim ÷ tp — must divide exactly, the model configs
+        pad vocab/heads to tp) while replicated leaves keep their global
+        shape on every rank.
+        """
         leaves, treedef = jax.tree.flatten(template)
+        if tp > 1 and shardings is None:
+            raise ValueError(
+                "PlaneLayout.build(tp > 1) needs `shardings` (PartitionSpec "
+                "tree matching the template) to locate the model axis"
+            )
+        spec_leaves = (
+            treedef.flatten_up_to(shardings) if shardings is not None else None
+        )
         segs: dict[str, list[Segment]] = {}
         for i, leaf in enumerate(leaves):
             key = _bucket_key(leaf.dtype)
             bucket = segs.setdefault(key, [])
             start = bucket[-1].row_start + bucket[-1].rows if bucket else 0
-            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            gshape = tuple(leaf.shape)
+            ax = (
+                _shard_axis_of(spec_leaves[i], model_axis)
+                if tp > 1 else None
+            )
+            if ax is None:
+                lshape = gshape
+            else:
+                if gshape[ax] % tp != 0:
+                    raise ValueError(
+                        f"leaf {i}: global dim {ax} of {gshape} is sharded "
+                        f"over {model_axis!r} but not divisible by tp={tp}"
+                    )
+                lshape = gshape[:ax] + (gshape[ax] // tp,) + gshape[ax + 1:]
+            size = int(np.prod(lshape)) if lshape else 1
             rows = max(1, -(-size // LANES))
-            bucket.append(Segment(i, tuple(leaf.shape), jnp.dtype(leaf.dtype),
-                                  start, rows, size))
+            bucket.append(Segment(i, lshape, jnp.dtype(leaf.dtype),
+                                  start, rows, size, gshape, ax))
         rows = {
             key: -(-(b[-1].row_start + b[-1].rows) // ROW_MULTIPLE) * ROW_MULTIPLE
             for key, b in segs.items()
         }
-        return cls(treedef, {k: tuple(v) for k, v in segs.items()}, rows)
+        return cls(treedef, {k: tuple(v) for k, v in segs.items()}, rows,
+                   tp=tp, model_axis=model_axis)
 
     @property
     def buckets(self) -> tuple[str, ...]:
@@ -131,6 +217,132 @@ class PlaneLayout:
             )
             for key in self.segments
         }
+
+    # -- sharded (tensor-parallel) views ------------------------------------
+
+    @property
+    def sharded(self) -> bool:
+        """True when this layout plans per-mesh-column local shards."""
+        return self.tp > 1
+
+    def local_template(self) -> Tree:
+        """``ShapeDtypeStruct`` tree of one rank's LOCAL leaves (== the
+        global template at ``tp == 1``)."""
+        out: list = [None] * self.n_leaves
+        for segs in self.segments.values():
+            for seg in segs:
+                out[seg.index] = jax.ShapeDtypeStruct(seg.shape, seg.dtype)
+        return self.treedef.unflatten(out)
+
+    def global_template(self) -> Tree:
+        """``ShapeDtypeStruct`` tree of the GLOBAL (unsharded) leaves."""
+        out: list = [None] * self.n_leaves
+        for segs in self.segments.values():
+            for seg in segs:
+                out[seg.index] = jax.ShapeDtypeStruct(seg.full_shape, seg.dtype)
+        return self.treedef.unflatten(out)
+
+    def global_layout(self) -> "PlaneLayout":
+        """Unsharded layout over the global template (``self`` at tp == 1).
+
+        This is the rank-free plane form consumers outside the mesh see:
+        the serving publisher packs snapshots with it so ``view_unpack``
+        leaves stay contiguous, and checkpoint reconciliation uses it as
+        the common ground between layouts planned at different tp.
+        """
+        if self.tp == 1:
+            return self
+        cached = getattr(self, "_global_layout_cache", None)
+        if cached is None:
+            cached = PlaneLayout.build(self.global_template())
+            self._global_layout_cache = cached
+        return cached
+
+    def shard_slice(self, tree: Tree, rank, *, leading: int = 0) -> Tree:
+        """``rank``'s local shard of a GLOBAL tree.
+
+        Replicated leaves pass through unsliced; sharded leaves are cut
+        along their ``shard_axis``.  ``rank`` may be a traced value (the
+        slice lowers to ``dynamic_slice``).
+        """
+        if self.tp == 1:
+            return tree
+        leaves = list(self.treedef.flatten_up_to(tree))
+        for segs in self.segments.values():
+            for seg in segs:
+                if seg.shard_axis is None:
+                    continue
+                n = seg.shape[seg.shard_axis]
+                leaves[seg.index] = jax.lax.dynamic_slice_in_dim(
+                    jnp.asarray(leaves[seg.index]), rank * n, n,
+                    axis=seg.shard_axis + leading,
+                )
+        return self.treedef.unflatten(leaves)
+
+    def pack_global(self, tree: Tree, *, dtype=None, leading: int = 0,
+                    impl: str | None = None) -> dict:
+        """Pack a GLOBAL tree into stacked shard planes.
+
+        At ``tp == 1`` this is exactly :meth:`pack`.  At ``tp > 1`` each
+        bucket is the row-concatenation of the tp per-rank local packs —
+        ``(tp * rows[key], LANES)`` with rank ``r`` owning the row block
+        ``[r * rows, (r + 1) * rows)`` — so a ``P(model_axis, None)``
+        spec hands every shard_map rank exactly its local
+        ``(rows, LANES)`` bucket.  Replicated leaves appear, identically,
+        in every rank block.
+        """
+        if self.tp == 1:
+            return self.pack(tree, dtype=dtype, leading=leading, impl=impl)
+        packs = [
+            self.pack(self.shard_slice(tree, r, leading=leading),
+                      dtype=dtype, leading=leading, impl=impl)
+            for r in range(self.tp)
+        ]
+        return {
+            key: jnp.concatenate([p[key] for p in packs], axis=leading)
+            for key in packs[0]
+        }
+
+    def unpack_global(self, planes: dict, *, like: Tree | None = None,
+                      dtype=None, leading: int = 0) -> Tree:
+        """Inverse of :meth:`pack_global`: stacked shard planes -> GLOBAL
+        tree.  Splits each bucket into its tp rank blocks, unpacks each to
+        the local template, and concatenates sharded leaves along their
+        shard axis (replicated leaves are taken from rank 0)."""
+        if self.tp == 1:
+            return self.unpack(planes, like=like, dtype=dtype, leading=leading)
+        ranks = []
+        for r in range(self.tp):
+            block = {
+                key: jax.lax.slice_in_dim(
+                    planes[key], r * self.rows[key], (r + 1) * self.rows[key],
+                    axis=leading,
+                )
+                for key in self.segments
+            }
+            ranks.append(self.treedef.flatten_up_to(
+                self.unpack(block, dtype=dtype, leading=leading)
+            ))
+        like_leaves = (
+            self.treedef.flatten_up_to(like) if like is not None else None
+        )
+        out: list = [None] * self.n_leaves
+        for segs in self.segments.values():
+            for seg in segs:
+                i = seg.index
+                if seg.shard_axis is None:
+                    v = ranks[0][i]
+                else:
+                    v = jnp.concatenate(
+                        [rk[i] for rk in ranks], axis=seg.shard_axis + leading
+                    )
+                if dtype is None:
+                    v = v.astype(
+                        like_leaves[i].dtype if like_leaves is not None
+                        else seg.dtype
+                    )
+                out[i] = v
+        return self.treedef.unflatten(out)
 
     # -- pack / unpack ------------------------------------------------------
 

@@ -137,9 +137,14 @@ def fused_plane_stage(kind, op, ctx, operands, scalars, like_x, *, interpret=Fal
     Operands are plane trees — ``{bucket: (rows, LANES)}`` built by one
     :class:`~repro.core.planes.PlaneLayout` — so the "leaves" here are the
     dtype buckets and each stage issues exactly one ``pallas_call`` per
-    bucket.  The LARS trust ratio, when present, arrives as the layout's
-    row-indexed segment columns (``{bucket: (rows, 1)}``) and is fed to the
-    kernel as a narrow VMEM operand; ``gs``/``sg`` stay SMEM scalars.
+    bucket.  On a sharded layout (tp > 1) the buckets handed in are the
+    mesh column's LOCAL shards; nothing here changes — local row totals
+    are ``ROW_MULTIPLE``-aligned by construction, so the 64-row block grid
+    is exact per rank and the launch count stays O(buckets x stages) *per
+    rank*, matching the tp == 1 collapse.  The LARS trust ratio, when
+    present, arrives as the layout's row-indexed segment columns
+    (``{bucket: (rows, 1)}``) and is fed to the kernel as a narrow VMEM
+    operand; ``gs``/``sg`` stay SMEM scalars.
     """
     names = tuple(operands)
     treedef = jax.tree.structure(operands[names[0]])

@@ -59,7 +59,8 @@ def _parse():
     p.add_argument("--flat-planes", dest="flat_planes", action="store_true",
                    help="pack the update tail + gossip into dtype-bucketed "
                    "plane buffers (one launch per stage, one collective per "
-                   "bucket per edge class); requires --tp 1")
+                   "bucket per edge class); at --tp > 1 each mesh column "
+                   "packs only its local shard rows")
     p.add_argument("--fused-impl", dest="fused_impl", default="ref",
                    choices=["ref", "pallas", "pallas_interpret"])
     p.add_argument("--measure-json", dest="measure_json", default=None,
@@ -181,13 +182,20 @@ def main() -> None:
         if jax.tree.leaves(host_state["params"])[0].shape[0] != n_nodes:
             print(f"elastic reshape {manifest.get('n_nodes')} -> {n_nodes}")
             host_state = elastic_reshape(host_state, n_nodes)
-        # checkpoints are interchangeable across --flat-planes: opt state
-        # packs/unpacks to match the step's layout (tp == 1 only)
-        if tp == 1:
-            host_state = reconcile_plane_state(
-                host_state, layout or model_plane_layout(cfg, tp),
-                args.flat_planes,
-            )
+        # checkpoints are interchangeable across --flat-planes AND across
+        # tensor-parallel degrees: a plane-form opt state written at a
+        # different tp (the manifest's "plane_tp") round-trips through the
+        # stored layout's global tree before repacking for this mesh
+        # manifests without "plane_tp" predate sharded layouts: any
+        # plane-form opt state they carry was written at tp == 1
+        stored_tp = int(manifest.get("plane_tp") or 1)
+        stored_layout = (
+            model_plane_layout(cfg, stored_tp) if stored_tp != tp else None
+        )
+        host_state = reconcile_plane_state(
+            host_state, layout or model_plane_layout(cfg, tp),
+            args.flat_planes, stored_layout=stored_layout,
+        )
         # channel state (delay buffers, error feedback, telemetry) resumes
         # when shapes match; anything missing/invalidated re-inits to zeros
         state = ensure_channel_state(host_state, channel, n_nodes, layout)
@@ -270,7 +278,8 @@ def main() -> None:
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             path = save_checkpoint(args.ckpt_dir, jax.device_get(state),
                                    metadata={"n_nodes": n_nodes,
-                                             "algorithm": args.algorithm})
+                                             "algorithm": args.algorithm},
+                                   plane_layout=layout)
             print(f"checkpointed -> {path}")
         if args.failure_drill and step == (start + args.steps) // 2:
             print("FAILURE DRILL: checkpoint, shrink to n/2, rebuild, resume")
@@ -337,7 +346,8 @@ def main() -> None:
     if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, jax.device_get(state),
                         metadata={"n_nodes": n_nodes,
-                                  "algorithm": args.algorithm})
+                                  "algorithm": args.algorithm},
+                        plane_layout=layout)
 
 
 if __name__ == "__main__":

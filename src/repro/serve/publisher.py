@@ -83,7 +83,13 @@ class WeightPublisher:
         gap_threshold: int = 0,
         check_consistency: bool = False,
     ):
-        self.layout = layout
+        # snapshots are always published in the GLOBAL (rank-free) plane
+        # form: when training runs a sharded layout (tp > 1), sharded
+        # plane-form sources are gathered through it below, so consumers
+        # keep contiguous global leaves and the zero-copy view_unpack
+        # contract regardless of the training mesh shape
+        self.train_layout = layout
+        self.layout = layout.global_layout()
         self.gap_threshold = int(gap_threshold)
         self.check_consistency = bool(check_consistency)
         self._bufs: list[dict[str, np.ndarray] | None] = [None, None]
@@ -149,12 +155,23 @@ class WeightPublisher:
             }
             self._bufs[self._standby] = buf
         if self._is_plane_dict(source):
-            # plane-form source (the flat-planes training payload): one
-            # contiguous host copy per dtype bucket
-            for key, dst in buf.items():
-                src = np.asarray(source[key])
-                assert src.shape == dst.shape, (key, src.shape, dst.shape)
-                np.copyto(dst, src.astype(dst.dtype, copy=False))
+            if self.train_layout.tp > 1:
+                # sharded plane-form source: (tp * local_rows, LANES)
+                # stacked shard buckets — gather to the global tree through
+                # the training layout, then host-pack into the rank-free
+                # snapshot layout (shard row maps differ from the global
+                # ones, so a per-bucket memcpy would interleave shards)
+                tree = self.train_layout.unpack_global(
+                    {k: np.asarray(v) for k, v in source.items()}
+                )
+                layout.host_pack(tree, out=buf)
+            else:
+                # unsharded plane-form source (the flat-planes training
+                # payload): one contiguous host copy per dtype bucket
+                for key, dst in buf.items():
+                    src = np.asarray(source[key])
+                    assert src.shape == dst.shape, (key, src.shape, dst.shape)
+                    np.copyto(dst, src.astype(dst.dtype, copy=False))
         else:
             layout.host_pack(source, out=buf)
         return buf

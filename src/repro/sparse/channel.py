@@ -329,10 +329,21 @@ class _RowMaskMixin:
 
         specs = super().state_specs(param_specs)
         is_p = lambda s: isinstance(s, P)
-        dirty_spec = P(None, None) if self.mode == "delta" else P(None)
+        # mask specs follow the payload's ROW axis: a (rows,) mask inherits
+        # the first entry of its leaf's spec, so masks over sharded plane
+        # buckets (row axis split over the model axis, P(model, None))
+        # shard with their rows instead of claiming replication — at tp == 1
+        # the payload row entry is None and this reduces to the flat case
+        row_of = lambda s: s[0] if len(s) else None
+        dirty_of = (
+            (lambda s: P(None, row_of(s))) if self.mode == "delta"
+            else (lambda s: P(row_of(s)))
+        )
         specs["rows"] = {
-            "dirty": jax.tree.map(lambda s: dirty_spec, param_specs, is_leaf=is_p),
-            "pending": jax.tree.map(lambda s: P(None), param_specs, is_leaf=is_p),
+            "dirty": jax.tree.map(dirty_of, param_specs, is_leaf=is_p),
+            "pending": jax.tree.map(
+                lambda s: P(row_of(s)), param_specs, is_leaf=is_p
+            ),
             "vol": {"sparse": P(), "dense": P(), "rounds": P()},
         }
         if self.mode == "delta":

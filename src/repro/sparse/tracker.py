@@ -59,10 +59,17 @@ class RowSource:
     bucket: str
     row_start: int
     rows: int
-    units: int
+    units: int  # LOCAL unit count (== global unless the unit axis is sharded)
     unit_size: int
     starts: np.ndarray  # (rows,) int32
     ends1: np.ndarray  # (rows,) int32, exclusive
+    # sharded layouts: touch inputs are GLOBAL (token ids over the full
+    # vocab, router hits over all experts); when a dim of the unit grid is
+    # split over the model axis, step_masks slices the caller's rank block
+    # out of the global hot mask before the row overlap
+    unit_grid: tuple[int, ...] = ()  # GLOBAL unit grid (() -> (units,))
+    shard_dim: int | None = None  # dim of unit_grid split over the model axis
+    shard_parts: int = 1  # tp (1 when unsharded)
 
 
 def _unit_intervals(rows: int, units: int, unit_size: int):
@@ -112,13 +119,14 @@ class RowTracker:
           dense (every token's gradient touches them).
         """
         leaves = jax.tree_util.tree_flatten_with_path(template)[0]
-        by_index: dict[int, tuple[str, str, int, int]] = {}
+        # leaf index -> (kind, name, n_unit_dims): leading dims that form
+        # the unit grid (1 for embeddings, 2 for (layer, expert) slabs)
+        by_index: dict[int, tuple[str, str, int]] = {}
         for i, (path, leaf) in enumerate(leaves):
             keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
             shape = tuple(leaf.shape)
             if keys[-2:] == ["embed", "table"] and not tied_embeddings:
-                by_index[i] = ("embed", "embed", shape[0],
-                               int(np.prod(shape[1:])))
+                by_index[i] = ("embed", "embed", 1)
             elif (
                 len(keys) >= 4
                 and keys[0] == "groups"
@@ -126,22 +134,37 @@ class RowTracker:
                 and keys[3] in ("w_in", "w_out", "w_gate")
                 and len(shape) >= 3
             ):
-                by_index[i] = (
-                    "moe", f"moe/{keys[1]}", shape[0] * shape[1],
-                    int(np.prod(shape[2:])),
-                )
+                by_index[i] = ("moe", f"moe/{keys[1]}", 2)
         sources = []
         for key, segs in layout.segments.items():
             for seg in segs:
                 if seg.index not in by_index:
                     continue
-                kind, name, units, unit_size = by_index[seg.index]
+                kind, name, nu = by_index[seg.index]
+                # seg.shape is the rank-LOCAL shape; rows/unit_size follow
+                # it, so the unit->row intervals index local plane rows.
+                # When the sharded dim lies inside the unit grid (sharded
+                # vocab, expert-sharded MoE), touch inputs stay global and
+                # step_masks slices the rank block; an element-dim shard
+                # ("ffn" mode) just shrinks unit_size and the global hot
+                # mask applies to every rank as-is.
+                lshape = seg.shape
+                units = int(np.prod(lshape[:nu])) if lshape[:nu] else 1
+                unit_size = max(1, int(np.prod(lshape[nu:])))
+                if seg.shard_axis is not None and seg.shard_axis < nu:
+                    unit_grid = tuple(seg.full_shape[:nu])
+                    shard_dim, shard_parts = seg.shard_axis, layout.tp
+                else:
+                    unit_grid = tuple(lshape[:nu])
+                    shard_dim, shard_parts = None, 1
                 starts, ends1 = _unit_intervals(seg.rows, units, unit_size)
                 sources.append(RowSource(
                     name=name, kind=kind, bucket=key,
                     row_start=seg.row_start, rows=seg.rows,
                     units=units, unit_size=unit_size,
                     starts=starts, ends1=ends1,
+                    unit_grid=unit_grid, shard_dim=shard_dim,
+                    shard_parts=shard_parts,
                 ))
         return cls(layout, tuple(sources))
 
@@ -161,37 +184,64 @@ class RowTracker:
             out[key] = jnp.asarray(m)
         return out
 
-    def _hot(self, src: RowSource, val) -> jax.Array:
-        """Touched-unit input -> (units,) bool: int arrays are indices
-        (scattered, out-of-range dropped), everything else a hit mask
-        reshaped to (units,)."""
+    def _hot(self, src: RowSource, val, shard_rank=None) -> jax.Array:
+        """Touched-unit input -> (local units,) bool: int arrays are indices
+        over the GLOBAL unit grid (scattered, out-of-range dropped),
+        everything else a global hit mask.  For sources whose unit grid is
+        sharded over the model axis, ``shard_rank``'s block of the global
+        hot mask is sliced out (dynamic slice — ``shard_rank`` may be a
+        traced ``axis_index``)."""
+        grid = src.unit_grid if src.unit_grid else (src.units,)
+        total = int(np.prod(grid))
         val = jnp.asarray(val)
         if jnp.issubdtype(val.dtype, jnp.integer):
-            return (
-                jnp.zeros((src.units,), bool)
+            hot = (
+                jnp.zeros((total,), bool)
                 .at[val.reshape(-1)]
                 .set(True, mode="drop")
             )
-        hot = val.reshape(-1) if val.dtype == jnp.bool_ else val.reshape(-1) != 0
-        if hot.shape[0] != src.units:
-            raise ValueError(
-                f"source {src.name!r}: expected {src.units} units, "
-                f"got shape {tuple(val.shape)}"
+        else:
+            hot = (
+                val.reshape(-1) if val.dtype == jnp.bool_
+                else val.reshape(-1) != 0
             )
-        return hot
+            if hot.shape[0] != total:
+                raise ValueError(
+                    f"source {src.name!r}: expected {total} units, "
+                    f"got shape {tuple(val.shape)}"
+                )
+        if src.shard_dim is None:
+            return hot
+        hot = hot.reshape(grid)
+        n = grid[src.shard_dim] // src.shard_parts
+        hot = jax.lax.dynamic_slice_in_dim(
+            hot, shard_rank * n, n, axis=src.shard_dim
+        )
+        return hot.reshape(-1)
 
-    def step_masks(self, units: dict[str, Any]) -> dict:
+    def step_masks(self, units: dict[str, Any], *, shard_rank=None) -> dict:
         """Touch events -> ``{bucket: (rows,) bool}`` payload row masks.
 
         ``units`` maps source names to touched-unit inputs (see
-        :meth:`for_model`).  A registered source *missing* from ``units``
-        is marked fully dirty — conservative, never lossy.  Feed the result
-        to ``channel.mark``.
+        :meth:`for_model`); inputs are always in GLOBAL unit terms.  A
+        registered source *missing* from ``units`` is marked fully dirty —
+        conservative, never lossy.  On a sharded layout pass ``shard_rank``
+        (``jax.lax.axis_index(model_axis)`` inside shard_map) so sources
+        whose unit axis is split over the model axis mask their local rows
+        only.  Feed the result to ``channel.mark``.
         """
+        if shard_rank is None and any(
+            s.shard_dim is not None for s in self.sources
+        ):
+            raise ValueError(
+                "step_masks on a sharded layout needs shard_rank= (the "
+                "caller's model-axis index) to slice global touch inputs "
+                "down to local rows"
+            )
         masks = {k: jnp.asarray(v) for k, v in self._base.items()}
         for src in self.sources:
             if src.name in units:
-                hot = self._hot(src, units[src.name])
+                hot = self._hot(src, units[src.name], shard_rank)
                 c = jnp.concatenate(
                     [jnp.zeros((1,), jnp.int32), jnp.cumsum(hot.astype(jnp.int32))]
                 )

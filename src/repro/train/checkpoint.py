@@ -20,10 +20,16 @@ single-process container writes one shard.
 
 Manifest format v3 records every bucket's dtype by name (``"dtypes"``):
 dtypes numpy cannot natively round-trip through npz (bfloat16 saves as an
-opaque 2-byte void) are restored by *declared* dtype, not by sniffing the
-void width.  V2 checkpoints (no ``"dtypes"`` entry) still restore through
-the legacy sniff — bf16 was the only 2-byte void V2 ever stored — pinned
-by a migration test in ``tests/test_checkpoint.py``.
+opaque 2-byte void; the fp8 plane-bucket dtypes ``float8_e4m3fn`` /
+``float8_e5m2`` as 1-byte voids) are restored by *declared* dtype, not by
+sniffing the void width; unknown declared names fail with a clean
+``ValueError``.  V2 checkpoints (no ``"dtypes"`` entry) still restore
+through the legacy sniff — bf16 was the only 2-byte void V2 ever stored —
+pinned by a migration test in ``tests/test_checkpoint.py``.  Flat-plane
+runs additionally stamp the manifest with the layout's shard metadata
+(``"plane_tp"``, per-bucket local ``"plane_rows"``), the key that lets a
+resume at a different tensor-parallel degree rebuild the written layout
+and reconcile the plane-form optimizer state.
 """
 
 from __future__ import annotations
@@ -59,12 +65,47 @@ def _flatten(tree: Tree) -> dict[str, np.ndarray]:
 
 
 def _resolve_dtype(name: str) -> np.dtype:
+    """Manifest dtype name -> numpy dtype.
+
+    Non-native names (bfloat16 and the fp8 plane-bucket dtypes
+    ``float8_e4m3fn`` / ``float8_e5m2``) resolve through ``ml_dtypes`` —
+    they round-trip npz as opaque voids and are reinterpreted by declared
+    dtype on restore.  Anything neither numpy nor ml_dtypes knows is a
+    corrupt or future-format manifest: fail with a clean error instead of
+    silently misreading bytes.
+    """
     try:
         return np.dtype(name)
     except TypeError:
         import ml_dtypes
 
-        return np.dtype(getattr(ml_dtypes, name))
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except (AttributeError, TypeError):
+            raise ValueError(
+                f"checkpoint manifest declares unknown dtype {name!r} "
+                f"(not a numpy dtype and not in ml_dtypes) — the "
+                f"checkpoint was written by an incompatible version"
+            ) from None
+
+
+def _npz_native(d: np.dtype) -> bool:
+    """True when numpy's npz format round-trips ``d`` by itself.
+
+    ml_dtypes extension dtypes are not: bf16/e4m3fn serialize as opaque
+    voids, and ``float8_e5m2`` (registered with kind ``'f'``) writes a
+    ``'<f1'`` descr numpy cannot even parse back.  Non-native buckets are
+    stored as same-width void *views* and restored by the manifest's
+    declared dtype.
+    """
+    if d.kind == "V":  # extension voids (bf16, e4m3fn): store as plain voids
+        return False
+    try:
+        from numpy.lib.format import descr_to_dtype, dtype_to_descr
+
+        return descr_to_dtype(dtype_to_descr(d)) == d
+    except (ValueError, TypeError):
+        return False
 
 
 def _unflatten(flat: dict[str, np.ndarray], dtypes: dict | None = None) -> Tree:
@@ -96,13 +137,30 @@ def _unflatten(flat: dict[str, np.ndarray], dtypes: dict | None = None) -> Tree:
     return tree
 
 
-def save_checkpoint(directory: str, state: Tree, *, metadata: dict | None = None):
+def save_checkpoint(directory: str, state: Tree, *, metadata: dict | None = None,
+                    plane_layout=None):
+    """Write one atomic checkpoint under ``directory``.
+
+    ``plane_layout`` (the training run's :class:`PlaneLayout`, when
+    ``flat_planes`` is on) stamps the V3 manifest with shard metadata —
+    ``plane_tp`` and the per-bucket local row counts — so a resume at a
+    different tensor-parallel degree can rebuild the *written* layout and
+    convert the plane-form optimizer state through
+    ``reconcile_plane_state(..., stored_layout=...)``.
+    """
     step = int(state["step"])
     os.makedirs(directory, exist_ok=True)
     tmp = tempfile.mkdtemp(prefix=f"tmp.{step}.", dir=directory)
     try:
         flat = _flatten(state)
-        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        np.savez(
+            os.path.join(tmp, "state.npz"),
+            **{
+                k: v if _npz_native(v.dtype)
+                else v.view(np.dtype(f"V{v.dtype.itemsize}"))
+                for k, v in flat.items()
+            },
+        )
         manifest = {
             "format": 3,
             "step": step,
@@ -111,6 +169,17 @@ def save_checkpoint(directory: str, state: Tree, *, metadata: dict | None = None
             "n_nodes": int(state["params"][next(iter(state["params"]))]["table"].shape[0])
             if "embed" in state.get("params", {})
             else None,
+            **(
+                {
+                    "plane_tp": int(plane_layout.tp),
+                    "plane_model_axis": plane_layout.model_axis,
+                    "plane_rows": {
+                        k: int(v) for k, v in plane_layout.rows.items()
+                    },
+                }
+                if plane_layout is not None
+                else {}
+            ),
             **(metadata or {}),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:

@@ -65,7 +65,9 @@ class TrainConfig:
     # flat fast path: pack the whole update tail and the gossip payload into
     # dtype-bucketed plane buffers (one kernel launch per stage per bucket,
     # one collective per bucket per edge class); optimizer + channel hot
-    # state stays in plane form across steps.  Requires tp == 1.
+    # state stays in plane form across steps.  At tp > 1 the layout is
+    # sharded per mesh column — each TP rank packs only its local shard
+    # rows, so launches and node-axis collectives stay O(buckets) per rank.
     flat_planes: bool = False
     gossip_serialize: bool = True  # one recv buffer live at a time (§Perf A-3)
     track_consensus: bool = False
@@ -208,8 +210,14 @@ def build_train_step(
     lr_fn = build_schedule(tcfg.schedule)
 
     # flat fast path: one static plane layout shared by the step, the state
-    # initializer and the resume path (model_plane_layout rejects tp > 1)
-    layout = model_plane_layout(cfg, tp) if tcfg.flat_planes else None
+    # initializer and the resume path.  At tp > 1 the layout is sharded:
+    # its segments carry local per-mesh-column shapes, so the in-shard_map
+    # pack/unpack below operate on exactly the rank's shard rows and the
+    # stacked plane state splits over the model axis (P(model, None) per
+    # node, see train_state._plane_pspec).
+    layout = (
+        model_plane_layout(cfg, tp, model_axis) if tcfg.flat_planes else None
+    )
 
     tracker = None
     if tcfg.sparse_gossip:
@@ -219,13 +227,21 @@ def build_train_step(
                 "addresses the gossip payload through the plane "
                 "row->segment map"
             )
+        if tp > 1:
+            # the sparse channels' per-round volume telemetry is a
+            # replicated scalar, but at tp > 1 each mesh column's dirty-row
+            # masks (hence its sparse egress) differ — surfacing per-rank
+            # volume needs the wire-compaction rework tracked in ROADMAP
+            raise NotImplementedError(
+                "sparse_gossip x tp > 1 is not supported yet: per-rank "
+                "dirty masks make the volume telemetry vary over the model "
+                "axis; use dense gossip at tp > 1"
+            )
         from ..sparse import RowTracker
 
-        abs_params = jax.eval_shape(
-            lambda k: T.init_params(k, cfg, tp), jax.random.key(0)
-        )
         tracker = RowTracker.for_model(
-            layout, abs_params, tied_embeddings=cfg.tie_embeddings
+            layout, layout.local_template(),
+            tied_embeddings=cfg.tie_embeddings,
         )
 
     gossip = build_gossip_channel(

@@ -39,32 +39,40 @@ __all__ = [
 ]
 
 
-def model_plane_layout(cfg: ModelConfig, tp: int = 1) -> PlaneLayout:
+def model_plane_layout(
+    cfg: ModelConfig, tp: int = 1, model_axis: str = "model"
+) -> PlaneLayout:
     """The flat-plane layout of this model's per-node parameter tree.
 
     ``TrainConfig(flat_planes=True)`` keeps the optimizer and channel hot
     state packed in this layout across steps; the step, the state
     initializer and the resume path must all derive it from the same
-    template, which this helper pins (abstract — no allocation).  Flat
-    planes currently require ``tp == 1`` (with model parallelism the
-    local leaf shards would need their own layout per mesh column; the
-    per-leaf path remains the tp > 1 production path).
+    template, which this helper pins (abstract — no allocation).  At
+    ``tp > 1`` the layout is sharded: the model's ``param_specs`` decide
+    which leaves split over ``model_axis``, and every mesh column gets
+    its own local ``(rows, LANES)`` buckets (see
+    :class:`~repro.core.planes.PlaneLayout`).
     """
-    if tp != 1:
-        raise NotImplementedError(
-            "flat_planes requires tp == 1 for now (plane layout x model "
-            "parallelism is a ROADMAP follow-up); use the per-leaf path"
-        )
     abs_params = jax.eval_shape(
         lambda k: T.init_params(k, cfg, tp), jax.random.key(0)
     )
-    return PlaneLayout.build(abs_params)
+    if tp == 1:
+        return PlaneLayout.build(abs_params)
+    return PlaneLayout.build(
+        abs_params, tp=tp, shardings=T.param_specs(cfg, tp, model_axis),
+        model_axis=model_axis,
+    )
 
 
 def _plane_pspec(layout: PlaneLayout) -> Tree:
-    """Per-node PartitionSpec tree of a plane dict: each bucket is one
-    unsharded (rows, LANES) buffer (tp == 1 by construction)."""
-    return {key: P(None, None) for key in layout.segments}
+    """Per-node PartitionSpec tree of a plane dict.
+
+    At tp == 1 each bucket is one unsharded ``(rows, LANES)`` buffer; a
+    sharded layout stacks the tp per-rank row blocks along the row axis,
+    so the buffer splits over the model axis and each mesh column sees
+    exactly its local bucket inside shard_map."""
+    m = layout.model_axis if layout.tp > 1 else None
+    return {key: P(m, None) for key in layout.segments}
 
 
 def _prepend_axis(spec_tree: Tree, axes) -> Tree:
@@ -131,10 +139,10 @@ def make_train_state_fn(
         chan_template: Tree = params
         if plane_layout is not None:
             opt_state = {
-                k: plane_layout.pack(v, dtype=jnp.float32)
+                k: plane_layout.pack_global(v, dtype=jnp.float32)
                 for k, v in opt_state.items()
             }
-            chan_template = plane_layout.pack(params, dtype=jnp.float32)
+            chan_template = plane_layout.pack_global(params, dtype=jnp.float32)
         opt_state = jax.tree.map(stack, opt_state)
         chan = (
             jax.tree.map(stack, channel.init(chan_template))
@@ -228,7 +236,7 @@ def ensure_channel_state(
         # flat fast path: the channel state lives in plane layout, so the
         # expected structure comes from the packed f32 payload template
         template = jax.eval_shape(
-            lambda p: plane_layout.pack(
+            lambda p: plane_layout.pack_global(
                 jax.tree.map(lambda x: x[0], p), dtype=jnp.float32
             ),
             state["params"],
@@ -267,8 +275,27 @@ def ensure_channel_state(
     return {**state, "channel": merged}
 
 
+def _check_same_global_template(a: PlaneLayout, b: PlaneLayout) -> None:
+    ta, tb = a.global_template(), b.global_template()
+    if jax.tree.structure(ta) != jax.tree.structure(tb):
+        raise ValueError(
+            "checkpoint plane layout and current layout disagree on tree "
+            "structure — the checkpoint was written for a different model"
+        )
+    for la, lb in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+        if la.shape != lb.shape or la.dtype != lb.dtype:
+            raise ValueError(
+                f"global leaf mismatch between checkpoint plane layout and "
+                f"current layout: {la.shape}/{la.dtype} vs "
+                f"{lb.shape}/{lb.dtype} — tp-dependent padding "
+                f"(vocab_padded / n_heads_padded) differs between the two "
+                f"tp values, so the planes are not convertible"
+            )
+
+
 def reconcile_plane_state(
-    state: Tree, plane_layout: PlaneLayout, flat_planes: bool
+    state: Tree, plane_layout: PlaneLayout, flat_planes: bool,
+    stored_layout: PlaneLayout | None = None,
 ) -> Tree:
     """Convert a restored TrainState's optimizer bucket between tree and
     plane form, so checkpoints are interchangeable across the
@@ -282,17 +309,34 @@ def reconcile_plane_state(
     :func:`ensure_channel_state`, exactly like any other structural
     change.  All optimizer buckets are f32 by construction, packed and
     unpacked with the stacked node axis preserved.
+
+    ``stored_layout`` is the layout the checkpoint was *written* with
+    (from the V3 manifest's ``plane_tp``); when it differs from
+    ``plane_layout`` a plane-form bucket first round-trips through the
+    global tree (``stored.unpack_global`` -> ``current.pack_global``), so
+    checkpoints written at ``tp=k`` restore at ``tp=1`` and vice versa —
+    provided both tp values pad the model identically (asserted on the
+    global templates).
     """
     if "opt" not in state:
         return state
+    stored = stored_layout if stored_layout is not None else plane_layout
     buckets = set(plane_layout.segments)
+    cross_tp = stored.tp != plane_layout.tp
+    if cross_tp:
+        _check_same_global_template(stored, plane_layout)
     new_opt: Tree = {}
     for k, v in state["opt"].items():
         is_plane = isinstance(v, dict) and set(v) == buckets
+        if is_plane and cross_tp:
+            v = stored.unpack_global(v, dtype=jnp.float32, leading=1)
+            is_plane = False
         if flat_planes and not is_plane:
-            new_opt[k] = plane_layout.pack(v, dtype=jnp.float32, leading=1)
+            new_opt[k] = plane_layout.pack_global(v, dtype=jnp.float32,
+                                                  leading=1)
         elif not flat_planes and is_plane:
-            new_opt[k] = plane_layout.unpack(v, dtype=jnp.float32, leading=1)
+            new_opt[k] = plane_layout.unpack_global(v, dtype=jnp.float32,
+                                                    leading=1)
         else:
             new_opt[k] = v
     return {**state, "opt": new_opt}

@@ -20,6 +20,11 @@ Validates the machine-readable invariants the kernel subsystems promise
   gossips`` vs plane ``buckets x edge-classes x gossips`` (the analytic
   ppermute-path count; the distributed tier cross-checks it against
   jaxpr-counted ppermutes on a real mesh);
+* the **sharded-plane** row (``tree_workload.tp_sharded``): one mesh
+  column of a tp-sharded layout launches no more ``pallas_call``s than the
+  tp == 1 collapse plus the model-axis collective budget — which must be
+  0 (gossip ships per-rank local shards over the node axes only) — and
+  its per-rank node-axis collective count matches tp == 1;
 * wall-clock backstop: the plane path's *aggregate* time over the timed
   tails (dispatched per-leaf baseline — the accelerator launch pattern)
   is within ``PLANE_AGG_SLACK`` of the per-leaf path, and no single
@@ -98,6 +103,47 @@ def main() -> int:
                 f"classes({classes}) x gossips({gossips})"
             )
 
+    tps = tree.get("tp_sharded")
+    if not tps:
+        errors.append(
+            "missing tree_workload.tp_sharded (sharded-plane bench did not run)"
+        )
+    else:
+        tp = tps.get("tp", 0)
+        budget = tps.get("model_axis_collectives_per_step", -1)
+        if budget != 0:
+            errors.append(
+                f"tp_sharded: model-axis collective budget is {budget}, "
+                "expected 0 — the sharded plane step must not add "
+                "model-axis collectives"
+            )
+        if not tps.get("per_algorithm"):
+            errors.append("tp_sharded: no algorithms recorded")
+        for algo, row in tps.get("per_algorithm", {}).items():
+            l1 = row.get("launches_plane_tp1")
+            lk = row.get(f"launches_plane_tp{tp}")
+            if l1 is None or lk is None or lk > l1 + max(budget, 0):
+                errors.append(
+                    f"tp_sharded/{algo}: per-rank launches at tp={tp} ({lk}) "
+                    f"exceed tp=1 ({l1}) + model-axis budget ({budget}) — "
+                    "the per-rank O(buckets x stages) collapse regressed"
+                )
+            stages = row.get("stages", -1)
+            nb = row.get("n_buckets", -1)
+            if l1 != nb * stages:
+                errors.append(
+                    f"tp_sharded/{algo}: tp=1 launches {l1} != "
+                    f"buckets({nb}) x stages({stages})"
+                )
+            if row.get(f"collectives_plane_tp{tp}") != row.get(
+                "collectives_plane_tp1"
+            ):
+                errors.append(
+                    f"tp_sharded/{algo}: per-rank node-axis collectives at "
+                    f"tp={tp} ({row.get(f'collectives_plane_tp{tp}')}) != "
+                    f"tp=1 ({row.get('collectives_plane_tp1')})"
+                )
+
     timed = [
         (a, per_algo[a]) for a in tree.get("timed_algorithms", []) if a in per_algo
     ]
@@ -131,7 +177,8 @@ def main() -> int:
         f"KERNEL BENCH GATE: ok ({len(tails)} fused tails, "
         f"{len(per_algo)} tree rows, plane launches "
         f"O(stages) x {n_buckets} bucket(s), aggregate plane speedup "
-        f"{tree.get('plane_speedup_aggregate')})"
+        f"{tree.get('plane_speedup_aggregate')}, tp={tps.get('tp')} sharded "
+        f"row per-rank launches == tp=1 with 0 model-axis collectives)"
     )
     return 0
 

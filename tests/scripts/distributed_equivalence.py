@@ -29,28 +29,30 @@ from repro.train.train_state import init_train_state
 MODE = sys.argv[1] if len(sys.argv) > 1 else "baseline"
 
 if MODE.startswith("planes"):
-    # Flat-plane fast path vs the per-leaf path on the same 8-node mesh:
+    # Flat-plane fast path vs the per-leaf path on the same 8-device mesh:
     # identical trajectories (leaf-exact) AND the collapsed collective
     # count — the plane step must ppermute one buffer per dtype bucket per
     # edge class where the per-leaf step ppermutes every pytree leaf.
-    # "planes" runs plain decentlam; "planes-delayed" runs decentlam-sa
-    # over a delay-2 DelayedPpermuteChannel (ring buffers in plane layout).
+    # "planes" runs plain decentlam on 8 nodes x tp=1; "planes-delayed"
+    # runs decentlam-sa over a delay-2 DelayedPpermuteChannel (ring buffers
+    # in plane layout); "planes-tp" reruns BOTH cases on a 4-node x 2-way-TP
+    # mesh with the sharded layout — per-rank local buckets, same collapsed
+    # ppermute count as tp=1 (the model axis adds no gossip collectives).
     from repro.launch.costmodel import count_primitive
     from repro.train.train_state import init_train_state as _init_state
     from repro.train.train_state import model_plane_layout
 
-    N, TP, S = 8, 1, 32
-    delayed = MODE == "planes-delayed"
+    S = 32
+    N, TP = (4, 2) if MODE == "planes-tp" else (8, 1)
+    if MODE == "planes-tp":
+        cases = [("decentlam", 0), ("decentlam-sa", 2)]
+    elif MODE == "planes-delayed":
+        cases = [("decentlam-sa", 2)]
+    else:
+        cases = [("decentlam", 0)]
     mesh = jax.make_mesh((N, TP), ("data", "model"))
     cfg = tiny_lm(
         n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256
-    )
-    common = dict(
-        algorithm="decentlam-sa" if delayed else "decentlam",
-        topology="ring", momentum=0.9,
-        gossip_delay=2 if delayed else 0,
-        schedule=ScheduleConfig(kind="constant", peak_lr=1e-2),
-        runtime=T.RuntimeConfig(dtype="float32", remat=False),
     )
     data = SyntheticLM(SyntheticLMConfig(
         vocab_size=256, seq_len=S, per_node_batch=2, n_nodes=N,
@@ -64,41 +66,59 @@ if MODE.startswith("planes"):
     n_buckets = len(layout.segments)
     classes = len(build_topology("ring", N).edge_classes(0))
 
-    finals, counts = {}, {}
-    for flat in (False, True):
-        tcfg = TrainConfig(flat_planes=flat, **common)
-        opt = make_optimizer(tcfg.opt_config())
-        step_fn, _, bspecs, channel = build_train_step(
-            cfg, tcfg, mesh, node_axes=("data",)
+    for algo, delay in cases:
+        common = dict(
+            algorithm=algo, topology="ring", momentum=0.9, gossip_delay=delay,
+            schedule=ScheduleConfig(kind="constant", peak_lr=1e-2),
+            runtime=T.RuntimeConfig(dtype="float32", remat=False),
         )
-        state = _init_state(
-            jax.random.key(0), cfg, opt, N, TP, mesh=mesh, node_axes=("data",),
-            channel=channel, plane_layout=layout if flat else None,
-        )
-        bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
-                              is_leaf=lambda x: isinstance(x, P))
-        b0 = jax.tree.map(lambda x, sh: jax.device_put(jnp.asarray(x), sh),
-                          data.batch(0), bshard)
-        counts[flat] = count_primitive(
-            jax.make_jaxpr(step_fn)(state, b0), "ppermute"
-        )
-        for k in range(3):
-            b = jax.tree.map(lambda x, sh: jax.device_put(jnp.asarray(x), sh),
-                             data.batch(k), bshard)
-            state, metrics = step_fn(state, b)
-        assert np.isfinite(float(metrics["loss"]))
-        finals[flat] = jax.device_get(state["params"])
+        finals, counts = {}, {}
+        for flat in (False, True):
+            tcfg = TrainConfig(flat_planes=flat, **common)
+            opt = make_optimizer(tcfg.opt_config())
+            step_fn, _, bspecs, channel = build_train_step(
+                cfg, tcfg, mesh, node_axes=("data",)
+            )
+            state = _init_state(
+                jax.random.key(0), cfg, opt, N, TP, mesh=mesh,
+                node_axes=("data",),
+                channel=channel, plane_layout=layout if flat else None,
+            )
+            bshard = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+            b0 = jax.tree.map(lambda x, sh: jax.device_put(jnp.asarray(x), sh),
+                              data.batch(0), bshard)
+            counts[flat] = count_primitive(
+                jax.make_jaxpr(step_fn)(state, b0), "ppermute"
+            )
+            for k in range(3):
+                b = jax.tree.map(
+                    lambda x, sh: jax.device_put(jnp.asarray(x), sh),
+                    data.batch(k), bshard,
+                )
+                state, metrics = step_fn(state, b)
+            assert np.isfinite(float(metrics["loss"]))
+            finals[flat] = jax.device_get(state["params"])
 
-    maxerr = max(
-        float(np.max(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
-        for a, b in zip(jax.tree.leaves(finals[False]), jax.tree.leaves(finals[True]))
-    )
-    assert maxerr == 0.0, f"{MODE}: plane vs per-leaf trajectories differ: {maxerr}"
-    assert counts[False] == classes * n_leaves, (counts, classes, n_leaves)
-    assert counts[True] == classes * n_buckets, (counts, classes, n_buckets)
-    print(f"{MODE}: OK bit-exact; ppermutes/step {counts[False]} -> "
-          f"{counts[True]} ({n_leaves} leaves -> {n_buckets} bucket(s) x "
-          f"{classes} edge classes)")
+        maxerr = max(
+            float(np.max(np.abs(
+                np.asarray(a, np.float32) - np.asarray(b, np.float32)
+            )))
+            for a, b in zip(jax.tree.leaves(finals[False]),
+                            jax.tree.leaves(finals[True]))
+        )
+        assert maxerr == 0.0, (
+            f"{MODE}/{algo}: plane vs per-leaf trajectories differ: {maxerr}"
+        )
+        # the per-device program carries one ppermute per leaf (per-leaf
+        # path) / per bucket (plane path) per edge class, REGARDLESS of tp:
+        # the tp > 1 counts must equal the tp == 1 collapse exactly
+        assert counts[False] == classes * n_leaves, (counts, classes, n_leaves)
+        assert counts[True] == classes * n_buckets, (counts, classes, n_buckets)
+        print(f"{MODE}/{algo}: OK bit-exact; ppermutes/step {counts[False]} "
+              f"-> {counts[True]} ({n_leaves} leaves -> {n_buckets} "
+              f"bucket(s) x {classes} edge classes, tp={TP})")
+    print(f"{MODE}: OK bit-exact")
     sys.exit(0)
 
 if MODE == "sparse":

@@ -76,6 +76,60 @@ def test_v3_dtype_manifest_roundtrip(tmp_path):
     )
 
 
+def test_v3_fp8_plane_bucket_roundtrip(tmp_path):
+    """fp8 plane buckets (float8_e4m3fn / float8_e5m2 — quantized gossip
+    payload planes) survive the npz void round-trip bit-exactly: the V3
+    manifest declares the dtype by name and restore reinterprets the
+    1-byte voids, never sniffing."""
+    import ml_dtypes
+
+    st = _state()
+    rng = np.random.default_rng(3)
+    e4m3 = rng.standard_normal((4, 6)).astype(ml_dtypes.float8_e4m3fn)
+    e5m2 = rng.standard_normal((64,)).astype(ml_dtypes.float8_e5m2)
+    st["channel"] = {
+        "comp": {
+            "float8_e4m3fn": jnp.asarray(e4m3),
+            "float8_e5m2": jnp.asarray(e5m2),
+        }
+    }
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, st)
+    restored, manifest = restore_checkpoint(d)
+    assert manifest["dtypes"]["channel/comp/float8_e4m3fn"] == "float8_e4m3fn"
+    assert manifest["dtypes"]["channel/comp/float8_e5m2"] == "float8_e5m2"
+    for name, want in (("float8_e4m3fn", e4m3), ("float8_e5m2", e5m2)):
+        got = np.asarray(restored["channel"]["comp"][name])
+        assert got.dtype == want.dtype
+        # bit-exact: compare raw bytes (fp8 NaN payloads don't ==)
+        np.testing.assert_array_equal(
+            got.view(np.uint8), want.view(np.uint8)
+        )
+
+
+def test_unknown_manifest_dtype_rejected(tmp_path):
+    """A manifest declaring a dtype neither numpy nor ml_dtypes knows is a
+    corrupt/future checkpoint: restore fails with a clean ValueError
+    instead of silently misreading the bytes."""
+    import json
+    import os
+
+    import pytest
+
+    st = _state(step=2)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, st)
+    mpath = os.path.join(d, "step_00000002", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    key = next(iter(manifest["dtypes"]))
+    manifest["dtypes"][key] = "float6_e3m2"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="unknown dtype 'float6_e3m2'"):
+        restore_checkpoint(d)
+
+
 def test_v2_checkpoint_migration(tmp_path):
     """A V2-era checkpoint (manifest without "format"/"dtypes", bf16 stored
     as numpy's opaque 2-byte void) must still restore its bf16 buffers —

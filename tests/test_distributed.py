@@ -36,13 +36,16 @@ def test_distributed_train_equivalence(mode):
     assert "OK" in out
 
 
-@pytest.mark.parametrize("mode", ["planes", "planes-delayed"])
+@pytest.mark.parametrize("mode", ["planes", "planes-delayed", "planes-tp"])
 def test_flat_planes_shard_map_parity_and_collective_count(mode):
     """The flat-plane step's trajectory is bit-exact with the per-leaf step
-    on a real 8-node mesh, and its lowered jaxpr carries exactly
+    on a real 8-device mesh, and its lowered jaxpr carries exactly
     O(dtype-buckets x edge-classes) ppermutes where the per-leaf step
     carries O(leaves x edge-classes) — the tentpole's collective-count
-    claim, measured on the actual program."""
+    claim, measured on the actual program.  "planes-tp" reruns the claim on
+    a 4-node x 2-way-TP mesh with the *sharded* layout (decentlam +
+    delay-2 decentlam-sa): per-rank local buckets, ppermute count equal to
+    the tp=1 collapse."""
     out = _run("distributed_equivalence.py", mode)
     assert "OK bit-exact" in out
 

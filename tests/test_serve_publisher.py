@@ -124,6 +124,42 @@ def test_publisher_plane_dict_source():
     )
 
 
+def test_publisher_sharded_plane_dict_source():
+    """When training runs a sharded layout (tp > 1) the publisher gathers
+    the stacked-shard plane buckets back to the global tree and re-packs
+    into the rank-free snapshot layout: consumers see contiguous global
+    leaves, bit-exact with the source parameters, regardless of tp."""
+    from jax.sharding import PartitionSpec as P
+
+    tree = _tmpl(9)
+    specs = {
+        "emb": P("model", None),  # 40 vocab rows -> 20 per rank
+        "w1": P(None, None),  # dims not divisible by 2: replicated
+        "w2": P(None),
+        "b": None,
+    }
+    lay = PlaneLayout.build(tree, tp=2, shardings=specs)
+    assert lay.sharded
+    pub = WeightPublisher(lay, check_consistency=True)
+    # the snapshot layout is the rank-free global one, not the sharded one
+    assert pub.layout.tp == 1
+
+    source = {
+        k: np.asarray(v) for k, v in lay.pack_global(tree).items()
+    }
+    for k in source:
+        assert source[k].shape == (2 * lay.rows[k], LANES)
+    assert pub.offer(source, version=1, gap=0)
+    for key in tree:
+        got = pub.current.params[key]
+        assert got.shape == np.asarray(tree[key]).shape
+        assert got.tobytes() == np.asarray(tree[key]).tobytes()
+    # zero-copy contract holds on the global buffers
+    assert np.shares_memory(
+        pub.current.params["w1"], pub.current.planes["float32"]
+    )
+
+
 def test_stale_node_never_publishes():
     """The acceptance scenario: on a ring where every edge incident to node
     0 carries delay 3, nodes 0, 1 and 3 run a consensus gap of 3 after

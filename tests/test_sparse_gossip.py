@@ -467,6 +467,81 @@ def test_tracker_rejects_bad_hit_mask_size(moe_tracker):
         tracker.step_masks({moe_name: np.zeros(3, np.float32)})
 
 
+def test_tracker_sharded_layout_slices_rank_block():
+    """On a sharded layout the touch inputs stay GLOBAL (token ids over the
+    full vocab, router hits over all experts) and ``step_masks(...,
+    shard_rank=r)`` lights exactly rank r's local rows; without
+    ``shard_rank`` it refuses."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.planes import LANES, PlaneLayout
+
+    tp, vocab, d = 2, 64, 512  # local: 32 vocab units x 512 = 16 rows/rank
+    lg, ne, dm, df = 1, 4, 96, 352  # expert unit = 96*352 elements
+    tmpl = {
+        "embed": {"table": jnp.zeros((vocab, d), jnp.float32)},
+        "groups": {"g0": {"moe": {
+            "w_in": jnp.zeros((lg, ne, dm, df), jnp.float32),
+        }}},
+        "final_norm": {"scale": jnp.zeros((d,), jnp.float32)},
+    }
+    specs = {
+        "embed": {"table": P("model", None)},
+        "groups": {"g0": {"moe": {"w_in": P(None, "model", None, None)}}},
+        "final_norm": {"scale": None},
+    }
+    layout = PlaneLayout.build(tmpl, tp=tp, shardings=specs)
+    tracker = RowTracker.for_model(layout, tmpl, tied_embeddings=False)
+
+    emb = next(s for s in tracker.sources if s.name == "embed")
+    moe = next(s for s in tracker.sources if s.kind == "moe")
+    assert emb.unit_grid == (vocab,) and emb.shard_parts == tp
+    assert emb.units == vocab // tp  # local
+    assert moe.unit_grid == (lg, ne) and moe.shard_dim == 1
+    assert moe.units == lg * ne // tp
+
+    with pytest.raises(ValueError, match="shard_rank"):
+        tracker.step_masks({"embed": jnp.zeros((1,), jnp.int32)})
+
+    # global touches: tokens 3 and 40 (rank 0 / rank 1), expert 2 (rank 1)
+    hits = np.zeros((lg, ne), np.float32)
+    hits[0, 2] = 1.0
+    units = {"embed": jnp.asarray([3, 40], jnp.int32),
+             "moe/g0": jnp.asarray(hits)}
+    for rank in range(tp):
+        masks = tracker.step_masks(units, shard_rank=jnp.int32(rank))
+        got = np.asarray(masks[emb.bucket])[
+            emb.row_start: emb.row_start + emb.rows
+        ]
+        want = np.zeros(emb.rows, bool)
+        for tok in (3, 40):
+            lo = tok - rank * (vocab // tp)
+            if 0 <= lo < vocab // tp:
+                a, b = lo * emb.unit_size, (lo + 1) * emb.unit_size
+                want[a // LANES: (b - 1) // LANES + 1] = True
+        np.testing.assert_array_equal(got, want, err_msg=f"embed rank {rank}")
+
+        got_moe = np.asarray(masks[moe.bucket])[
+            moe.row_start: moe.row_start + moe.rows
+        ]
+        # expert 2 lives on rank 1 (local unit 0 there)
+        want_moe = np.zeros(moe.rows, bool)
+        if rank == 1:
+            a, b = 0, moe.unit_size
+            want_moe[a // LANES: (b - 1) // LANES + 1] = True
+        np.testing.assert_array_equal(
+            got_moe, want_moe, err_msg=f"moe rank {rank}"
+        )
+        # the replicated dense leaf is base-dirty on every rank
+        norm_seg = next(
+            seg for segs in layout.segments.values() for seg in segs
+            if seg.index == 1  # final_norm/scale in dict flatten order
+        )
+        assert np.asarray(masks["float32"])[
+            norm_seg.row_start: norm_seg.row_start + norm_seg.rows
+        ].all()
+
+
 # ---------------------------------------------------------------------------
 # sim integration (condensed engine pins; the full matrix lives in test_sim)
 # ---------------------------------------------------------------------------
