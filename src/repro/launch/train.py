@@ -114,6 +114,7 @@ def main() -> None:
     from ..data.synthetic import SyntheticLM, SyntheticLMConfig
     from ..models.transformer import RuntimeConfig
     from ..train.checkpoint import (
+        check_plane_manifest,
         elastic_reshape,
         restore_checkpoint,
         save_checkpoint,
@@ -185,16 +186,22 @@ def main() -> None:
         # checkpoints are interchangeable across --flat-planes AND across
         # tensor-parallel degrees: a plane-form opt state written at a
         # different tp (the manifest's "plane_tp") round-trips through the
-        # stored layout's global tree before repacking for this mesh
-        # manifests without "plane_tp" predate sharded layouts: any
-        # plane-form opt state they carry was written at tp == 1
+        # stored layout's global tree before repacking for this mesh.
+        # Manifests without "plane_tp" predate sharded layouts: any
+        # plane-form opt state they carry was written at tp == 1, so the
+        # stored layout defaults to the tp=1 one.  Tree-form opt states
+        # (the per-leaf production path) never consult it — reconcile only
+        # checks cross-tp layout compatibility when a plane actually needs
+        # converting.
+        cur_layout = layout or model_plane_layout(cfg, tp)
         stored_tp = int(manifest.get("plane_tp") or 1)
         stored_layout = (
             model_plane_layout(cfg, stored_tp) if stored_tp != tp else None
         )
+        check_plane_manifest(manifest, stored_layout or cur_layout)
         host_state = reconcile_plane_state(
-            host_state, layout or model_plane_layout(cfg, tp),
-            args.flat_planes, stored_layout=stored_layout,
+            host_state, cur_layout, args.flat_planes,
+            stored_layout=stored_layout,
         )
         # channel state (delay buffers, error feedback, telemetry) resumes
         # when shapes match; anything missing/invalidated re-inits to zeros

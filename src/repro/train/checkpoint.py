@@ -49,6 +49,7 @@ Tree = Any
 __all__ = [
     "save_checkpoint",
     "restore_checkpoint",
+    "check_plane_manifest",
     "latest_step",
     "elastic_reshape",
 ]
@@ -192,6 +193,39 @@ def save_checkpoint(directory: str, state: Tree, *, metadata: dict | None = None
         shutil.rmtree(tmp, ignore_errors=True)
         raise
     return os.path.join(directory, f"step_{step:08d}")
+
+
+def check_plane_manifest(manifest: dict, stored_layout) -> None:
+    """Cross-check a resume's rebuilt stored :class:`PlaneLayout` against
+    the V3 manifest's shard metadata (``plane_rows`` / ``plane_model_axis``).
+
+    The resume path reconstructs the written layout purely from the
+    current model config plus the manifest's ``plane_tp``; if the model
+    config drifted between write and resume, the rebuilt layout silently
+    disagrees with the one the planes were packed with and the mismatch
+    only surfaces as a shape assert deep inside ``unpack``.  This check
+    fails fast with an actionable error instead.  Manifests without plane
+    metadata (pre-sharded-layout, or written with ``flat_planes`` off)
+    pass through untouched.
+    """
+    rows = manifest.get("plane_rows")
+    if rows is not None:
+        actual = {k: int(v) for k, v in stored_layout.rows.items()}
+        declared = {k: int(v) for k, v in rows.items()}
+        if declared != actual:
+            raise ValueError(
+                f"checkpoint manifest plane_rows {declared} do not match "
+                f"the layout rebuilt from the current model config at "
+                f"tp={stored_layout.tp} ({actual}) — the model config "
+                f"changed between checkpoint write and resume, so the "
+                f"stored planes cannot be reinterpreted"
+            )
+    axis = manifest.get("plane_model_axis")
+    if axis is not None and axis != stored_layout.model_axis:
+        raise ValueError(
+            f"checkpoint manifest plane_model_axis {axis!r} does not match "
+            f"the current layout's model axis {stored_layout.model_axis!r}"
+        )
 
 
 def latest_step(directory: str) -> int | None:

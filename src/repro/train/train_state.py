@@ -315,20 +315,26 @@ def reconcile_plane_state(
     ``plane_layout`` a plane-form bucket first round-trips through the
     global tree (``stored.unpack_global`` -> ``current.pack_global``), so
     checkpoints written at ``tp=k`` restore at ``tp=1`` and vice versa —
-    provided both tp values pad the model identically (asserted on the
-    global templates).
+    provided both tp values pad the model identically.  That global-
+    template compatibility is asserted only when a plane-form bucket
+    actually needs converting: a tree-form opt state (the per-leaf
+    production path) resumes across tp values regardless of padding
+    differences, since no plane is ever interpreted through the wrong
+    layout.
     """
     if "opt" not in state:
         return state
     stored = stored_layout if stored_layout is not None else plane_layout
     buckets = set(plane_layout.segments)
     cross_tp = stored.tp != plane_layout.tp
-    if cross_tp:
-        _check_same_global_template(stored, plane_layout)
+    templates_checked = False
     new_opt: Tree = {}
     for k, v in state["opt"].items():
         is_plane = isinstance(v, dict) and set(v) == buckets
         if is_plane and cross_tp:
+            if not templates_checked:
+                _check_same_global_template(stored, plane_layout)
+                templates_checked = True
             v = stored.unpack_global(v, dtype=jnp.float32, leading=1)
             is_plane = False
         if flat_planes and not is_plane:

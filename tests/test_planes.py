@@ -728,6 +728,90 @@ def test_reconcile_plane_state_cross_tp(tmp_path):
         reconcile_plane_state(state, other, True, stored_layout=lay2)
 
 
+def test_reconcile_tree_form_ignores_cross_tp_padding():
+    """A tree-form opt state resumes across tp even when tp-dependent
+    padding (vocab_padded) differs between the stored and current layouts
+    — the per-leaf production path.  Regression: the global-template
+    compatibility check must run lazily, only when a plane-form bucket
+    actually needs cross-tp conversion, not eagerly whenever
+    ``stored.tp != plane_layout.tp``."""
+    import dataclasses
+
+    from repro.train.train_state import (
+        model_plane_layout, reconcile_plane_state,
+    )
+
+    # vocab 13 does not divide tp=2, so the tp=2 template pads it to 14
+    # while tp=1 keeps 13 — the layouts' global templates disagree
+    cfg = dataclasses.replace(_tp_cfg(), vocab_size=13)
+    lay1 = model_plane_layout(cfg, 1)
+    lay2 = model_plane_layout(cfg, 2)
+    with pytest.raises(ValueError, match="mismatch|structure"):
+        # sanity: these layouts really are plane-inconvertible
+        from repro.train.train_state import _check_same_global_template
+
+        _check_same_global_template(lay1, lay2)
+
+    n = 3
+    m = jax.tree.map(
+        lambda a: jnp.asarray(
+            RNG.standard_normal((n,) + a.shape), jnp.float32
+        ),
+        lay2.global_template(),
+    )
+    state = {"step": jnp.int32(5), "params": {}, "opt": {"m": m}}
+    # tp=1-written manifest resumed at tp=2 per-leaf: passes through intact
+    out = reconcile_plane_state(state, lay2, False, stored_layout=lay1)
+    assert _tree_equal(out["opt"]["m"], m)
+    # and the flat-planes resume of a tree-form state packs with the
+    # *current* layout without ever touching the stored one
+    packed = reconcile_plane_state(state, lay2, True, stored_layout=lay1)
+    assert _tree_equal(packed["opt"]["m"],
+                       lay2.pack_global(m, dtype=jnp.float32, leading=1))
+
+
+def test_check_plane_manifest_detects_config_drift(tmp_path):
+    """The resume path cross-checks the manifest's ``plane_rows`` /
+    ``plane_model_axis`` against the layout rebuilt from the current
+    config, so config drift fails fast instead of deep inside unpack."""
+    import dataclasses
+
+    from repro.train.checkpoint import (
+        check_plane_manifest, restore_checkpoint, save_checkpoint,
+    )
+    from repro.train.train_state import model_plane_layout
+
+    cfg = _tp_cfg()
+    lay2 = model_plane_layout(cfg, 2)
+    m = jax.tree.map(
+        lambda a: jnp.asarray(
+            RNG.standard_normal((1,) + a.shape), jnp.float32
+        ),
+        lay2.global_template(),
+    )
+    state = {
+        "step": jnp.int32(5), "params": {},
+        "opt": {"m": lay2.pack_global(m, dtype=jnp.float32, leading=1)},
+    }
+    save_checkpoint(str(tmp_path), jax.device_get(state), plane_layout=lay2)
+    _, manifest = restore_checkpoint(str(tmp_path))
+
+    # same config: clean
+    check_plane_manifest(manifest, model_plane_layout(cfg, 2))
+    # manifests without plane metadata (pre-sharded-layout) pass through
+    check_plane_manifest({"format": 3, "step": 5}, lay2)
+    # drifted model config: loud, actionable failure
+    drifted = model_plane_layout(
+        dataclasses.replace(cfg, d_ff=cfg.d_ff * 2), 2
+    )
+    with pytest.raises(ValueError, match="plane_rows"):
+        check_plane_manifest(manifest, drifted)
+    with pytest.raises(ValueError, match="plane_model_axis"):
+        check_plane_manifest(
+            {**manifest, "plane_model_axis": "tensor"}, lay2
+        )
+
+
 def test_ensure_channel_state_plane_template():
     """A plane-layout TrainState resumes its channel bucket when shapes
     match and zero-inits it when the payload layout changed."""
