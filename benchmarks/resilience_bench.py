@@ -1,0 +1,296 @@
+"""Resilience benchmark: seeded chaos soak + transparency + recovery.
+
+Exercises the fault-tolerant gossip runtime (:mod:`repro.resilience`) on
+the stacked oracle and records machine-checkable claims in
+``BENCH_resilience.json`` (gated by ``tests/ci/check_bench_resilience.py``):
+
+* **empty-schedule transparency** — ``ResilientChannel(ChaosChannel(ch,
+  empty))`` with an all-trusted mask is *bit-exact* with the bare
+  ``StackedChannel`` over a full trajectory for every algorithm in the
+  registry.  The wrappers may cost nothing when chaos is off: every edit
+  they make is a ``where``-select, never an added float.
+
+* **chaos soak** — decentlam-sa on the App. G.2 ring under a seeded
+  drop + NaN-inject + peer-churn schedule, with the full stack live:
+  gap-driven :class:`HealthMonitor` trust updates, self-healing mixing
+  (the dead peer's weight folds into each receiver's self-weight, so every
+  effective W row stays stochastic and DecentLaM's ``1/lr``-scaled
+  correction keeps its mean), NaN quarantine with last-good replay, and a
+  checkpoint-free rejoin cloning a donor's consensus-gated
+  :class:`WeightPublisher` snapshot.  Claims: the run stays finite
+  end-to-end (zero quarantine leaks into momentum), the poison was
+  actually quarantined, and the final bias is bounded relative to the
+  chaos-free run of the same config.
+
+* **recovery** — the rejoined peer's distance to the fleet mean collapses
+  after the rejoin (the donor snapshot + zeroed momentum re-enter
+  consensus; no checkpoint file involved).
+
+Stacked-layout note: the dense ``W @ x`` mix propagates an injected NaN to
+*every* row (``0 * nan = nan``), unlike a real mesh where only graph
+neighbors receive it — so quarantine counts here are fleet-wide per poison
+round.  The guards confine it either way; the mesh-side contract is pinned
+by ``tests/scripts/resilience_distributed.py``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    OptimizerConfig,
+    StackedChannel,
+    bias_to_optimum,
+    build_topology,
+    make_linear_regression,
+    make_optimizer,
+)
+from repro.core.gossip import fleet_node_gaps, make_stacked_mean
+from repro.core.optimizers import ALGORITHMS
+from repro.core.planes import PlaneLayout
+from repro.resilience import (
+    ChaosChannel,
+    ChaosSchedule,
+    Drop,
+    HealthConfig,
+    HealthMonitor,
+    NaNInject,
+    PeerSilence,
+    ResilientChannel,
+    fleet_sender_gaps,
+    rejoin_node,
+    with_trust,
+)
+from repro.serve import WeightPublisher
+
+CONFIG = {
+    "n": 8,
+    "m": 50,
+    "d": 30,
+    "noise": 0.01,
+    "heterogeneity": 1.0,
+    "topology": "ring",
+    "lr": 1e-3,
+    "momentum": 0.8,
+    "n_steps": 300,
+    "seed": 0,
+}
+# the soak's fault windows (steps): node 3 poisons payload entries, node 5
+# fail-stops and rejoins checkpoint-free once the window closes; the drop
+# storm ends at DROP_STOP so the tail shows recovery, not steady-state churn
+NAN_WINDOW = (40, 120)
+SILENCE_WINDOW = (60, 140)
+DROP_STOP = 260
+# convergence gate: final chaos bias vs the bias at the zero initializer
+# (an absolute "did it actually optimize" bound — iid unhealed drops put a
+# noise floor under the trajectory, so a ratio against the near-zero clean
+# bias would gate on noise, not on convergence)
+BIAS_FRACTION_BOUND = 0.1
+
+
+def _problem():
+    cfg = CONFIG
+    return make_linear_regression(
+        n=cfg["n"], m=cfg["m"], d=cfg["d"], noise=cfg["noise"],
+        seed=cfg["seed"], heterogeneity=cfg["heterogeneity"],
+    )
+
+
+def _loop(opt, channel, problem, n_steps, on_step=None):
+    """run_stacked with a host hook between rounds (trust/rejoin surgery)."""
+    n, d = CONFIG["n"], CONFIG["d"]
+    mean = make_stacked_mean(n)
+
+    @jax.jit
+    def one(x, s, ch, k):
+        g = problem.grad(x)
+        return opt.step(
+            x, g, s, lr=jnp.float32(CONFIG["lr"]), step_idx=k, gossip=channel,
+            mean=mean, comp_state=ch,
+        )
+
+    x = jnp.zeros((n, d), jnp.float32)
+    state = {
+        "x": x,
+        "opt": opt.init(x),
+        "ch": channel.init(x),
+    }
+    for k in range(n_steps):
+        x, s, ch = one(state["x"], state["opt"], state["ch"], jnp.int32(k))
+        state = {"x": x, "opt": s, "ch": ch}
+        if on_step is not None:
+            state = on_step(state, k) or state
+    return state
+
+
+def _bitexact_block() -> dict[str, bool]:
+    problem = _problem()
+    topo = build_topology(CONFIG["topology"], CONFIG["n"])
+    out: dict[str, bool] = {}
+    for algorithm in ALGORITHMS:
+        opt = make_optimizer(
+            OptimizerConfig(algorithm=algorithm, momentum=CONFIG["momentum"])
+        )
+        ref = _loop(opt, StackedChannel(topo), problem, 20)
+        wrapped = ResilientChannel(
+            ChaosChannel(StackedChannel(topo), ChaosSchedule())
+        )
+        got = _loop(opt, wrapped, problem, 20)
+        exact = bool(np.array_equal(np.asarray(got["x"]), np.asarray(ref["x"])))
+        for a, b in zip(jax.tree.leaves(ref["opt"]), jax.tree.leaves(got["opt"])):
+            exact = exact and bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        out[algorithm] = exact
+    return out
+
+
+def _soak_block() -> dict:
+    problem = _problem()
+    topo = build_topology(CONFIG["topology"], CONFIG["n"])
+    n = CONFIG["n"]
+    opt = make_optimizer(
+        OptimizerConfig(algorithm="decentlam-sa", momentum=CONFIG["momentum"])
+    )
+
+    # clean reference: same optimizer/config, no chaos
+    clean = _loop(opt, StackedChannel(topo), problem, CONFIG["n_steps"])
+    bias_clean = float(bias_to_optimum(clean["x"], problem.x_star))
+
+    schedule = ChaosSchedule(
+        faults=(
+            Drop(prob=0.05, stop=DROP_STOP),
+            NaNInject(nodes=(3,), start=NAN_WINDOW[0], stop=NAN_WINDOW[1],
+                      prob=0.5, frac=0.5),
+            PeerSilence(nodes=(5,), start=SILENCE_WINDOW[0],
+                        stop=SILENCE_WINDOW[1]),
+        ),
+        seed=CONFIG["seed"],
+    )
+    # suspect_gap=0: any missed round heals on-device the next round (the
+    # delay-0 baseline gap is 0, so this is the tightest safe setting)
+    channel = ResilientChannel(
+        ChaosChannel(StackedChannel(topo), schedule), suspect_gap=0
+    )
+    # death needs 6 consecutive suspect rounds: only a real fail-stop can
+    # do that — iid drops (even back-to-back ones) recover first, so the
+    # monitor never perma-kills a healthy peer (DEAD is terminal for the
+    # gap path by design)
+    mon = HealthMonitor(
+        n, HealthConfig(suspect_after=2, dead_after=6, max_retries=0)
+    )
+    pub = WeightPublisher(
+        PlaneLayout.build({"w": np.zeros(CONFIG["d"], np.float32)}),
+        gap_threshold=2,
+    )
+    applied = mon.trust.copy()
+    log = {"was_dead": False, "rejoin_gap_before": None,
+           "rejoin_gap_after": None, "donor_published": False}
+
+    def drive(state, k):
+        nonlocal applied
+        trust = mon.observe(fleet_sender_gaps(channel, state["ch"]))
+        if 5 in mon.dead():
+            log["was_dead"] = True
+        if k + 1 == SILENCE_WINDOW[1]:
+            xs = np.asarray(state["x"])
+            fleet = xs[[i for i in range(n) if i != 5]].mean(axis=0)
+            log["rejoin_gap_before"] = float(np.linalg.norm(xs[5] - fleet))
+            gaps = fleet_node_gaps(channel, state["ch"])
+            log["donor_published"] = bool(pub.offer(
+                {"w": xs[2]}, version=k + 1, gap=int(gaps[2])
+            ))
+            snap = pub.current.materialize()
+            state = rejoin_node(state, 5, snap.params["w"], params_key="x",
+                                reset=("opt",))
+            mon.report_alive([5])
+            trust = mon.trust
+        if not np.array_equal(trust, applied):
+            state = dict(state)
+            state["ch"] = with_trust(state["ch"], trust)
+            applied = trust.copy()
+        return state
+
+    final = _loop(opt, channel, problem, CONFIG["n_steps"], on_step=drive)
+
+    xs = np.asarray(final["x"])
+    finite = bool(np.isfinite(xs).all()) and all(
+        bool(np.isfinite(np.asarray(leaf)).all())
+        for leaf in jax.tree.leaves(final["opt"])
+    )
+    quarantined = int(np.asarray(final["ch"]["res"]["quarantined"]).sum())
+    events = {
+        k: int(np.asarray(v).sum())
+        for k, v in final["ch"]["in"]["x"]["events"].items()
+    }
+    bias_chaos = float(bias_to_optimum(final["x"], problem.x_star))
+    bias_init = float(bias_to_optimum(
+        jnp.zeros((n, CONFIG["d"]), jnp.float32), problem.x_star
+    ))
+    fleet = xs[[i for i in range(n) if i != 5]].mean(axis=0)
+    log["rejoin_gap_after"] = float(np.linalg.norm(xs[5] - fleet))
+    ratio = bias_chaos / bias_clean if bias_clean > 0 else float("inf")
+    return {
+        "algorithm": "decentlam-sa",
+        "schedule": {
+            "drop_prob": 0.05,
+            "drop_stop": DROP_STOP,
+            "nan_window": list(NAN_WINDOW),
+            "silence_window": list(SILENCE_WINDOW),
+            "seed": CONFIG["seed"],
+        },
+        "bias_init": bias_init,
+        "bias_clean": bias_clean,
+        "bias_chaos": bias_chaos,
+        "bias_ratio_vs_clean": ratio,
+        "bias_fraction_of_init": bias_chaos / bias_init,
+        "bias_fraction_bound": BIAS_FRACTION_BOUND,
+        "converged": finite and bias_chaos <= BIAS_FRACTION_BOUND * bias_init,
+        "finite": finite,
+        "quarantined_total": quarantined,
+        "events": events,
+        "health": {
+            "silent_peer_declared_dead": log["was_dead"],
+            "silent_peer_final_state": mon.states()[5],
+        },
+        "recovery": {
+            "donor_published": log["donor_published"],
+            "rejoin_gap_before": log["rejoin_gap_before"],
+            "rejoin_gap_after": log["rejoin_gap_after"],
+        },
+    }
+
+
+def run(csv: bool = True, json_path: str | None = None) -> dict:
+    bitexact = _bitexact_block()
+    if csv:
+        print("algorithm,wrapped_bitexact")
+        for algorithm, ok in bitexact.items():
+            print(f"{algorithm},{ok}")
+    soak = _soak_block()
+    if csv:
+        print("soak:metric,value")
+        for key in ("bias_init", "bias_clean", "bias_chaos",
+                    "bias_fraction_of_init", "converged", "finite",
+                    "quarantined_total"):
+            print(f"soak:{key},{soak[key]}")
+        print(f"soak:rejoin_gap_before,{soak['recovery']['rejoin_gap_before']}")
+        print(f"soak:rejoin_gap_after,{soak['recovery']['rejoin_gap_after']}")
+
+    payload = {
+        "bench": "resilience",
+        "config": CONFIG,
+        "empty_schedule_bitexact": bitexact,
+        "chaos_soak": soak,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    run(json_path="BENCH_resilience.json")

@@ -7,11 +7,13 @@
 ``BENCH_sim.json`` (per-scenario bias/throughput under the cluster
 simulator), ``serving_microbench`` writes ``BENCH_serve.json``
 (request throughput, snapshot-handoff cost, publish-rate-vs-gap-threshold),
-and ``sparse_gossip`` writes ``BENCH_gossip.json`` (row-sparse vs dense
-comm volume + bit-exactness and accounting cross-checks) so the
-perf/robustness trajectory is machine-readable across PRs; all four are
-gated in CI (``tests/ci/check_bench_*.py``).  ``--all-json`` runs exactly
-those four and re-emits every BENCH_*.json in one invocation.
+``sparse_gossip`` writes ``BENCH_gossip.json`` (row-sparse vs dense
+comm volume + bit-exactness and accounting cross-checks), and
+``resilience`` writes ``BENCH_resilience.json`` (chaos-soak convergence +
+wrapper transparency + checkpoint-free recovery) so the perf/robustness
+trajectory is machine-readable across PRs; all five are gated in CI
+(``tests/ci/check_bench_*.py``).  ``--all-json`` runs exactly those five
+and re-emits every BENCH_*.json in one invocation.
 
 Prints ``name,...`` CSV blocks per benchmark:
 
@@ -25,6 +27,7 @@ kernel_microbench           kernel hot-spot timings
 serving_microbench          serving throughput + publication handoff
 sim_scenarios               cluster-scenario bias + throughput
 sparse_gossip               row-sparse vs dense comm volume
+resilience                  chaos soak + fault-tolerant runtime
 ==========================  ====================================
 """
 
@@ -38,6 +41,7 @@ from . import (
     bias_linear_regression,
     comm_volume,
     kernel_microbench,
+    resilience_bench,
     serving_microbench,
     sim_scenarios,
     sparse_gossip,
@@ -55,6 +59,7 @@ BENCHES = {
     "serving_microbench": serving_microbench.run,
     "sim_scenarios": sim_scenarios.run,
     "sparse_gossip": sparse_gossip.run,
+    "resilience": resilience_bench.run,
 }
 
 # benchmark name -> argparse dest of its JSON output path
@@ -63,6 +68,7 @@ JSON_BENCHES = {
     "sim_scenarios": "sim_json",
     "serving_microbench": "serve_json",
     "sparse_gossip": "gossip_json",
+    "resilience": "resilience_json",
 }
 
 
@@ -73,8 +79,9 @@ def main() -> None:
         "--all-json",
         action="store_true",
         help="re-emit every BENCH_*.json in one invocation: runs exactly "
-        "the JSON-writing benchmarks (kernel/sim/serve/gossip) and skips "
-        "the print-only tables — the one-command refresh CI gates expect",
+        "the JSON-writing benchmarks (kernel/sim/serve/gossip/resilience) "
+        "and skips the print-only tables — the one-command refresh CI "
+        "gates expect",
     )
     p.add_argument(
         "--kernels-json",
@@ -95,6 +102,11 @@ def main() -> None:
         "--gossip-json",
         default="BENCH_gossip.json",
         help="where sparse_gossip writes its machine-readable table",
+    )
+    p.add_argument(
+        "--resilience-json",
+        default="BENCH_resilience.json",
+        help="where the resilience benchmark writes its machine-readable table",
     )
     args = p.parse_args()
     if args.only and args.all_json:

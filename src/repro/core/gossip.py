@@ -166,7 +166,7 @@ def fleet_node_gaps(channel: "GossipChannel", state: Tree) -> np.ndarray:
     either direction.  Staleness-free channels return all zeros.
     """
     n = channel.topology.n
-    if getattr(channel, "_depth", 0) == 0:
+    if not channel.has_staleness():
         return np.zeros(n, np.int32)
     if not channel._stacked_layout:
         state = jax.tree.map(lambda x: np.asarray(x)[0], state)
@@ -319,6 +319,15 @@ class GossipChannel:
         )
         return float(sends) * n_leaves * parts
 
+    def has_staleness(self) -> bool:
+        """Whether this transport can ever report a nonzero version gap.
+        The base rule covers the built-in channels (a configured delay
+        ring); wrappers that track liveness (the resilience layer's
+        chaos-induced miss counters) override it so the gap plumbing —
+        :meth:`node_gaps`, :func:`fleet_node_gaps`, the serving gate, the
+        health monitor — sees their staleness without faking a delay."""
+        return getattr(self, "_depth", 0) > 0
+
     def version_gaps(self, state: Tree) -> jax.Array:
         """``(n, n)`` int32 of per-edge iterate-version gaps: entry (i, j) is
         how many rounds old the payload node i mixed from node j in the most
@@ -341,7 +350,7 @@ class GossipChannel:
         transports return scalar 0.  This is what staleness-aware
         algorithms fold into their update
         (:func:`repro.core.update_spec.staleness_damping`)."""
-        if getattr(self, "_depth", 0) == 0:
+        if not self.has_staleness():
             return jnp.int32(0)
         incident = _incident_gaps(self.version_gaps(state))
         if self._stacked_layout:

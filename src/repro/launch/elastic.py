@@ -18,12 +18,72 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Sequence
 
+import numpy as np
+
 from ..core.topology import Topology, TopologySpec, build_topology
 from ..train.checkpoint import elastic_reshape
 
 Tree = Any
 
-__all__ = ["RecoveryPlan", "plan_recovery", "apply_recovery"]
+__all__ = [
+    "RecoveryPlan",
+    "plan_recovery",
+    "apply_recovery",
+    "survivors_connected",
+]
+
+
+def survivors_connected(topo: Topology, dead: Sequence[int]) -> bool:
+    """Whether the union-over-phases gossip graph stays connected on the
+    survivor set.  Connectivity over the period is the right notion for
+    time-varying topologies: one-peer matchings are disconnected in every
+    single phase but mix over the cycle.  A disconnected survivor graph
+    means a reroute would split-brain (each component converges to its own
+    consensus), so the planner must rescale instead."""
+    n = topo.n
+    gone = set(int(d) for d in dead)
+    alive = np.asarray([i for i in range(n) if i not in gone])
+    if alive.size <= 1:
+        return True
+    adj = np.zeros((n, n), bool)
+    for t in range(topo.period):
+        W = np.abs(np.asarray(topo.W(t)))
+        adj |= (W - np.diag(np.diag(W))) > 0
+    sub = adj[np.ix_(alive, alive)]
+    sub |= sub.T
+    reach = np.zeros(alive.size, bool)
+    reach[0] = True
+    frontier = reach.copy()
+    while frontier.any():
+        nxt = sub[frontier].any(axis=0) & ~reach
+        reach |= nxt
+        frontier = nxt
+    return bool(reach.all())
+
+
+def _max_constructible(
+    topology: str | TopologySpec, alive: int
+) -> tuple[int, Topology]:
+    """Largest node count ``<= alive`` the topology family builds at.
+
+    Families differ in which sizes they admit (one-peer-exp wants a power
+    of two, the matching families want even ``n``, ring/exp/full build
+    anywhere), so probe downward from ``alive`` instead of hardcoding the
+    power-of-two floor — at ``alive = 6`` a ring keeps all six survivors
+    where the old rule threw two of them away."""
+    if isinstance(topology, Topology):
+        raise ValueError(
+            "cannot rescale a pre-built Topology instance: pass the family "
+            "name or TopologySpec so the survivor-sized graph can be rebuilt"
+        )
+    for m in range(int(alive), 0, -1):
+        try:
+            return m, build_topology(topology, m)
+        except (AssertionError, ValueError):
+            continue
+    # a family with a minimum size (one-peer-exp needs n >= 2) degrades to
+    # the trivial lone-survivor topology rather than failing the recovery
+    return 1, build_topology("full", 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,10 +108,13 @@ def plan_recovery(
     (the latter can only be rerouted, not rebuilt at a smaller size).
 
     Rerouting keeps the mesh shape (dead indices idle with self-weight 1) —
-    viable while the survivor graph stays connected and the waste (idle
-    devices) is acceptable; otherwise rescale to the largest power-of-two
-    node count that the survivors support (power-of-two keeps every
-    topology family constructible).
+    viable only while the survivor graph stays *connected* (checked over
+    the topology's period union; a split-brain reroute would converge to
+    per-component consensus) and the waste (idle devices) is acceptable.
+    Otherwise rescale to the **largest node count the topology family
+    builds at**, probed downward from the survivor count: ring/exp/full
+    keep every survivor, the matching families round down to even, and
+    one-peer-exp to the nearest power of two.
     """
     dead = tuple(sorted(set(int(d) for d in dead)))
     alive = n_nodes - len(dead)
@@ -59,19 +122,18 @@ def plan_recovery(
 
     if allow_reroute and len(dead) <= max(1, n_nodes // 8):
         base = build_topology(topology, n_nodes)
-        return RecoveryPlan(
-            mode="reroute", n_nodes=n_nodes, topology=base.exclude(dead), dead=dead
-        )
+        if survivors_connected(base, dead):
+            return RecoveryPlan(
+                mode="reroute",
+                n_nodes=n_nodes,
+                topology=base.exclude(dead),
+                dead=dead,
+            )
+        # fall through: few failures, but in the wrong places — a reroute
+        # would partition the mesh, so collapse to consensus and rescale
 
-    new_n = 1
-    while new_n * 2 <= alive:
-        new_n *= 2
-    return RecoveryPlan(
-        mode="rescale",
-        n_nodes=new_n,
-        topology=build_topology(topology, new_n),
-        dead=dead,
-    )
+    new_n, topo = _max_constructible(topology, alive)
+    return RecoveryPlan(mode="rescale", n_nodes=new_n, topology=topo, dead=dead)
 
 
 def apply_recovery(state: Tree, plan: RecoveryPlan) -> Tree:

@@ -87,11 +87,76 @@ def _parse():
                    "and still publish (see fleet_node_gaps)")
     p.add_argument("--serve-requests", dest="serve_requests", type=int,
                    default=8, help="synthetic requests for the serve demo")
+    p.add_argument("--no-finite-guard", dest="finite_guard",
+                   action="store_false",
+                   help="disable the non-finite-gradient skip guard")
+    p.add_argument("--max-skipped-steps", dest="max_skipped_steps", type=int,
+                   default=0,
+                   help="abort once this many steps had their update "
+                   "skipped by the finite guard (0 = no budget)")
+    p.add_argument("--chaos", action="append", default=None, metavar="SPEC",
+                   help="inject a wire fault (repeatable).  SPEC is "
+                   "'KIND[,key=val...]' with KIND in silence|drop|dup|"
+                   "delay|corrupt|nan and keys nodes=0-2 (range) or "
+                   "nodes=0.3.5 (list), start=, stop=, prob=, frac=, bit=. "
+                   "e.g. --chaos 'drop,prob=0.2' "
+                   "--chaos 'silence,nodes=0-1,start=50,stop=120'")
+    p.add_argument("--chaos-seed", dest="chaos_seed", type=int, default=0)
+    p.add_argument("--resilient", action="store_true",
+                   help="wrap the transport in the self-healing "
+                   "ResilientChannel (trust-masked mixing with W-row "
+                   "renormalization + NaN/Inf payload quarantine) and "
+                   "drive its trust mask from a gap-based HealthMonitor")
+    p.add_argument("--resilient-gap", dest="resilient_gap", type=int,
+                   default=None,
+                   help="on-device auto-distrust bound on a sender's "
+                   "version gap (None = host monitor only)")
+    p.add_argument("--health-every", dest="health_every", type=int, default=1,
+                   help="steps between host health-monitor observations "
+                   "when --resilient is set")
     p.add_argument("--log-every", dest="log_every", type=int, default=10)
     p.add_argument("--track-consensus", dest="track_consensus",
                    action="store_true")
     p.add_argument("--dtype", default="float32")
     return p.parse_args()
+
+
+def _parse_chaos(specs, seed):
+    """Build a ChaosSchedule from repeated --chaos 'KIND[,key=val...]' specs."""
+    from ..resilience import (
+        BitCorrupt, ChaosSchedule, Drop, Duplicate, ExtraDelay, NaNInject,
+        PeerSilence,
+    )
+
+    kinds = {"silence": PeerSilence, "drop": Drop, "dup": Duplicate,
+             "delay": ExtraDelay, "corrupt": BitCorrupt, "nan": NaNInject}
+    faults = []
+    for spec in specs:
+        kind, _, rest = spec.partition(",")
+        if kind not in kinds:
+            raise SystemExit(
+                f"--chaos: unknown kind {kind!r} (want {'|'.join(kinds)})"
+            )
+        kw = {}
+        for item in filter(None, rest.split(",")):
+            k, _, v = item.partition("=")
+            if k == "nodes":
+                if "-" in v:
+                    lo, hi = v.split("-")
+                    kw["nodes"] = tuple(range(int(lo), int(hi) + 1))
+                else:
+                    kw["nodes"] = tuple(int(i) for i in v.split("."))
+            elif k in ("start", "stop", "bit"):
+                kw[k] = int(v)
+            elif k in ("prob", "frac"):
+                kw[k] = float(v)
+            else:
+                raise SystemExit(f"--chaos: unknown key {k!r} in {spec!r}")
+        try:
+            faults.append(kinds[kind](**kw))
+        except TypeError as e:
+            raise SystemExit(f"--chaos: {spec!r}: {e}")
+    return ChaosSchedule(faults=tuple(faults), seed=seed)
 
 
 def main() -> None:
@@ -162,6 +227,10 @@ def main() -> None:
         fused_impl=args.fused_impl,
         flat_planes=args.flat_planes,
         track_consensus=args.track_consensus,
+        finite_guard=args.finite_guard,
+        chaos=_parse_chaos(args.chaos, args.chaos_seed) if args.chaos else None,
+        resilient=args.resilient,
+        resilient_gap=args.resilient_gap,
     )
 
     def build(mesh, n_nodes):
@@ -263,6 +332,16 @@ def main() -> None:
                       f"{'shipped' if shipped else 'held (gate)'}", flush=True)
             engine.tick()
 
+    monitor = None
+    if args.resilient:
+        import numpy as np
+
+        from ..resilience import HealthMonitor, fleet_sender_gaps, with_trust
+
+        monitor = HealthMonitor(n_nodes)
+        applied_trust = monitor.trust.copy()
+    skipped_steps = 0
+
     import time
 
     t0 = time.time()
@@ -274,6 +353,25 @@ def main() -> None:
         if k == 0:
             jax.block_until_ready(metrics["loss"])
             t_warm = time.time()
+        if args.max_skipped_steps and float(metrics["skipped_nonfinite"]) > 0:
+            skipped_steps += 1
+            if skipped_steps > args.max_skipped_steps:
+                raise RuntimeError(
+                    f"aborting at step {step}: the finite guard skipped the "
+                    f"optimizer update on {skipped_steps} steps, exceeding "
+                    f"--max-skipped-steps={args.max_skipped_steps} — the "
+                    "gradients are persistently non-finite (check lr/data/"
+                    "fault injection)"
+                )
+        if monitor is not None and step % args.health_every == 0:
+            trust = monitor.observe(
+                fleet_sender_gaps(channel, state["channel"])
+            )
+            if not np.array_equal(trust, applied_trust):
+                state = dict(state)
+                state["channel"] = with_trust(state["channel"], trust)
+                applied_trust = trust.copy()
+                print(f"health: {monitor.states()} (step {step})", flush=True)
         if serve is not None:
             serve(step, state)
         if step % args.log_every == 0 or step == args.steps - 1:

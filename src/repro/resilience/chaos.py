@@ -1,0 +1,386 @@
+"""Seeded fault injection for gossip transports.
+
+:class:`ChaosChannel` wraps any :class:`~repro.core.gossip.GossipChannel`
+and perturbs each node's *published* payload before handing it to the
+inner transport, so one fault vocabulary drives both the stacked oracle
+(payload leaves carry the ``(n, ...)`` axis) and the real ``ppermute``
+meshes (per-node leaves inside shard_map).  Faults are sender-side: a
+silenced or dropped payload vanishes from every receiver's mix in the
+same round, exactly like a lost wire message.
+
+Faults come from a declarative :class:`ChaosSchedule` — static
+``[start, stop)`` step windows over a node subset, with per-round
+randomness derived from ``fold_in(seed, round)`` (and ``fold_in(node)``
+for per-entry masks), so a schedule replays identically across layouts,
+restarts, and jit boundaries.  :meth:`ChaosSchedule.from_events` maps the
+simulator's membership vocabulary (``sim/events.py``: ``FailStop`` /
+``Rejoin``) onto silence windows, so a sim scenario can be re-injected
+on a live mesh verbatim.
+
+An **empty schedule is bit-exact** with the unwrapped channel: ``apply``
+degenerates to a pure delegate.  A non-empty schedule whose windows are
+closed in a given round is also bitwise transparent — every payload edit
+is a ``jnp.where`` select against the original payload.
+
+Liveness bookkeeping: the channel counts consecutive undelivered rounds
+per sender (``miss``) and folds them into :meth:`version_gaps`, so the
+existing incident-gap plumbing (``node_gaps`` / ``fleet_node_gaps`` /
+the serving gate / :class:`~repro.resilience.health.HealthMonitor`)
+observes chaos-induced staleness with no extra wiring.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.gossip import GossipChannel, Tree, _edge_mask, _register_static
+from ..sim.events import FailStop, Rejoin
+
+__all__ = [
+    "BitCorrupt",
+    "ChaosChannel",
+    "ChaosSchedule",
+    "Drop",
+    "Duplicate",
+    "ExtraDelay",
+    "Fault",
+    "NaNInject",
+    "PeerSilence",
+]
+
+
+# ---------------------------------------------------------------------------
+# Fault vocabulary — frozen (hashable) so schedules ride static jit args
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """Base fault: applies to ``nodes`` (``None`` = all) on optimizer steps
+    in the half-open window ``[start, stop)`` (``stop=None`` = forever)."""
+
+    nodes: tuple[int, ...] | None = None
+    start: int = 0
+    stop: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PeerSilence(Fault):
+    """Deterministic fail-stop: the node's payload never ships while the
+    window is open (receivers see weight-0 contributions and a growing
+    version gap).  This is the wire-level image of ``sim.events.FailStop``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Drop(Fault):
+    """Lossy link: each round, the node's payload is lost with ``prob``."""
+
+    prob: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class Duplicate(Fault):
+    """At-least-once transport: the payload is delivered twice (modeled as a
+    doubled payload — receivers *and* the sender's own self-term double,
+    like a re-applied message in an idempotency-free reducer)."""
+
+    prob: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class ExtraDelay(Fault):
+    """One-round retransmit: the previous round's payload ships instead of
+    the current one (a 1-deep replay buffer lives in the chaos state)."""
+
+    prob: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class BitCorrupt(Fault):
+    """Memory/wire corruption: with ``prob`` per round, flip ``bit`` of a
+    seeded ``frac`` of the payload's f32 entries.  The default bit 30 is
+    the exponent MSB — for normally-scaled values the flip lands in the
+    inf/NaN range, the worst case the payload guards must catch; lower
+    bits model silent numeric corruption the guards *cannot* see."""
+
+    prob: float = 0.05
+    frac: float = 1e-3
+    bit: int = 30
+
+
+@dataclasses.dataclass(frozen=True)
+class NaNInject(Fault):
+    """Poisoned update: a seeded ``frac`` of entries becomes NaN."""
+
+    prob: float = 0.05
+    frac: float = 1e-3
+
+
+_KIND = {
+    PeerSilence: "silence",
+    Drop: "drop",
+    Duplicate: "dup",
+    ExtraDelay: "delay",
+    BitCorrupt: "corrupt",
+    NaNInject: "nan",
+}
+_EVENT_NAMES = tuple(_KIND.values())
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """A seeded, declarative fault script (empty = transparent wrapper)."""
+
+    faults: tuple[Fault, ...] = ()
+    seed: int = 0
+
+    @staticmethod
+    def from_events(
+        events: Sequence, *, seed: int = 0, extra: Sequence[Fault] = ()
+    ) -> "ChaosSchedule":
+        """Map sim membership events onto silence windows: ``FailStop``
+        opens a :class:`PeerSilence` at its ``at_step``; a later ``Rejoin``
+        of the same node closes it.  Non-membership events (``Slowdown``,
+        ``LinkDegrade``) have no wire-level image here and are ignored;
+        ``extra`` appends hand-written faults."""
+        open_at: dict[int, int] = {}
+        out: list[Fault] = []
+        for ev in sorted(events, key=lambda e: e.at_step):
+            if isinstance(ev, FailStop):
+                for i in ev.nodes:
+                    open_at.setdefault(int(i), int(ev.at_step))
+            elif isinstance(ev, Rejoin):
+                for i in ev.nodes:
+                    if int(i) in open_at:
+                        out.append(
+                            PeerSilence(
+                                nodes=(int(i),),
+                                start=open_at.pop(int(i)),
+                                stop=int(ev.at_step),
+                            )
+                        )
+        out.extend(
+            PeerSilence(nodes=(i,), start=s) for i, s in sorted(open_at.items())
+        )
+        return ChaosSchedule(faults=tuple(out) + tuple(extra), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# The wrapper channel
+# ---------------------------------------------------------------------------
+
+
+def _flip_bit(x: jax.Array, bit: int) -> jax.Array:
+    """Flip one bit of each entry's f32 representation (round-trips the
+    leaf dtype through f32 so bf16 payloads corrupt too)."""
+    f = x.astype(jnp.float32)
+    u = jax.lax.bitcast_convert_type(f, jnp.uint32)
+    g = jax.lax.bitcast_convert_type(u ^ jnp.uint32(1 << bit), jnp.float32)
+    return g.astype(x.dtype)
+
+
+@_register_static
+class ChaosChannel(GossipChannel):
+    """Fault-injecting wrapper around any gossip transport.
+
+    State nests the inner channel's state under ``"in"`` and the chaos
+    bookkeeping under ``"x"``: a round counter, per-sender consecutive
+    missed-delivery counts (``miss`` — all derived from ``(seed, round)``
+    alone, hence identical on every node), per-kind fired-event counters,
+    and (only when the schedule has :class:`ExtraDelay` faults) a 1-round
+    replay buffer of the node's previous payload.
+    """
+
+    name = "chaos"
+
+    def __init__(self, inner: GossipChannel, schedule: ChaosSchedule):
+        self.inner = inner
+        self.schedule = schedule
+        self.topology = inner.topology
+        self.compression = inner.compression
+        self._impl = inner._impl
+        self._telemetry = False  # the inner channel owns its telemetry
+        self._compressor = inner._compressor
+        self._stateful_comp = inner._stateful_comp
+        self._stacked_layout = inner._stacked_layout
+        self.node_axes = getattr(inner, "node_axes", None)
+        n = self.topology.n
+        for f in schedule.faults:
+            if type(f) not in _KIND:
+                raise TypeError(f"unknown fault type {type(f).__name__}")
+            if f.nodes is not None:
+                bad = [i for i in f.nodes if not 0 <= int(i) < n]
+                if bad:
+                    raise ValueError(f"fault nodes {bad} out of range for n={n}")
+            if f.stop is not None and f.stop <= f.start:
+                raise ValueError(f"empty fault window [{f.start}, {f.stop})")
+        self._mask = _edge_mask(self.topology)
+        self._liveness = any(
+            isinstance(f, (PeerSilence, Drop)) for f in schedule.faults
+        )
+        self._has_delay = any(
+            isinstance(f, ExtraDelay) for f in schedule.faults
+        )
+
+    # -- protocol delegation ------------------------------------------------
+
+    def init(self, template: Tree) -> dict:
+        n = self.topology.n
+        x: dict = {
+            "round": jnp.int32(0),
+            "miss": jnp.zeros((n,), jnp.int32),
+            "events": {
+                name: jnp.zeros((n,), jnp.int32) for name in _EVENT_NAMES
+            },
+        }
+        if self._has_delay:
+            x["prev"] = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), template
+            )
+        return {"in": self.inner.init(template), "x": x}
+
+    def state_specs(self, param_specs: Tree) -> Tree:
+        x: dict = {
+            "round": P(),
+            "miss": P(None),
+            "events": {name: P(None) for name in _EVENT_NAMES},
+        }
+        if self._has_delay:
+            x["prev"] = param_specs
+        return {"in": self.inner.state_specs(param_specs), "x": x}
+
+    def bytes_per_step(self, payload_bytes, state=None):
+        return self.inner.bytes_per_step(
+            payload_bytes, None if state is None else state["in"]
+        )
+
+    def collectives_per_round(self, payload, state=None):
+        return self.inner.collectives_per_round(
+            payload, None if state is None else state["in"]
+        )
+
+    def has_staleness(self) -> bool:
+        return self._liveness or self.inner.has_staleness()
+
+    def version_gaps(self, state: Tree) -> jax.Array:
+        g = self.inner.version_gaps(state["in"])
+        if self._liveness:
+            chaos_g = state["x"]["miss"][None, :] * jnp.asarray(
+                self._mask, jnp.int32
+            )
+            g = jnp.maximum(g, chaos_g)
+        return g
+
+    # -- fault application --------------------------------------------------
+
+    def _sel(self, vec: jax.Array, leaf: jax.Array) -> jax.Array:
+        """Broadcast a per-node ``(n,)`` vector against a payload leaf:
+        stacked layout prepends to the node axis, distributed layout picks
+        this node's entry by mesh position."""
+        if self._stacked_layout:
+            return vec.reshape(vec.shape + (1,) * (leaf.ndim - 1))
+        return vec[jax.lax.axis_index(self.node_axes)]
+
+    def _entry_mask(self, key: jax.Array, frac: float, leaf: jax.Array):
+        """Seeded per-entry mask, identical across layouts: node ``i`` draws
+        ``bernoulli(fold_in(key, i), frac)`` over its own leaf shape."""
+        if self._stacked_layout:
+            n = self.topology.n
+            return jax.vmap(
+                lambda i: jax.random.bernoulli(
+                    jax.random.fold_in(key, i), frac, leaf.shape[1:]
+                )
+            )(jnp.arange(n))
+        idx = jax.lax.axis_index(self.node_axes)
+        return jax.random.bernoulli(
+            jax.random.fold_in(key, idx), frac, leaf.shape
+        )
+
+    def apply(self, state: Tree, tree: Tree, step) -> tuple[Tree, Tree]:
+        inner_state, x = state["in"], state["x"]
+        if not self.schedule.faults:  # bit-exact passthrough
+            inner_state, out = self.inner.apply(inner_state, tree, step)
+            return {"in": inner_state, "x": x}, out
+
+        n = self.topology.n
+        rnd = x["round"]
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.schedule.seed), rnd
+        )
+        step = jnp.asarray(step, jnp.int32)
+
+        zero = jnp.zeros((n,), bool)
+        bits = {name: zero for name in _EVENT_NAMES}
+        entry_faults: list[tuple[jax.Array, Fault, jax.Array]] = []
+        for fi, f in enumerate(self.schedule.faults):
+            member = np.zeros(n, bool)
+            member[list(f.nodes) if f.nodes is not None else slice(None)] = True
+            act = step >= f.start
+            if f.stop is not None:
+                act = act & (step < f.stop)
+            fire = jnp.asarray(member) & act
+            if not isinstance(f, PeerSilence):
+                kf = jax.random.fold_in(key, fi)
+                fire = fire & jax.random.bernoulli(kf, f.prob, (n,))
+            name = _KIND[type(f)]
+            bits[name] = bits[name] | fire
+            if isinstance(f, (BitCorrupt, NaNInject)):
+                entry_faults.append((fire, f, jax.random.fold_in(key, fi + 1000)))
+
+        kill = bits["silence"] | bits["drop"]
+
+        def fault_leaf(li, leaf, prev_leaf):
+            if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+                return leaf
+            y = leaf
+            if self._has_delay:
+                y = jnp.where(
+                    self._sel(bits["delay"], y), prev_leaf.astype(y.dtype), y
+                )
+            y = jnp.where(
+                self._sel(bits["dup"], y),
+                (2.0 * y.astype(jnp.float32)).astype(y.dtype),
+                y,
+            )
+            for fire, f, kf in entry_faults:
+                m = self._entry_mask(
+                    jax.random.fold_in(kf, li), f.frac, y
+                ) & self._sel(fire, y)
+                if isinstance(f, BitCorrupt):
+                    y = jnp.where(m, _flip_bit(y, f.bit), y)
+                else:
+                    y = jnp.where(m, jnp.full_like(y, jnp.nan), y)
+            return jnp.where(self._sel(kill, y), jnp.zeros_like(y), y)
+
+        leaves, treedef = jax.tree.flatten(tree)
+        prev_leaves = (
+            treedef.flatten_up_to(x["prev"]) if self._has_delay else leaves
+        )
+        faulted = treedef.unflatten(
+            [
+                fault_leaf(li, leaf, prev)
+                for li, (leaf, prev) in enumerate(zip(leaves, prev_leaves))
+            ]
+        )
+
+        inner_state, out = self.inner.apply(inner_state, faulted, step)
+
+        new_x = {
+            "round": rnd + 1,
+            "miss": jnp.where(kill, x["miss"] + 1, 0).astype(jnp.int32),
+            "events": {
+                name: x["events"][name] + bits[name].astype(jnp.int32)
+                for name in _EVENT_NAMES
+            },
+        }
+        if self._has_delay:
+            new_x["prev"] = jax.tree.map(
+                lambda a: a.astype(jnp.float32), tree
+            )
+        return {"in": inner_state, "x": new_x}, out

@@ -1,0 +1,101 @@
+"""Checkpoint-free peer recovery: rejoin from a neighbor's live snapshot.
+
+A node that fail-stopped and comes back does not need a checkpoint file.
+Any healthy neighbor already maintains a consensus-gated plane snapshot
+for serving (:class:`repro.serve.WeightPublisher` — offers are rejected
+while the fleet's version gap exceeds the gate, so whatever the publisher
+holds is certified near-consensus).  Recovery is:
+
+1. clone the donor's snapshot (:meth:`Snapshot.materialize` — the
+   published views are zero-copy into a double buffer that the donor
+   rewrites two publishes later, so the rejoiner must take an owned copy);
+2. :func:`rejoin_node`: write the cloned params into the rejoiner's row
+   and zero its momentum/EF rows (stale optimizer state from before the
+   failure would inject a phantom gradient; the simulator's ``Rejoin``
+   event applies the same semantics);
+3. re-enter the topology via :func:`repro.launch.elastic.plan_recovery`
+   over the still-dead set, and flip the peer back to trusted
+   (:meth:`HealthMonitor.report_alive` + :func:`with_trust`).
+
+Chaos/resilience bookkeeping leaves (``miss`` counters, trust masks) are
+round-replicated and self-healing — they must *not* be row-zeroed; they
+collapse on the first healthy round after the rejoin.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.gossip import Tree
+from ..launch.elastic import RecoveryPlan, plan_recovery
+
+__all__ = ["plan_rejoin", "reset_rows", "rejoin_node"]
+
+
+def reset_rows(tree: Tree, node: int, n: int) -> Tree:
+    """Zero row ``node`` of every leaf with a leading node axis of size
+    ``n``; raise for leaves without one (replicated bookkeeping leaves
+    must be handled by their owner, not row surgery)."""
+
+    def _zero(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] != n:
+            raise ValueError(
+                f"leaf of shape {leaf.shape} has no leading node axis of "
+                f"size {n}; cannot row-reset it"
+            )
+        return leaf.at[node].set(jnp.zeros_like(leaf[node]))
+
+    return jax.tree.map(_zero, tree)
+
+
+def rejoin_node(
+    state: dict,
+    node: int,
+    donor_params: Tree,
+    *,
+    params_key: str = "params",
+    reset: Sequence[str] = ("opt",),
+) -> dict:
+    """Re-admit ``node`` into a stacked training state (host-side).
+
+    ``state`` is any dict of buckets whose leaves carry a leading node
+    axis — the TrainState layout, the stacked-oracle harness layout, or
+    the sim's row-stacked state.  The rejoiner's params row becomes the
+    donor snapshot; its rows in every ``reset`` bucket (momentum, EF) are
+    zeroed.  Channel buckets with replicated bookkeeping leaves should be
+    reset through their own APIs (``with_trust`` / ``report_alive``), not
+    listed here.
+    """
+    params = state[params_key]
+    lead = {leaf.shape[0] for leaf in jax.tree.leaves(params)}
+    if len(lead) != 1:
+        raise ValueError(f"inconsistent leading node axes: {sorted(lead)}")
+    n = lead.pop()
+    if not 0 <= int(node) < n:
+        raise ValueError(f"node {node} out of range for n={n}")
+
+    def _set(leaf, donor):
+        donor = jnp.asarray(np.asarray(donor), leaf.dtype)
+        if donor.shape != leaf.shape[1:]:
+            raise ValueError(
+                f"donor leaf {donor.shape} does not match row {leaf.shape[1:]}"
+            )
+        return leaf.at[node].set(donor)
+
+    out = dict(state)
+    out[params_key] = jax.tree.map(_set, params, donor_params)
+    for key in reset:
+        out[key] = reset_rows(state[key], int(node), n)
+    return out
+
+
+def plan_rejoin(
+    topology_ref, n_nodes: int, still_dead: Sequence[int]
+) -> RecoveryPlan:
+    """Topology re-entry after a rejoin: the recovery plan over whichever
+    peers are *still* dead (none -> the full original topology)."""
+    return plan_recovery(topology_ref, n_nodes, sorted(still_dead))

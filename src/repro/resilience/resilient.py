@@ -1,0 +1,344 @@
+"""Self-healing gossip mixing: redistribute lost weight, guard payloads.
+
+DecentLaM's bias correction divides the momentum coupling by the learning
+rate, so any deficiency in a mixing row (a row sum drifting below 1 when
+a peer's payload goes missing) is amplified by ``1/lr`` into the update —
+the W-stochasticity invariant is *load-bearing*, not cosmetic.
+:class:`ResilientChannel` wraps any transport and keeps every round's
+effective mixing matrix row-stochastic under faults:
+
+* **dead-weight redistribution** — payloads of distrusted peers (the
+  host-set :func:`with_trust` mask, typically driven by a
+  :class:`~repro.resilience.health.HealthMonitor`, optionally tightened
+  on-device by a ``suspect_gap`` bound on the inner channel's version
+  gaps) are masked to zero before the inner mix, and the weight they
+  would have carried is added back to the receiver's *self*-weight.  The
+  effective matrix is exactly :func:`healed_W`: rows stay stochastic for
+  any fault mask, and because every node agrees on the mask and W is
+  symmetric, the surviving block stays **doubly**-stochastic — the
+  invariant DecentLaM's ``1/lr`` correction needs.
+* **payload guards** — a node whose own payload goes non-finite publishes
+  its last finite payload instead (quarantining the poisoned update), and
+  any non-finite entries that still arrive in the mixed output are
+  replaced elementwise by the receiver's own payload.  Both events count
+  into the ``quarantined`` telemetry.
+
+When every peer is trusted and every payload finite, the wrapper is
+**bitwise transparent**: each edit is a ``jnp.where`` select whose
+predicate is then all-true, and the healing term is behind a
+``jnp.all(trust)`` select — no float is ever added to the clean path.
+
+The healing term costs one static scatter over the topology's edge list
+per round (O(edges), no dense W materialization), so it scales to fleet
+topologies.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.gossip import GossipChannel, Tree, _register_static
+from ..core.topology import Topology
+
+__all__ = ["ResilientChannel", "healed_W", "with_trust"]
+
+
+def healed_W(topology: Topology, t: int, alive) -> np.ndarray:
+    """The effective mixing matrix one healed round applies.
+
+    Distrusted columns are zeroed, the lost weight moves to each surviving
+    row's diagonal, and a distrusted row freezes to its own iterate
+    (``e_i`` — the dead node keeps its payload).  Every row sums to 1 for
+    *any* ``alive`` mask; with ``alive`` all-true this is exactly
+    ``topology.W(t)``; for symmetric W the surviving block's columns also
+    sum to 1 (doubly-stochastic over survivors).
+    """
+    W = np.array(topology.W(t), dtype=np.float64)
+    a = np.asarray(alive, bool)
+    n = topology.n
+    if a.shape != (n,):
+        raise ValueError(f"alive mask must be ({n},), got {a.shape}")
+    out = W.copy()
+    for i in range(n):
+        if not a[i]:
+            out[i, :] = 0.0
+            out[i, i] = 1.0
+            continue
+        lost = out[i, ~a].sum()
+        out[i, ~a] = 0.0
+        out[i, i] += lost
+    return out
+
+
+def with_trust(state: Tree, trust) -> Tree:
+    """Return ``state`` with the resilient wrapper's trust mask replaced.
+
+    Accepts the channel state in stacked layout (``trust`` leaf ``(n,)``)
+    or as a TrainState channel bucket (leading node axis, ``(n_nodes, n)``)
+    — the mask broadcasts over any leading replication axes.  Host-side;
+    the mask itself comes from :class:`HealthMonitor.trust` or any other
+    liveness source.
+    """
+    if not (isinstance(state, dict) and "res" in state):
+        raise ValueError(
+            "with_trust expects a ResilientChannel state (a dict with a "
+            f"'res' bucket), got keys {list(state) if isinstance(state, dict) else type(state)}"
+        )
+    res = dict(state["res"])
+    old = res["trust"]
+    mask = jnp.asarray(np.asarray(trust, bool))
+    if mask.shape != old.shape[old.ndim - 1 :]:
+        raise ValueError(
+            f"trust mask shape {mask.shape} does not match state {old.shape}"
+        )
+    res["trust"] = jnp.broadcast_to(mask, old.shape)
+    out = dict(state)
+    out["res"] = res
+    return out
+
+
+@_register_static
+class ResilientChannel(GossipChannel):
+    """Self-healing, payload-guarded wrapper around any gossip transport.
+
+    State nests the inner channel under ``"in"`` and the resilience
+    bookkeeping under ``"res"``: the host-set ``trust`` mask (``(n,)``
+    bool, replicated), a ``quarantined`` event counter (per-node), and —
+    with ``last_good=True`` — the node's last finite payload (f32) plus
+    its validity flag.
+
+    ``suspect_gap`` (optional) additionally distrusts, on-device and
+    without host involvement, any sender whose payload the inner channel
+    reports at a version gap above the bound — the fast path that catches
+    a silent peer in the very round it goes quiet, before the host's
+    health monitor reacts.
+    """
+
+    name = "resilient"
+
+    def __init__(
+        self,
+        inner: GossipChannel,
+        *,
+        suspect_gap: int | None = None,
+        last_good: bool = True,
+        guard: bool = True,
+    ):
+        self.inner = inner
+        self.topology = inner.topology
+        self.compression = inner.compression
+        self._impl = inner._impl
+        self._telemetry = False  # the inner channel owns its telemetry
+        self._compressor = inner._compressor
+        self._stateful_comp = inner._stateful_comp
+        self._stacked_layout = inner._stacked_layout
+        self.node_axes = getattr(inner, "node_axes", None)
+        if suspect_gap is not None and suspect_gap < 0:
+            raise ValueError("suspect_gap must be >= 0")
+        self._suspect_gap = suspect_gap
+        self._last_good = bool(guard and last_good)
+        self._guard = bool(guard)
+        # static per-phase edge tables for the O(edges) healing scatter:
+        # receiver i loses sum_j W[i, j] * (1 - alive[j]) over its in-edges
+        topo = self.topology
+        self._lost_tables = []
+        for t in range(topo.period):
+            src, dst, w = [], [], []
+            for c in topo.edge_classes(t):
+                rw = np.asarray(c.recv_weight, np.float32)
+                for (s, d) in c.pairs:
+                    src.append(int(s))
+                    dst.append(int(d))
+                    w.append(float(rw[int(d)]))
+            self._lost_tables.append(
+                (
+                    np.asarray(src, np.int32),
+                    np.asarray(dst, np.int32),
+                    np.asarray(w, np.float32),
+                )
+            )
+
+    # -- protocol delegation ------------------------------------------------
+
+    def init(self, template: Tree) -> dict:
+        n = self.topology.n
+        stacked = self._stacked_layout
+        res: dict = {
+            "trust": jnp.ones((n,), bool),
+            "quarantined": (
+                jnp.zeros((n,), jnp.int32) if stacked else jnp.int32(0)
+            ),
+        }
+        if self._last_good:
+            res["lg"] = jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32), template
+            )
+            res["lg_ok"] = (
+                jnp.zeros((n,), bool) if stacked else jnp.asarray(False)
+            )
+        return {"in": self.inner.init(template), "res": res}
+
+    def state_specs(self, param_specs: Tree) -> Tree:
+        res: dict = {"trust": P(None), "quarantined": P()}
+        if self._last_good:
+            res["lg"] = param_specs
+            res["lg_ok"] = P()
+        return {"in": self.inner.state_specs(param_specs), "res": res}
+
+    def bytes_per_step(self, payload_bytes, state=None):
+        return self.inner.bytes_per_step(
+            payload_bytes, None if state is None else state["in"]
+        )
+
+    def collectives_per_round(self, payload, state=None):
+        return self.inner.collectives_per_round(
+            payload, None if state is None else state["in"]
+        )
+
+    def has_staleness(self) -> bool:
+        return self.inner.has_staleness()
+
+    def version_gaps(self, state: Tree) -> jax.Array:
+        return self.inner.version_gaps(state["in"])
+
+    # -- healing algebra ----------------------------------------------------
+
+    def _sel(self, vec: jax.Array, leaf: jax.Array) -> jax.Array:
+        """Per-node ``(n,)`` vector -> broadcastable selector for a leaf."""
+        if self._stacked_layout:
+            return vec.reshape(vec.shape + (1,) * (leaf.ndim - 1))
+        return vec[jax.lax.axis_index(self.node_axes)]
+
+    def _node_any(self, flags: list[jax.Array]) -> jax.Array:
+        """OR a list of per-leaf boolean arrays down to per-node events:
+        ``(n,)`` on the stacked layout, a scalar on the distributed one."""
+        if self._stacked_layout:
+            if not flags:
+                return jnp.zeros((self.topology.n,), bool)
+            per = [
+                jnp.any(f.reshape(f.shape[0], -1), axis=1) for f in flags
+            ]
+            return functools.reduce(jnp.logical_or, per)
+        if not flags:
+            return jnp.asarray(False)
+        return functools.reduce(
+            jnp.logical_or, [jnp.any(f) for f in flags]
+        )
+
+    def _lost_weight(self, step, a32: jax.Array) -> jax.Array:
+        """``(n,)`` f32: mixing weight each receiver loses to distrusted
+        senders this phase (identical on every node — ``a32`` is global)."""
+        n = self.topology.n
+
+        def phase(t):
+            src, dst, w = self._lost_tables[t]
+            if len(src) == 0:
+                return jnp.zeros((n,), jnp.float32)
+            return (
+                jnp.zeros((n,), jnp.float32)
+                .at[jnp.asarray(dst)]
+                .add(jnp.asarray(w) * (1.0 - a32[jnp.asarray(src)]))
+            )
+
+        period = self.topology.period
+        if period == 1:
+            return phase(0)
+        return jax.lax.switch(
+            step % period, [functools.partial(phase, t) for t in range(period)]
+        )
+
+    def apply(self, state: Tree, tree: Tree, step) -> tuple[Tree, Tree]:
+        inner_state, res = state["in"], state["res"]
+        trust = res["trust"]
+        quar = res["quarantined"]
+        step = jnp.asarray(step, jnp.int32)
+
+        alive = trust
+        if self._suspect_gap is not None and self.inner.has_staleness():
+            sender_gap = jnp.max(self.inner.version_gaps(inner_state), axis=0)
+            alive = alive & (sender_gap <= jnp.int32(self._suspect_gap))
+
+        leaves, treedef = jax.tree.flatten(tree)
+        inexact = [jnp.issubdtype(x.dtype, jnp.inexact) for x in leaves]
+
+        # ---- sender-side guard: quarantine a poisoned own payload ---------
+        pub_leaves = leaves
+        new_res = dict(res)
+        if self._guard:
+            own_bad = self._node_any(
+                [~jnp.isfinite(x) for x, ix in zip(leaves, inexact) if ix]
+            )
+            if self._last_good:
+                lg_leaves = treedef.flatten_up_to(res["lg"])
+                use_lg = own_bad & res["lg_ok"]
+                pub_leaves = [
+                    jnp.where(self._sel(use_lg, x) if use_lg.ndim else use_lg, l.astype(x.dtype), x)
+                    if ix
+                    else x
+                    for x, l, ix in zip(leaves, lg_leaves, inexact)
+                ]
+                new_res["lg"] = treedef.unflatten(
+                    [
+                        jnp.where(
+                            self._sel(own_bad, l) if own_bad.ndim else own_bad,
+                            l,
+                            x.astype(jnp.float32),
+                        )
+                        if ix
+                        else l
+                        for x, l, ix in zip(leaves, lg_leaves, inexact)
+                    ]
+                )
+                new_res["lg_ok"] = res["lg_ok"] | ~own_bad
+            quar = quar + own_bad.astype(jnp.int32)
+        pub = treedef.unflatten(pub_leaves)
+
+        # ---- mask distrusted senders, mix, heal the lost weight -----------
+        masked = jax.tree.map(
+            lambda x: jnp.where(self._sel(alive, x), x, jnp.zeros_like(x)),
+            pub,
+        )
+        inner_state, mixed = self.inner.apply(inner_state, masked, step)
+
+        clean = jnp.all(alive)
+        lost = self._lost_weight(step, alive.astype(jnp.float32))
+
+        def heal(m, p):
+            if not jnp.issubdtype(m.dtype, jnp.inexact):
+                return m
+            healed = (
+                m.astype(jnp.float32)
+                + self._sel(lost, m) * p.astype(jnp.float32)
+            ).astype(m.dtype)
+            return jnp.where(clean, m, healed)
+
+        out = jax.tree.map(heal, mixed, pub)
+
+        # ---- receiver-side guard: drop non-finite arrivals elementwise ----
+        if self._guard:
+            out_leaves = treedef.flatten_up_to(out)
+            pub_l = treedef.flatten_up_to(pub)
+            rec_bad = self._node_any(
+                [~jnp.isfinite(o) for o, ix in zip(out_leaves, inexact) if ix]
+            )
+            out = treedef.unflatten(
+                [
+                    jnp.where(jnp.isfinite(o), o, p) if ix else o
+                    for o, p, ix in zip(out_leaves, pub_l, inexact)
+                ]
+            )
+            quar = quar + rec_bad.astype(jnp.int32)
+
+        # a distrusted node freezes to its own payload (the e_i row)
+        out = jax.tree.map(
+            lambda o, p: jnp.where(self._sel(alive, o), o, p), out, pub
+        )
+
+        new_res["trust"] = trust
+        new_res["quarantined"] = quar
+        return {"in": inner_state, "res": new_res}, out

@@ -58,6 +58,22 @@ class Snapshot:
     planes: dict[str, np.ndarray]
     params: Tree
 
+    def materialize(self) -> "Snapshot":
+        """An owned copy of this snapshot, detached from the publisher's
+        double buffers.  The zero-copy ``params`` views alias a buffer the
+        writer rewrites two accepted publishes later — fine for a reader
+        that re-fetches :attr:`WeightPublisher.current` at every swap
+        point, NOT fine for a consumer that must hold the weights across
+        publishes (a rejoining trainer cloning a donor's iterate).  The
+        copy's leaves are writable, so downstream row surgery
+        (:func:`repro.resilience.recovery.rejoin_node`) can edit in place.
+        """
+        import jax
+
+        planes = {k: np.array(v) for k, v in self.planes.items()}
+        params = jax.tree.map(np.array, self.params)
+        return dataclasses.replace(self, planes=planes, params=params)
+
 
 class WeightPublisher:
     """Double-buffered, versioned, consensus-gated weight handoff.

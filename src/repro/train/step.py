@@ -80,6 +80,16 @@ class TrainConfig:
     sparse_gossip: bool = False
     sparse_mode: str = "exact"  # exact | delta
     sparse_crossover: float = 0.9  # dirty fraction at which a bucket goes dense
+    # fault tolerance (repro.resilience): skip the optimizer update when the
+    # local grad norm goes non-finite (the skip count surfaces as the
+    # "skipped_nonfinite" metric; launch.train --max-skipped-steps aborts on
+    # a budget), inject a seeded fault schedule on the wire, and/or wrap the
+    # transport in the self-healing ResilientChannel (trust-masked mixing
+    # with W-row renormalization + NaN/Inf payload quarantine)
+    finite_guard: bool = True
+    chaos: Any = None  # ChaosSchedule | None (frozen/hashable)
+    resilient: bool = False
+    resilient_gap: int | None = None  # on-device auto-distrust gap bound
 
     def opt_config(self) -> OptimizerConfig:
         return OptimizerConfig(
@@ -107,6 +117,14 @@ def build_gossip_channel(
         )
     if gossips_per_step is None:
         gossips_per_step = make_optimizer(tcfg.opt_config()).gossips_per_step
+    if tcfg.sparse_gossip and (tcfg.chaos is not None or tcfg.resilient):
+        # the sparse channels ship per-bucket row segments, not whole-leaf
+        # payloads — the resilience wrappers' sender-side masking would
+        # corrupt the row->segment addressing
+        raise ValueError(
+            "chaos/resilient wrappers do not compose with sparse_gossip: "
+            "use dense gossip for fault-injection runs"
+        )
     if tcfg.sparse_gossip:
         if tcfg.gossip_impl != "ppermute":
             raise ValueError(
@@ -137,7 +155,7 @@ def build_gossip_channel(
             calls_per_step=gossips_per_step,
             telemetry=True,
         )
-    return build_channel(
+    channel = build_channel(
         tcfg.gossip_impl,
         topology,
         node_axes,
@@ -147,6 +165,17 @@ def build_gossip_channel(
         calls_per_step=gossips_per_step,
         telemetry=True,
     )
+    # resilience wrappers compose outside-in: chaos injects on the wire,
+    # the resilient layer heals one level up (so it also heals real faults)
+    if tcfg.chaos is not None:
+        from ..resilience import ChaosChannel
+
+        channel = ChaosChannel(channel, tcfg.chaos)
+    if tcfg.resilient:
+        from ..resilience import ResilientChannel
+
+        channel = ResilientChannel(channel, suspect_gap=tcfg.resilient_gap)
+    return channel
 
 
 def batch_specs(cfg: ModelConfig, node_axes) -> Tree:
@@ -334,6 +363,26 @@ def build_train_step(
         grads, loss, metrics = grads_of(params, batch)
         grads = reduce_replicated_grads(grads)
 
+        # finite guard: when the local grad norm goes non-finite, zero the
+        # grads BEFORE the update path (the gossip payload this round stays
+        # finite, so neighbors keep mixing clean iterates) and restore the
+        # optimizer state after it (momentum/EF frozen — a poisoned step
+        # must not leak into the accumulators).  Params still take the
+        # g=0 update, i.e. the node keeps gossiping.  The decision is
+        # per-node; at tp > 1 the psum makes every model shard agree so
+        # the replicated params cannot desync.
+        finite = None
+        if tcfg.finite_guard:
+            gsq = jnp.float32(0.0)
+            for gg in jax.tree.leaves(grads):
+                gsq = gsq + jnp.sum(jnp.square(gg.astype(jnp.float32)))
+            if tp > 1:
+                gsq = jax.lax.psum(gsq, model_axis)
+            finite = jnp.isfinite(gsq)
+            grads = jax.tree.map(
+                lambda gg: jnp.where(finite, gg, jnp.zeros_like(gg)), grads
+            )
+
         # row-info hit stacks are mask material, not scalar metrics: keep
         # them out of the pmean loop below and feed them to the tracker
         row_info = metrics.pop("_row_info", None)
@@ -397,10 +446,21 @@ def build_train_step(
                 comp_state=comp_state,
             )
 
+        if finite is not None:
+            new_opt = jax.tree.map(
+                lambda nw, old: jnp.where(finite, nw, old), new_opt, opt_state
+            )
+
         # replicated scalar metrics
         out_metrics = {
             "loss": jax.lax.pmean(loss, node_axes),
             "lr": lr,
+            # fleet-wide count of nodes whose update was skipped by the
+            # finite guard this step (0.0 when the guard is off)
+            "skipped_nonfinite": jax.lax.psum(
+                jnp.float32(0.0) if finite is None else jnp.float32(~finite),
+                node_axes,
+            ),
             # fleet-worst consensus gap this round (0 on undelayed
             # channels) — the signal the serving publisher gates on; the
             # per-node vector is recovered host-side from the channel
@@ -428,7 +488,8 @@ def build_train_step(
     )
     bspecs = batch_specs(cfg, node_axes)
     mspecs = {"loss": P(), "lr": P(), "gossip_gap": P(), "xent": P(),
-              "moe_load_balance": P(), "moe_router_z": P()}
+              "moe_load_balance": P(), "moe_router_z": P(),
+              "skipped_nonfinite": P()}
     if tcfg.track_consensus:
         mspecs["consensus_sq"] = P()
 

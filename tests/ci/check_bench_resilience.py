@@ -1,0 +1,121 @@
+"""CI gate for BENCH_resilience.json (the fault-tolerant runtime benchmark).
+
+Usage::
+
+    python tests/ci/check_bench_resilience.py BENCH_resilience.json
+
+Validates the machine-readable invariants the resilience subsystem
+promises (ISSUE 10 acceptance criteria):
+
+* **empty-schedule transparency**: ``ResilientChannel(ChaosChannel(ch,
+  empty))`` was bit-exact with the bare stacked channel for *every*
+  algorithm in the registry (params and optimizer state) — the wrappers
+  may not cost a single ulp when chaos is off;
+* **the chaos soak converged**: decentlam-sa under seeded drop +
+  NaN-inject + peer churn finished finite everywhere (zero quarantine
+  leaks into momentum), with its final bias a small fraction of the
+  zero-initializer bias (the recorded ``bias_fraction_bound``) — and the
+  bound itself stayed honest (<= 0.1);
+* **the poison was actually quarantined**: the NaN-inject fault fired
+  (nonzero event count) and the quarantine counter is nonzero — a soak
+  that passed because the fault never fired is a broken benchmark, not a
+  robust runtime;
+* **health + recovery worked end-to-end**: the silenced peer was declared
+  dead by the gap-driven monitor, its checkpoint-free rejoin shipped
+  through the consensus-gated publisher (``donor_published``), it ends
+  the run alive, and its distance to the fleet mean shrank by at least
+  5x after the rejoin.
+
+Exit code 1 on any violation.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    with open(sys.argv[1]) as f:
+        bench = json.load(f)
+
+    errors: list[str] = []
+
+    bitexact = bench.get("empty_schedule_bitexact", {})
+    if not bitexact:
+        errors.append("missing empty_schedule_bitexact block")
+    for algorithm, ok in bitexact.items():
+        if not ok:
+            errors.append(
+                f"wrapped channel not bit-exact for {algorithm!r} with an "
+                "empty chaos schedule"
+            )
+
+    soak = bench.get("chaos_soak")
+    if soak is None:
+        errors.append("missing chaos_soak block")
+        soak = {}
+
+    if not soak.get("finite", False):
+        errors.append("chaos soak produced non-finite params/momentum "
+                      "(quarantine leaked)")
+    bound = soak.get("bias_fraction_bound")
+    if bound is None or bound > 0.1:
+        errors.append(f"bias_fraction_bound missing or loosened: {bound!r}")
+    frac = soak.get("bias_fraction_of_init")
+    if frac is None or bound is None or frac > bound:
+        errors.append(
+            f"chaos soak did not converge: bias_fraction_of_init={frac!r} "
+            f"(bound {bound!r})"
+        )
+    if not soak.get("converged", False):
+        errors.append("chaos_soak.converged is false")
+
+    events = soak.get("events", {})
+    if events.get("nan", 0) <= 0:
+        errors.append("NaN-inject fault never fired — the soak tested nothing")
+    if events.get("drop", 0) <= 0:
+        errors.append("drop fault never fired")
+    if events.get("silence", 0) <= 0:
+        errors.append("peer-silence fault never fired")
+    if soak.get("quarantined_total", 0) <= 0:
+        errors.append("poisoned payloads were never quarantined")
+
+    health = soak.get("health", {})
+    if not health.get("silent_peer_declared_dead", False):
+        errors.append("gap-driven monitor never declared the silent peer dead")
+    if health.get("silent_peer_final_state") != "alive":
+        errors.append(
+            "rejoined peer did not end the run alive: "
+            f"{health.get('silent_peer_final_state')!r}"
+        )
+
+    rec = soak.get("recovery", {})
+    if not rec.get("donor_published", False):
+        errors.append("donor snapshot was rejected by the consensus gate")
+    before, after = rec.get("rejoin_gap_before"), rec.get("rejoin_gap_after")
+    if before is None or after is None or not after * 5 <= before:
+        errors.append(
+            "checkpoint-free rejoin did not re-enter consensus: fleet-mean "
+            f"gap {before!r} -> {after!r} (need >= 5x shrink)"
+        )
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}")
+        return 1
+    print(
+        f"OK: {len(bitexact)} algorithms bit-exact under empty chaos; soak "
+        f"bias {soak.get('bias_chaos'):.2e} "
+        f"({soak.get('bias_fraction_of_init'):.2e} of init, bound {bound}); "
+        f"quarantined {soak.get('quarantined_total')} payloads; rejoin gap "
+        f"{before:.2f} -> {after:.2f}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

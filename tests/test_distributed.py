@@ -90,6 +90,25 @@ def test_delayed_ppermute_channel():
     assert f"delayed-ppermute: OK ({3 + len(ALGORITHMS)} cases)" in out
 
 
+def test_resilience_fault_tolerant_runtime():
+    """The fault-tolerant gossip runtime on a live mesh: (A) a mesh that
+    loses nodes 0-1 and rescales per plan_recovery tracks the simulator's
+    failstop_quarter trajectory, (B) ResilientChannel(ChaosChannel(ch,
+    empty-schedule)) is bit-exact with the bare channel for all 11
+    algorithms, (C) a seeded drop + NaN-inject + churn soak stays finite,
+    quarantines the poison, declares/resurrects the silent peer through
+    the HealthMonitor, rejoins it checkpoint-free from a WeightPublisher
+    snapshot, and converges with bounded bias."""
+    out = _run("resilience_distributed.py")
+    assert "A dsgd: OK" in out and "A dmsgd: OK" in out
+    assert "A decentlam-sa: OK" in out
+    from repro.core.optimizers import ALGORITHMS
+
+    assert out.count("(bit-exact)") == len(ALGORITHMS)
+    assert "C soak: OK" in out
+    assert f"resilience-distributed: OK ({3 + len(ALGORITHMS) + 1} cases)" in out
+
+
 def test_distributed_serve_matches_oracle():
     out = _run("distributed_serve.py")
     assert out.count("OK") == 4

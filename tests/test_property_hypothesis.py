@@ -460,3 +460,91 @@ def test_sparse_channel_random_rowsets_match_dense(name, delay, seed, all_dirty)
         np.testing.assert_array_equal(
             np.asarray(xs)[:, never], np.asarray(x0)[:, never]
         )
+
+
+# ---------------------------------------------------------------------------
+# Resilient mixing: W-stochasticity under arbitrary fault masks
+# ---------------------------------------------------------------------------
+
+
+@SET
+@given(
+    st.sampled_from(["ring", "torus", "exp", "one-peer-exp", "full"]),
+    st.lists(st.booleans(), min_size=8, max_size=8),
+    st.integers(0, 7),
+)
+def test_healed_w_properties_any_fault_mask(name, alive, t):
+    """The self-healing invariant (ISSUE 10): for ANY fault mask the
+    effective mixing matrix stays row-stochastic with non-negative entries,
+    reduces exactly to the static W when no faults fire, freezes dead rows
+    to e_i with their columns zeroed, and — W being symmetric — keeps the
+    surviving block doubly stochastic (DecentLaM's 1/lr bias correction
+    divides by the row sum, so any deficiency would be amplified into the
+    update)."""
+    from repro.resilience import healed_W
+
+    topo = build_topology(name, 8)
+    a = np.asarray(alive, bool)
+    t = t % topo.period
+    W = np.asarray(topo.W(t), np.float64)
+    Wh = healed_W(topo, t, a)
+    np.testing.assert_allclose(Wh.sum(axis=1), 1.0, atol=1e-12)
+    assert (Wh >= -1e-12).all()
+    if a.all():
+        np.testing.assert_array_equal(Wh, W)
+    for i in np.flatnonzero(~a):
+        assert Wh[i, i] == 1.0 and np.count_nonzero(Wh[i]) == 1
+        assert np.count_nonzero(np.delete(Wh[:, i], i)) == 0
+    # symmetric W => doubly stochastic over the survivor block
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    if a.any():
+        np.testing.assert_allclose(Wh.sum(axis=0)[a], 1.0, atol=1e-12)
+
+
+@SET
+@given(
+    st.sampled_from(["ring", "exp", "one-peer-exp"]),
+    st.lists(st.booleans(), min_size=8, max_size=8),
+    st.integers(0, 2**31 - 1),
+)
+def test_resilient_channel_equals_healed_w(name, alive, seed):
+    """One healed round through the live channel is exactly ``healed_W @ x``
+    for any trust mask, and with an all-true mask it is bit-exact with the
+    unwrapped channel (no float is ever added on the clean path)."""
+    from repro.resilience import ResilientChannel, healed_W, with_trust
+
+    topo = build_topology(name, 8)
+    a = np.asarray(alive, bool)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    res = ResilientChannel(StackedChannel(topo))
+    st_r = with_trust(res.init(x), a)
+    _, y = res.apply(st_r, x, jnp.int32(0))
+    np.testing.assert_allclose(
+        np.asarray(y), healed_W(topo, 0, a) @ np.asarray(x, np.float64),
+        atol=1e-5,
+    )
+    if a.all():
+        _, y_plain = StackedChannel(topo).apply({}, x, jnp.int32(0))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_plain))
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+def test_chaos_empty_schedule_bitexact_any_trajectory(seed, steps):
+    """Property form of the PR gate: a ChaosChannel with an EMPTY schedule
+    is bit-exact with the unwrapped channel over arbitrary random
+    trajectories (the wrapper must be a pure delegate, not merely close)."""
+    from repro.resilience import ChaosChannel, ChaosSchedule
+
+    topo = build_topology("exp", 8)
+    plain = StackedChannel(topo)
+    chaos = ChaosChannel(StackedChannel(topo), ChaosSchedule())
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    sp, sc = plain.init(x), chaos.init(x)
+    for t in range(steps):
+        sp, yp = plain.apply(sp, x, jnp.int32(t))
+        sc, yc = chaos.apply(sc, x, jnp.int32(t))
+        np.testing.assert_array_equal(np.asarray(yp), np.asarray(yc))
+        x = yp + jnp.asarray(rng.standard_normal(yp.shape), jnp.float32) * 0.1

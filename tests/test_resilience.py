@@ -1,0 +1,486 @@
+"""Fault-tolerant gossip runtime: chaos injection, health tracking,
+self-healing mixing, checkpoint-free recovery (stacked-oracle harness;
+the real-mesh cross-checks live in tests/scripts/resilience_distributed.py).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StackedChannel, build_topology
+from repro.core.gossip import fleet_node_gaps
+from repro.resilience import (
+    BitCorrupt,
+    ChaosChannel,
+    ChaosSchedule,
+    Drop,
+    Duplicate,
+    ExtraDelay,
+    HealthConfig,
+    HealthMonitor,
+    NaNInject,
+    PeerSilence,
+    ResilientChannel,
+    fleet_sender_gaps,
+    healed_W,
+    rejoin_node,
+    reset_rows,
+    with_trust,
+)
+from repro.sim.events import FailStop, Rejoin
+
+
+def _x(n=8, d=5, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((n, d)), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# ChaosChannel
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_empty_schedule_is_bit_exact():
+    topo = build_topology("ring", 8)
+    plain, chaos = StackedChannel(topo), ChaosChannel(
+        StackedChannel(topo), ChaosSchedule()
+    )
+    x = _x()
+    sp, cp = plain.init(x), chaos.init(x)
+    for k in range(5):
+        sp, yp = plain.apply(sp, x, jnp.int32(k))
+        cp, yc = chaos.apply(cp, x, jnp.int32(k))
+        assert np.array_equal(np.asarray(yp), np.asarray(yc))
+        x = yp + 0.1
+
+
+def test_chaos_closed_windows_are_bitwise_transparent_under_jit():
+    topo = build_topology("ring", 8)
+    sched = ChaosSchedule(
+        faults=(
+            PeerSilence(nodes=(0, 1), start=100),
+            BitCorrupt(nodes=(2,), start=100, prob=1.0, frac=1.0),
+        )
+    )
+    plain, chaos = StackedChannel(topo), ChaosChannel(StackedChannel(topo), sched)
+    x = _x()
+    apply_c = jax.jit(chaos.apply)
+    sp, cp = plain.init(x), chaos.init(x)
+    for k in range(4):  # all windows closed: step < 100
+        sp, yp = plain.apply(sp, x, jnp.int32(k))
+        cp, yc = apply_c(cp, x, jnp.int32(k))
+        assert np.array_equal(np.asarray(yp), np.asarray(yc))
+    assert int(sum(np.asarray(v).sum() for v in cp["x"]["events"].values())) == 0
+
+
+def test_chaos_silence_zeroes_payload_and_counts_misses():
+    topo = build_topology("ring", 4)
+    chaos = ChaosChannel(
+        StackedChannel(topo), ChaosSchedule(faults=(PeerSilence(nodes=(1,)),))
+    )
+    x = _x(4)
+    st = chaos.init(x)
+    W = np.asarray(topo.W(0))
+    st, y = chaos.apply(st, x, jnp.int32(0))
+    # receivers mix a zeroed row 1 — exactly W @ x with x[1] := 0
+    xz = np.asarray(x).copy()
+    xz[1] = 0.0
+    np.testing.assert_allclose(np.asarray(y), W @ xz, atol=1e-6)
+    assert np.asarray(st["x"]["miss"]).tolist() == [0, 1, 0, 0]
+    st, _ = chaos.apply(st, x, jnp.int32(1))
+    assert np.asarray(st["x"]["miss"]).tolist() == [0, 2, 0, 0]
+    # the miss counter feeds the incident gap plumbing over real edges only
+    gaps = np.asarray(chaos.version_gaps(st))
+    assert gaps[0, 1] == 2 and gaps[2, 1] == 2  # ring neighbors of 1
+    assert gaps[1, 1] == 0 and gaps[3, 1] == 0
+    assert chaos.has_staleness()
+
+
+def test_chaos_window_closes_and_miss_resets():
+    topo = build_topology("ring", 4)
+    chaos = ChaosChannel(
+        StackedChannel(topo),
+        ChaosSchedule(faults=(PeerSilence(nodes=(2,), start=1, stop=3),)),
+    )
+    x = _x(4)
+    st = chaos.init(x)
+    for k in range(5):
+        st, _ = chaos.apply(st, x, jnp.int32(k))
+        miss = int(np.asarray(st["x"]["miss"])[2])
+        assert miss == (k if 1 <= k < 3 else 0)
+
+
+def test_chaos_duplicate_doubles_payload():
+    topo = build_topology("ring", 4)
+    chaos = ChaosChannel(
+        StackedChannel(topo),
+        ChaosSchedule(faults=(Duplicate(nodes=(0,), prob=1.0),)),
+    )
+    x = _x(4)
+    st, y = chaos.apply(chaos.init(x), x, jnp.int32(0))
+    xd = np.asarray(x).copy()
+    xd[0] *= 2.0
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(topo.W(0)) @ xd, atol=1e-6
+    )
+
+
+def test_chaos_extra_delay_replays_previous_round():
+    topo = build_topology("ring", 4)
+    chaos = ChaosChannel(
+        StackedChannel(topo),
+        ChaosSchedule(faults=(ExtraDelay(nodes=(3,), prob=1.0),)),
+    )
+    x0, x1 = _x(4, seed=1), _x(4, seed=2)
+    st = chaos.init(x0)
+    st, _ = chaos.apply(st, x0, jnp.int32(0))  # round 0: prev buffer = 0
+    st, y = chaos.apply(st, x1, jnp.int32(1))  # round 1: node 3 replays x0
+    xr = np.asarray(x1).copy()
+    xr[3] = np.asarray(x0)[3]
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(topo.W(1)) @ xr, atol=1e-6
+    )
+
+
+def test_chaos_corrupt_and_nan_hit_seeded_entries():
+    topo = build_topology("ring", 8)
+    x = _x(8, d=64)
+    for fault in (
+        BitCorrupt(nodes=(2,), prob=1.0, frac=0.5),
+        NaNInject(nodes=(2,), prob=1.0, frac=0.5),
+    ):
+        chaos = ChaosChannel(StackedChannel(topo), ChaosSchedule(faults=(fault,)))
+        st, y = chaos.apply(chaos.init(x), x, jnp.int32(0))
+        assert not np.isfinite(np.asarray(y)).all()
+        assert int(np.asarray(st["x"]["events"][  # event telemetry fired
+            "corrupt" if isinstance(fault, BitCorrupt) else "nan"
+        ])[2]) == 1
+        # replays are deterministic: same schedule, same state, same output
+        st2, y2 = chaos.apply(chaos.init(x), x, jnp.int32(0))
+        assert np.array_equal(
+            np.asarray(y), np.asarray(y2), equal_nan=True
+        )
+
+
+def test_chaos_schedule_from_events_maps_failstop_rejoin():
+    sched = ChaosSchedule.from_events(
+        [
+            FailStop(at_step=10, nodes=(0, 1)),
+            Rejoin(at_step=20, nodes=(1,)),
+        ],
+        seed=3,
+    )
+    assert sched.seed == 3
+    by_node = {f.nodes: f for f in sched.faults}
+    assert by_node[(1,)].start == 10 and by_node[(1,)].stop == 20
+    assert by_node[(0,)].start == 10 and by_node[(0,)].stop is None
+
+
+def test_chaos_schedule_validation():
+    topo = build_topology("ring", 4)
+    with pytest.raises(ValueError, match="out of range"):
+        ChaosChannel(
+            StackedChannel(topo), ChaosSchedule(faults=(Drop(nodes=(9,)),))
+        )
+    with pytest.raises(ValueError, match="empty fault window"):
+        ChaosChannel(
+            StackedChannel(topo),
+            ChaosSchedule(faults=(Drop(start=5, stop=5),)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor
+# ---------------------------------------------------------------------------
+
+
+def test_health_monitor_suspect_then_dead_with_backoff():
+    cfg = HealthConfig(suspect_after=1, dead_after=2, backoff=2.0, max_retries=1)
+    mon = HealthMonitor(3, cfg)
+    assert mon.trust.all()
+    gap = np.array([0, 3, 0])
+    # patience(0)=2 suspect rounds, then one retry window of patience(1)=4
+    for k in range(6):
+        mon.observe(gap)
+        assert mon.states()[1] == ("dead" if k >= 5 else "suspect")
+        assert not mon.trust[1]  # suspects are distrusted too
+    assert mon.dead() == (1,)
+    # DEAD is terminal for the gap path: clean gaps do not resurrect
+    mon.observe(np.zeros(3, int))
+    assert mon.states()[1] == "dead"
+    mon.report_alive([1])
+    assert mon.states()[1] == "alive" and mon.trust.all()
+
+
+def test_health_monitor_recovers_transient_straggler():
+    mon = HealthMonitor(2, HealthConfig(suspect_after=2, recover_after=2))
+    mon.observe([0, 2])
+    assert mon.states() == ["alive", "suspect"]
+    mon.observe([0, 0])
+    assert mon.states() == ["alive", "suspect"]  # 1 clean round < recover_after
+    mon.observe([0, 1])  # gap below suspect_after counts as clean
+    assert mon.states() == ["alive", "alive"]
+
+
+def test_health_monitor_report_dead_short_circuits():
+    mon = HealthMonitor(4)
+    mon.report_dead([0, 2])
+    assert mon.dead() == (0, 2)
+    assert mon.trust.tolist() == [False, True, False, True]
+
+
+def test_health_config_validation():
+    with pytest.raises(ValueError):
+        HealthConfig(suspect_after=0)
+    with pytest.raises(ValueError):
+        HealthConfig(backoff=0.5)
+    assert HealthConfig(dead_after=3, backoff=2.0).patience(1) == 6
+
+
+def test_fleet_sender_gaps_attribute_staleness_to_the_sender():
+    topo = build_topology("ring", 8)
+    chaos = ChaosChannel(
+        StackedChannel(topo), ChaosSchedule(faults=(PeerSilence(nodes=(3,)),))
+    )
+    x = _x()
+    st = chaos.init(x)
+    for k in range(3):
+        st, _ = chaos.apply(st, x, jnp.int32(k))
+    sender = fleet_sender_gaps(chaos, st)
+    assert sender.tolist() == [0, 0, 0, 3, 0, 0, 0, 0]
+    # the incident gap (serving gate signal) flags the neighbors too
+    incident = fleet_node_gaps(chaos, st)
+    assert (incident > 0).tolist() == [
+        False, False, True, True, True, False, False, False
+    ]
+    # channels without staleness report all-zero without touching state
+    plain = StackedChannel(topo)
+    assert not plain.has_staleness()
+    assert fleet_sender_gaps(plain, plain.init(x)).tolist() == [0] * 8
+
+
+# ---------------------------------------------------------------------------
+# ResilientChannel + healed_W
+# ---------------------------------------------------------------------------
+
+
+def test_healed_w_row_stochastic_for_any_mask():
+    rng = np.random.default_rng(0)
+    for name in ("ring", "exp", "one-peer-exp"):
+        topo = build_topology(name, 8)
+        for _ in range(10):
+            alive = rng.random(8) > 0.4
+            for t in range(topo.period):
+                Wh = healed_W(topo, t, alive)
+                np.testing.assert_allclose(Wh.sum(axis=1), 1.0, atol=1e-12)
+                # dead rows freeze to e_i, dead columns carry no weight
+                for i in np.flatnonzero(~alive):
+                    assert Wh[i, i] == 1.0 and np.count_nonzero(Wh[i]) == 1
+                    assert np.count_nonzero(np.delete(Wh[:, i], i)) == 0
+
+
+def test_healed_w_reduces_to_w_and_stays_doubly_stochastic():
+    topo = build_topology("ring", 8)
+    np.testing.assert_array_equal(
+        healed_W(topo, 0, np.ones(8, bool)), np.asarray(topo.W(0), np.float64)
+    )
+    # symmetric W: surviving block stays doubly stochastic (the invariant
+    # DecentLaM's 1/lr bias correction needs)
+    alive = np.array([1, 1, 0, 1, 1, 1, 0, 1], bool)
+    Wh = healed_W(topo, 0, alive)
+    np.testing.assert_allclose(Wh[:, alive].sum(axis=0)[: alive.sum()].sum(),
+                               alive.sum(), atol=1e-12)
+    np.testing.assert_allclose(Wh.sum(axis=0)[alive], 1.0, atol=1e-12)
+
+
+def test_resilient_clean_path_is_bit_exact():
+    topo = build_topology("exp", 8)
+    plain = StackedChannel(topo)
+    res = ResilientChannel(StackedChannel(topo))
+    x = _x()
+    sp, sr = plain.init(x), res.init(x)
+    for k in range(4):
+        sp, yp = plain.apply(sp, x, jnp.int32(k))
+        sr, yr = res.apply(sr, x, jnp.int32(k))
+        assert np.array_equal(np.asarray(yp), np.asarray(yr))
+        x = yp * 0.9
+    assert int(np.asarray(sr["res"]["quarantined"]).sum()) == 0
+
+
+@pytest.mark.parametrize("name", ["ring", "one-peer-exp"])
+def test_resilient_distrust_applies_healed_w(name):
+    topo = build_topology(name, 8)
+    res = ResilientChannel(StackedChannel(topo))
+    x = _x()
+    alive = np.array([1, 1, 0, 1, 1, 1, 1, 0], bool)
+    st = with_trust(res.init(x), alive)
+    for k in range(topo.period):
+        st, y = res.apply(st, x, jnp.int32(k))
+        np.testing.assert_allclose(
+            np.asarray(y),
+            healed_W(topo, k, alive) @ np.asarray(x, np.float64),
+            atol=1e-5,
+        )
+        x = jnp.asarray(np.asarray(y), jnp.float32)
+
+
+def test_resilient_guards_quarantine_nan_payload():
+    topo = build_topology("ring", 4)
+    res = ResilientChannel(StackedChannel(topo))
+    x = _x(4)
+    st = res.init(x)
+    st, _ = res.apply(st, x, jnp.int32(0))  # clean round seeds last-good
+    poisoned = np.asarray(x).copy()
+    poisoned[1, 2] = np.nan
+    st, y = res.apply(st, jnp.asarray(poisoned), jnp.int32(1))
+    # the sender guard republished node 1's last finite payload: every
+    # receiver (node 1 included) sees a finite mix
+    assert np.isfinite(np.asarray(y)).all()
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(topo.W(1)) @ np.asarray(x), atol=1e-6
+    )
+    assert np.asarray(st["res"]["quarantined"]).tolist() == [0, 1, 0, 0]
+
+
+def test_resilient_receiver_guard_without_last_good():
+    """First-round poison (no last-good yet): the receiver guard still keeps
+    *other* nodes finite by falling back to their own payloads."""
+    topo = build_topology("ring", 4)
+    res = ResilientChannel(StackedChannel(topo))
+    x = np.asarray(_x(4)).copy()
+    x[1, :] = np.nan
+    st, y = res.apply(res.init(jnp.asarray(x)), jnp.asarray(x), jnp.int32(0))
+    y = np.asarray(y)
+    assert np.isfinite(y[[0, 2, 3]]).all()
+    assert int(np.asarray(st["res"]["quarantined"]).sum()) > 0
+
+
+def test_with_trust_validates_and_broadcasts():
+    topo = build_topology("ring", 4)
+    res = ResilientChannel(StackedChannel(topo))
+    st = res.init(_x(4))
+    with pytest.raises(ValueError, match="ResilientChannel state"):
+        with_trust({"nope": 1}, np.ones(4, bool))
+    with pytest.raises(ValueError, match="shape"):
+        with_trust(st, np.ones(5, bool))
+    # TrainState-bucket layout: leading node axis broadcasts
+    bucket = jax.tree.map(lambda a: jnp.stack([a, a]), st)
+    out = with_trust(bucket, np.array([1, 0, 1, 1], bool))
+    assert np.asarray(out["res"]["trust"]).shape == (2, 4)
+    assert not np.asarray(out["res"]["trust"])[:, 1].any()
+
+
+def test_resilient_composes_over_chaos():
+    """Silence injected one layer down is healed one layer up: with the
+    failed peer distrusted, survivors keep row-stochastic mixing."""
+    topo = build_topology("ring", 8)
+    chaos = ChaosChannel(
+        StackedChannel(topo), ChaosSchedule(faults=(PeerSilence(nodes=(5,)),))
+    )
+    res = ResilientChannel(chaos)
+    x = _x()
+    alive = np.ones(8, bool)
+    alive[5] = False
+    st = with_trust(res.init(x), alive)
+    st, y = res.apply(st, x, jnp.int32(0))
+    np.testing.assert_allclose(
+        np.asarray(y), healed_W(topo, 0, alive) @ np.asarray(x, np.float64),
+        atol=1e-5,
+    )
+    # consensus over survivors is preserved (rows stay stochastic): the
+    # survivor mean is exactly the healed_W-weighted survivor mean drift
+    assert np.isfinite(np.asarray(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-free recovery
+# ---------------------------------------------------------------------------
+
+
+def test_reset_rows_and_rejoin_node():
+    n, d = 4, 3
+    rng = np.random.default_rng(0)
+    state = {
+        "params": {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)},
+        "opt": {"m": {"w": jnp.asarray(rng.standard_normal((n, d)), jnp.float32)}},
+    }
+    donor = {"w": np.full(d, 7.0, np.float32)}
+    out = rejoin_node(state, 2, donor)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"])[2], 7.0)
+    np.testing.assert_array_equal(np.asarray(out["opt"]["m"]["w"])[2], 0.0)
+    # untouched rows are bit-identical
+    for i in (0, 1, 3):
+        np.testing.assert_array_equal(
+            np.asarray(out["params"]["w"])[i], np.asarray(state["params"]["w"])[i]
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out["opt"]["m"]["w"])[i], np.asarray(state["opt"]["m"]["w"])[i]
+        )
+    with pytest.raises(ValueError, match="no leading node axis"):
+        reset_rows({"bad": jnp.zeros((n + 1, d))}, 0, n)
+    with pytest.raises(ValueError, match="out of range"):
+        rejoin_node(state, 9, donor)
+    with pytest.raises(ValueError, match="does not match row"):
+        rejoin_node(state, 1, {"w": np.zeros(d + 1, np.float32)})
+
+
+def test_snapshot_materialize_detaches_from_double_buffer():
+    from repro.core.planes import PlaneLayout
+    from repro.serve import WeightPublisher
+
+    template = {"w": np.zeros((4, 6), np.float32), "b": np.zeros(6, np.float32)}
+    layout = PlaneLayout.build(template)
+    pub = WeightPublisher(layout, gap_threshold=0)
+    rng = np.random.default_rng(1)
+    t1 = jax.tree.map(lambda a: rng.standard_normal(a.shape).astype(a.dtype),
+                      template)
+    assert pub.offer(t1, version=1, gap=0)
+    held = pub.current.materialize()
+    # two more accepted publishes rewrite the buffer the views alias
+    for v in (2, 3):
+        t = jax.tree.map(
+            lambda a: rng.standard_normal(a.shape).astype(a.dtype), template
+        )
+        assert pub.offer(t, version=v, gap=0)
+    for k in template:
+        np.testing.assert_array_equal(
+            np.asarray(held.params[k]), np.asarray(t1[k])
+        )
+    held.params["w"][0, 0] = 123.0  # owned copies are writable
+
+
+def test_rejoin_via_publisher_snapshot_round_trip():
+    """The checkpoint-free path end to end on the stacked oracle: donor
+    publishes through the consensus gate, rejoiner clones + row-surgeries,
+    then gossip pulls it back toward the survivors' consensus."""
+    from repro.core.planes import PlaneLayout
+    from repro.resilience import plan_rejoin
+    from repro.serve import WeightPublisher
+
+    n, d = 8, 6
+    topo = build_topology("ring", n)
+    ch = StackedChannel(topo)
+    x = _x(n, d, seed=4)
+    template = {"w": np.zeros(d, np.float32)}
+    pub = WeightPublisher(PlaneLayout.build(template), gap_threshold=0)
+    assert pub.offer({"w": np.asarray(x)[0]}, version=1, gap=0)
+
+    state = {
+        "params": {"w": x},
+        "opt": {"m": jnp.ones((n, d), jnp.float32)},
+    }
+    snap = pub.current.materialize()
+    state = rejoin_node(state, 3, snap.params)
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["w"])[3], np.asarray(x)[0]
+    )
+    np.testing.assert_array_equal(np.asarray(state["opt"]["m"])[3], 0.0)
+    plan = plan_rejoin("ring", n, still_dead=[])
+    assert plan.mode == "reroute" and plan.n_nodes == n
+    y = state["params"]["w"]
+    for k in range(40):
+        _, y = ch.apply({}, y, jnp.int32(k))
+    ya = np.asarray(y)
+    assert np.abs(ya - ya.mean(axis=0)).max() < 1e-3

@@ -232,5 +232,6 @@ def test_fleet_node_gaps_staleness_free_and_unstacked():
         _depth = ch._depth
         _stacked_layout = False
         version_gaps = ch.version_gaps
+        has_staleness = ch.has_staleness
 
     np.testing.assert_array_equal(fleet_node_gaps(_Unstacked(), stacked_state), want)

@@ -342,9 +342,9 @@ def test_failstop_quarter_rescales(problem8):
                  scenario="failstop_quarter", metric_fn=metric,
                  restrict=_restrict_for(problem8))
     assert r.recovery_mode == "rescale"
-    assert r.n_nodes == 4 and r.n_start == 8
-    assert r.kept == (2, 3, 4, 5)  # first pow2-sized batch of survivors
-    assert jax.tree.leaves(r.params)[0].shape[0] == 4
+    assert r.n_nodes == 6 and r.n_start == 8
+    assert r.kept == (2, 3, 4, 5, 6, 7)  # every survivor: ring builds at any n
+    assert jax.tree.leaves(r.params)[0].shape[0] == 6
     assert (r.steps >= 15).all()
     assert np.isfinite(r.final_metric)
     # deterministic end to end
